@@ -1,0 +1,65 @@
+//! Domain example: locating the Ising phase transition with minibatched
+//! sampling.
+//!
+//! Sweeps the inverse temperature β of a fully connected RBF Ising model
+//! and tracks the absolute magnetization |m| = |Σ s_i| / n estimated from
+//! MGPMH samples. Below the critical coupling the chain hovers near
+//! m ≈ 0; above it the spins align and |m| → 1. The same physics the
+//! paper's §B model exhibits, measured entirely with the minibatched
+//! sampler — a workload where vanilla Gibbs would spend O(DΔ) per step.
+//!
+//! Run with: `cargo run --release --example ising_phase`
+
+use mbgibbs::graph::models;
+use mbgibbs::rng::Pcg64;
+use mbgibbs::samplers::{MgpmhSampler, Sampler};
+
+fn magnetization(state: &[u16]) -> f64 {
+    let up = state.iter().filter(|&&v| v == 1).count() as f64;
+    let n = state.len() as f64;
+    (2.0 * up - n).abs() / n
+}
+
+fn main() {
+    let grid_n = 12; // n = 144: fast but still clearly shows the transition
+    let gamma = 1.5;
+    println!("RBF Ising {grid_n}×{grid_n}, γ = {gamma}: |magnetization| vs β\n");
+    println!("{:>6} {:>10} {:>10} {:>12} {:>12}", "beta", "L", "psi", "<|m|>", "acc rate");
+
+    for &beta in &[0.2, 0.6, 1.0, 1.4, 1.8, 2.4, 3.0] {
+        let model = models::ising_rbf(grid_n, beta, gamma);
+        let stats = model.graph.stats().clone();
+        let lambda = (stats.l * stats.l).max(1.0);
+        let mut sampler = MgpmhSampler::new(&model.graph, lambda);
+        let mut rng = Pcg64::seeded(7);
+        let n = model.graph.n();
+        let mut state = vec![0u16; n];
+
+        let burnin = 150_000u64;
+        let measure = 150_000u64;
+        for _ in 0..burnin {
+            sampler.step(&mut state, &mut rng);
+        }
+        let mut acc = 0.0;
+        let mut count = 0u64;
+        for it in 0..measure {
+            sampler.step(&mut state, &mut rng);
+            if it % 50 == 0 {
+                acc += magnetization(&state);
+                count += 1;
+            }
+        }
+        println!(
+            "{:>6.1} {:>10.3} {:>10.1} {:>12.4} {:>12.3}",
+            beta,
+            stats.l,
+            stats.psi,
+            acc / count as f64,
+            sampler.acceptance_rate()
+        );
+    }
+    println!(
+        "\nExpect <|m|> near 0 at small β (disordered) rising toward 1 at\n\
+         large β (ordered) — the ferromagnetic phase transition."
+    );
+}

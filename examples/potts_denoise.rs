@@ -1,0 +1,155 @@
+//! Domain example: image denoising with a Potts prior.
+//!
+//! A classic factor-graph workload: a grid-local Potts smoothness prior
+//! (pair factors) plus per-pixel unary evidence (table factors) from a
+//! noisy label image. Gibbs sampling recovers the clean labels; we compare
+//! vanilla Gibbs and Local Minibatch Gibbs (Algorithm 3) on wall-clock and
+//! pixel accuracy, and report the posterior-marginal decode.
+//!
+//! Run with: `cargo run --release --example potts_denoise`
+
+use mbgibbs::analysis::MarginalEstimator;
+use mbgibbs::graph::{FactorGraph, FactorGraphBuilder};
+use mbgibbs::rng::{Pcg64, Rng};
+use mbgibbs::samplers::{EnergyPath, GibbsSampler, LocalMinibatchSampler, Sampler};
+use std::time::Instant;
+
+const SIDE: usize = 48;
+const D: u16 = 4; // label count
+const SMOOTH: f64 = 0.9; // Potts smoothness weight
+const EVIDENCE: f64 = 1.4; // log-likelihood weight of the observed label
+const NOISE: f64 = 0.35; // fraction of corrupted pixels
+
+/// Ground truth: four quadrant labels plus a diagonal stripe.
+fn ground_truth() -> Vec<u16> {
+    let mut img = vec![0u16; SIDE * SIDE];
+    for r in 0..SIDE {
+        for c in 0..SIDE {
+            let mut v = match (r >= SIDE / 2, c >= SIDE / 2) {
+                (false, false) => 0,
+                (false, true) => 1,
+                (true, false) => 2,
+                (true, true) => 3,
+            };
+            if r.abs_diff(c) < 4 {
+                v = (v + 1) % D as usize;
+            }
+            img[r * SIDE + c] = v as u16;
+        }
+    }
+    img
+}
+
+fn corrupt(truth: &[u16], rng: &mut Pcg64) -> Vec<u16> {
+    truth
+        .iter()
+        .map(|&v| {
+            if rng.bernoulli(NOISE) {
+                rng.index(D as usize) as u16
+            } else {
+                v
+            }
+        })
+        .collect()
+}
+
+/// Grid Potts prior + unary evidence from the noisy image.
+fn build_model(noisy: &[u16]) -> FactorGraph {
+    let mut b = FactorGraphBuilder::new(SIDE * SIDE, D);
+    for r in 0..SIDE {
+        for c in 0..SIDE {
+            let i = (r * SIDE + c) as u32;
+            if c + 1 < SIDE {
+                b.add_potts_pair(i, i + 1, SMOOTH);
+            }
+            if r + 1 < SIDE {
+                b.add_potts_pair(i, i + SIDE as u32, SMOOTH);
+            }
+            // evidence: log-potential EVIDENCE for the observed label
+            let mut table = vec![0.0f64; D as usize];
+            table[noisy[i as usize] as usize] = EVIDENCE;
+            b.add_table(vec![i], table);
+        }
+    }
+    b.build()
+}
+
+fn accuracy(a: &[u16], b: &[u16]) -> f64 {
+    let same = a.iter().zip(b.iter()).filter(|(x, y)| x == y).count();
+    same as f64 / a.len() as f64
+}
+
+fn denoise(g: &FactorGraph, noisy: &[u16], sampler: &mut dyn Sampler, iters: u64) -> (Vec<u16>, f64) {
+    let mut rng = Pcg64::seeded(99);
+    let mut state = noisy.to_vec();
+    sampler.reset(&state, &mut rng);
+    let mut marg = MarginalEstimator::new(g.n(), D as usize);
+    let start = Instant::now();
+    let burnin = iters / 5;
+    for it in 0..iters {
+        sampler.step(&mut state, &mut rng);
+        if it >= burnin {
+            marg.update(&state);
+        }
+    }
+    let secs = start.elapsed().as_secs_f64();
+    // marginal decode: argmax posterior label per pixel
+    let decoded: Vec<u16> = (0..g.n())
+        .map(|i| {
+            let p = marg.marginal(i);
+            p.iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0 as u16
+        })
+        .collect();
+    (decoded, secs)
+}
+
+fn main() {
+    let mut rng = Pcg64::seeded(5);
+    let truth = ground_truth();
+    let noisy = corrupt(&truth, &mut rng);
+    let g = build_model(&noisy);
+    let stats = g.stats().clone();
+    println!(
+        "Potts denoising: {SIDE}×{SIDE}, D = {D}, n = {}, Δ = {}, noisy accuracy = {:.3}\n",
+        g.n(),
+        stats.delta,
+        accuracy(&noisy, &truth)
+    );
+
+    let iters = (g.n() as u64) * 600; // ~600 sweeps
+    println!("{:<22} {:>12} {:>10} {:>12}", "sampler", "accuracy", "seconds", "iters");
+    {
+        let mut s = GibbsSampler::new(&g, EnergyPath::Specialized);
+        let (decoded, secs) = denoise(&g, &noisy, &mut s, iters);
+        println!(
+            "{:<22} {:>12.4} {:>10.2} {:>12}",
+            "gibbs",
+            accuracy(&decoded, &truth),
+            secs,
+            iters
+        );
+    }
+    {
+        // B = 3 of ≤ 5 local factors: Algorithm 3 with a 60% batch.
+        let mut s = LocalMinibatchSampler::new(&g, 3);
+        let (decoded, secs) = denoise(&g, &noisy, &mut s, iters);
+        println!(
+            "{:<22} {:>12.4} {:>10.2} {:>12}",
+            "local-minibatch B=3",
+            accuracy(&decoded, &truth),
+            secs,
+            iters
+        );
+    }
+    println!(
+        "\nBoth samplers lift accuracy well above the noisy input. Note the\n\
+         contrast with the dense paper models: at Δ = 5 minibatching buys\n\
+         nothing (B·D ≈ Δ + D already) and the subsampling bias costs\n\
+         accuracy — matching the paper's premise that minibatch Gibbs is\n\
+         for LARGE local neighborhoods."
+    );
+}

@@ -1,0 +1,61 @@
+//! Quickstart: sample the paper's Potts model with vanilla Gibbs and the
+//! minibatched samplers, and compare work per iteration.
+//!
+//! Run with: `cargo run --release --example quickstart`
+
+use mbgibbs::bench::workload::SamplerSpec;
+use mbgibbs::coordinator::{run_chains, RunSpec};
+use mbgibbs::graph::models;
+use mbgibbs::samplers::EnergyPath;
+
+fn main() {
+    // The paper's §B Potts model: 20×20 fully connected grid, D = 10,
+    // β = 4.6, Gaussian-RBF interactions (L = 5.09, Ψ = 957.1).
+    let model = models::paper_potts();
+    let stats = model.graph.stats().clone();
+    println!(
+        "Potts model: n = {}, D = {}, Δ = {}, L = {:.2}, Ψ = {:.1}",
+        model.graph.n(),
+        model.graph.domain_size(),
+        stats.delta,
+        stats.l,
+        stats.psi
+    );
+    println!(
+        "L² = {:.1} ≪ Δ = {} — the regime where MGPMH wins\n",
+        stats.l * stats.l,
+        stats.delta
+    );
+
+    let iters = 200_000;
+    let lineup = [
+        SamplerSpec::Gibbs(EnergyPath::Generic),
+        SamplerSpec::Local {
+            batch: stats.delta / 4,
+        },
+        SamplerSpec::Mgpmh {
+            lambda: stats.l * stats.l,
+        },
+    ];
+    println!(
+        "{:<36} {:>12} {:>14} {:>12}",
+        "sampler", "evals/iter", "steps/sec", "l2 error"
+    );
+    for spec in lineup {
+        let mut run = RunSpec::new(spec);
+        run.iters = iters;
+        run.record_every = iters / 10;
+        let report = run_chains(&model.graph, &run);
+        println!(
+            "{:<36} {:>12.1} {:>14.0} {:>12.5}",
+            spec.label(&model.graph),
+            report.evals_per_iter,
+            report.steps_per_sec,
+            report.mean_final_error()
+        );
+    }
+    println!(
+        "\nAll samplers share the same stationary marginals (uniform by\n\
+         symmetry); MGPMH does ~O(DL² + Δ) work per step vs Gibbs's O(DΔ)."
+    );
+}

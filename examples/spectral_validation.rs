@@ -1,0 +1,96 @@
+//! Numeric validation of the paper's spectral-gap theorems on enumerable
+//! models.
+//!
+//! Builds exact transition matrices for vanilla Gibbs and MGPMH over tiny
+//! random graphs, verifies reversibility and stationarity (Theorem 3), and
+//! checks the Theorem-4 bound γ̄ ≥ exp(−L²/λ)·γ across a λ sweep.
+//!
+//! Run with: `cargo run --release --example spectral_validation`
+
+use mbgibbs::analysis::{
+    exact_distribution, gibbs_transition_matrix, mgpmh_transition_matrix,
+    spectral_gap_reversible, transition,
+};
+use mbgibbs::graph::models;
+
+fn main() {
+    println!("Theorem 3/4 validation on enumerable models\n");
+    println!(
+        "{:>6} {:>8} {:>10} {:>10} {:>10} {:>10} {:>8}",
+        "seed", "lambda", "gamma", "gamma_mb", "ratio", "bound", "holds"
+    );
+    let mut worst_margin = f64::INFINITY;
+    for seed in 0..6u64 {
+        let g = models::tiny_random(3, 2, 0.7, 200 + seed);
+        let s = g.stats().clone();
+        let pi = exact_distribution(&g);
+        let tg = gibbs_transition_matrix(&g);
+        let rev = transition::reversibility_violation(&tg, &pi);
+        assert!(rev < 1e-12, "gibbs must be reversible (got {rev})");
+        let gamma = spectral_gap_reversible(&tg, &pi);
+
+        for &scale in &[0.5f64, 1.0, 2.0] {
+            let lambda = (s.l * s.l * scale).max(0.25);
+            let tm = mgpmh_transition_matrix(&g, lambda);
+            // Theorem 3: reversible with stationary distribution π.
+            let rev = transition::reversibility_violation(&tm, &pi);
+            let sta = transition::stationarity_violation(&tm, &pi);
+            assert!(rev < 1e-8 && sta < 1e-8, "Theorem 3 violated: {rev} {sta}");
+            let gamma_mb = spectral_gap_reversible(&tm, &pi);
+            // Theorem 4: γ̄ ≥ exp(−L²/λ)·γ — in the paper's recommended
+            // regime λ = Θ(L²), where the bound is loose enough to hold.
+            let bound = (-s.l * s.l / lambda).exp();
+            let ratio = gamma_mb / gamma;
+            let holds = ratio >= bound - 1e-9;
+            worst_margin = worst_margin.min(ratio - bound);
+            println!(
+                "{:>6} {:>8.2} {:>10.5} {:>10.5} {:>10.4} {:>10.4} {:>8}",
+                200 + seed,
+                lambda,
+                gamma,
+                gamma_mb,
+                ratio,
+                bound,
+                holds
+            );
+            assert!(holds, "Theorem 4 bound violated in the λ = Θ(L²) regime");
+        }
+    }
+    println!(
+        "\nAll chains reversible & stationary wrt π (Thm 3); spectral-gap\n\
+         ratio exceeded the exp(−L²/λ) bound at every λ = Θ(L²) setting\n\
+         (Thm 4). Worst margin above bound: {worst_margin:.4}\n"
+    );
+
+    // --- Large-λ regime: the literal Theorem-4 bound breaks down. ---
+    // The convergence of γ̄/γ to 1 is empirically Θ(L/√λ), slower than the
+    // bound's 1 − L²/λ; see EXPERIMENTS.md §Discrepancies for the proof
+    // step this traces to. Report, don't assert.
+    println!("large-λ regime (discrepancy — see EXPERIMENTS.md):");
+    let g = models::tiny_random(3, 2, 0.9, 77);
+    let s = g.stats().clone();
+    let pi = exact_distribution(&g);
+    let gamma = spectral_gap_reversible(&gibbs_transition_matrix(&g), &pi);
+    println!(
+        "{:>8} {:>10} {:>10} {:>12} {:>14}",
+        "lambda", "ratio", "bound", "paper holds", "deficit·√λ/L"
+    );
+    for &lambda in &[10.0f64, 40.0, 160.0, 640.0] {
+        let gm = spectral_gap_reversible(&mgpmh_transition_matrix(&g, lambda), &pi);
+        let ratio = gm / gamma;
+        let bound = (-s.l * s.l / lambda).exp();
+        println!(
+            "{:>8.0} {:>10.5} {:>10.5} {:>12} {:>14.3}",
+            lambda,
+            ratio,
+            bound,
+            ratio >= bound,
+            (1.0 - ratio) * lambda.sqrt() / s.l
+        );
+    }
+    println!(
+        "\nThe deficit·√λ/L column is ~constant: convergence is Θ(L/√λ),\n\
+         so exp(−L²/λ) is eventually optimistic. In the paper's λ = Θ(L²)\n\
+         operating regime the bound is valid (it is loose there)."
+    );
+}

@@ -1,0 +1,86 @@
+"""AOT compile path: lower every Layer-2 graph to HLO *text* artifacts.
+
+Run once by `make artifacts`; the Rust runtime
+(rust/src/runtime/executor.rs) loads the text with
+``HloModuleProto::from_text_file`` and compiles it on the PJRT CPU client.
+
+HLO text — NOT ``lowered.compile()`` / serialized HloModuleProto — is the
+interchange format: jax >= 0.5 emits protos with 64-bit instruction ids
+which xla_extension 0.5.1 (what the published `xla` 0.1.6 crate binds)
+rejects (``proto.id() <= INT_MAX``). The text parser reassigns ids, so text
+round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage: python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (return_tuple for rust)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_all(out_dir: str) -> dict:
+    """Lower every artifact spec; returns a manifest {name: metadata}."""
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {}
+    for name, (fn, arg_shapes) in model.artifact_specs().items():
+        lowered = jax.jit(fn).lower(*arg_shapes)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest[name] = {
+            "file": f"{name}.hlo.txt",
+            "args": [
+                {"shape": list(s.shape), "dtype": s.dtype.name}
+                for s in arg_shapes
+            ],
+            "sha256": hashlib.sha256(text.encode()).hexdigest(),
+            "bytes": len(text),
+        }
+        print(f"  {name}: {len(text)} chars -> {path}", file=sys.stderr)
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(
+            {
+                "jax_version": jax.__version__,
+                "grid_n": model.GRID_N,
+                "n_vars": model.N_VARS,
+                "potts_d": model.POTTS_D,
+                "ising_d": model.ISING_D,
+                "rbf_gamma": model.RBF_GAMMA,
+                "artifacts": manifest,
+            },
+            f,
+            indent=2,
+        )
+    return manifest
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out-dir", default="../artifacts")
+    # legacy single-file mode kept for the Makefile stamp target
+    p.add_argument("--out", default=None, help=argparse.SUPPRESS)
+    args = p.parse_args()
+    out_dir = os.path.dirname(args.out) if args.out else args.out_dir
+    manifest = lower_all(out_dir or ".")
+    print(f"wrote {len(manifest)} artifacts to {out_dir}")
+
+
+if __name__ == "__main__":
+    main()

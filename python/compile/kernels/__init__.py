@@ -1,0 +1,3 @@
+"""Layer-1 Pallas kernels (build-time only; never imported at runtime)."""
+
+from . import minibatch_energy, potts_energy, ref  # noqa: F401

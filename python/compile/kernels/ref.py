@@ -1,0 +1,80 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the correctness ground truth: every Pallas kernel in this package
+must match its oracle to float32 tolerance under pytest + hypothesis sweeps
+(see python/tests/test_kernels.py). Keep these functions boring — no pallas,
+no custom calls, just jnp.
+"""
+
+import jax.numpy as jnp
+
+
+def cond_energies_ref(w, x_onehot, beta):
+    """Conditional-energy table for a dense pairwise model.
+
+    For a Potts-type model with pairwise energy ``beta * W[i,j] *
+    delta(x(i), x(j))``, the Gibbs conditional energies of *all* variables
+    given the current one-hot state are
+
+        E[i, u] = beta * sum_j W[i, j] * onehot(x(j))[u]
+
+    i.e. a plain matmul ``beta * W @ X``. The caller is responsible for
+    zeroing the diagonal of ``W`` and for folding in the symmetry factor
+    (each unordered pair appears twice in the paper's double sum).
+
+    Args:
+      w: (n, n) float32 interaction matrix (diagonal already zeroed).
+      x_onehot: (n, D) float32 one-hot encoding of the state.
+      beta: scalar inverse temperature.
+
+    Returns:
+      (n, D) float32 table of conditional energies.
+    """
+    return beta * jnp.dot(w, x_onehot)
+
+
+def cond_energy_row_ref(w_row, x_onehot, beta):
+    """Conditional energies for a single variable: ``beta * w_row @ X``.
+
+    Args:
+      w_row: (n,) interaction row of the resampled variable (self-entry 0).
+      x_onehot: (n, D) one-hot state.
+      beta: scalar inverse temperature.
+
+    Returns:
+      (D,) conditional energy vector (eps_u in Algorithm 1 of the paper).
+    """
+    return beta * jnp.dot(w_row, x_onehot)
+
+
+def minibatch_estimate_ref(phi, s, coef):
+    """Bias-adjusted minibatch energy estimator, Eq. (2) of the paper.
+
+        eps_x = sum_phi s_phi * log(1 + coef_phi * phi(x))
+
+    where ``coef_phi = Psi / (lambda * M_phi)`` and ``s_phi`` are the
+    Poisson minibatch weights. Factors with ``s_phi == 0`` contribute
+    nothing, so a dense evaluation over all factors equals the paper's
+    sparse sum over the sampled subset S.
+
+    Args:
+      phi: (m,) factor values phi(x) >= 0.
+      s: (m,) Poisson weights (float; integer-valued).
+      coef: (m,) per-factor coefficients Psi / (lambda * M_phi).
+
+    Returns:
+      scalar estimate eps_x.
+    """
+    return jnp.sum(s * jnp.log1p(coef * phi))
+
+
+def weighted_cond_energies_ref(w, x_onehot, weights, beta):
+    """Minibatch-weighted conditional energies (MGPMH proposal, Alg. 4).
+
+        E[i, u] = beta * sum_j weights[j] * W[i, j] * onehot(x(j))[u]
+
+    ``weights[j]`` carries the per-factor importance weight
+    ``s_phi * L / (lambda * M_phi)`` for the factor (i, j); zero weight
+    means the factor was not in the minibatch.
+    """
+    return beta * jnp.dot(w * weights[None, :], x_onehot)

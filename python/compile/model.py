@@ -1,0 +1,174 @@
+"""Layer 2: JAX compute graphs for the paper's dense lattice models.
+
+Defines (a) the synthetic model construction of the paper's §B — the
+Gaussian-RBF interaction matrix on an N x N grid — and (b) the jitted
+energy graphs that call the Layer-1 Pallas kernels and get AOT-lowered by
+aot.py into the HLO artifacts the Rust runtime executes.
+
+Model conventions (must match rust/src/graph/models.rs exactly):
+
+The paper writes the energies as double sums over (i, j), but its reported
+constants (Ising beta=1: L = 2.21, Psi = 416.1; Potts beta=4.6: L = 5.09,
+Psi = 957.1) pin down the convention actually used: ONE factor per
+UNORDERED pair {i, j}, i < j. With A_ij = exp(-gamma * d_ij^2), A_ii = 0:
+
+  * Potts:  phi_ij(x) = beta * A_ij * delta(x_i, x_j),  M_phi = beta*A_ij
+      -> Psi = beta * sum_{i<j} A_ij = 957.1 at beta = 4.6   (checked)
+      -> L   = beta * max_i sum_j A_ij = 5.09               (checked)
+  * Ising:  phi_ij(x) = beta * A_ij * (x_i x_j + 1),  M_phi = 2*beta*A_ij
+      (x_i x_j + 1 = 2*delta(x_i, x_j) for x in {-1,+1}: Ising is the
+      D = 2 Potts model with pair weight 2*beta*A_ij)
+      -> Psi = 2*beta * sum_{i<j} A_ij = 416.1 at beta = 1    (checked)
+      -> L   = 2*beta * max_i sum_j A_ij = 2.21              (checked)
+
+Conditional energies: eps_u(i) = sum_{j != i} w_ij * delta(u, x_j) with
+w = beta*A (Potts) or 2*beta*A (Ising) — the kernels take w directly.
+
+All functions are pure and shape-static so `jax.jit(...).lower()` produces
+a single self-contained HLO module per (model, shape) configuration.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import minibatch_energy, potts_energy
+
+GRID_N = 20  # paper §B: 20 x 20 lattice
+N_VARS = GRID_N * GRID_N
+POTTS_D = 10  # paper §3: D = 10
+ISING_D = 2
+RBF_GAMMA = 1.5  # paper §B
+ISING_BETA = 1.0  # paper §B
+POTTS_BETA = 4.6  # paper §B
+
+
+def rbf_interactions(grid_n=GRID_N, gamma=RBF_GAMMA):
+    """Gaussian-RBF interaction matrix A of the paper's §B, diagonal zeroed.
+
+    A_ij = exp(-gamma * ||pos_i - pos_j||^2) for i != j on the grid_n x
+    grid_n lattice (fully connected: every pair interacts).
+    """
+    idx = jnp.arange(grid_n * grid_n)
+    pos = jnp.stack([idx // grid_n, idx % grid_n], axis=1).astype(jnp.float32)
+    d2 = jnp.sum((pos[:, None, :] - pos[None, :, :]) ** 2, axis=-1)
+    a = jnp.exp(-gamma * d2)
+    return a - jnp.diag(jnp.diag(a))
+
+
+def potts_weights(grid_n=GRID_N, gamma=RBF_GAMMA):
+    """Potts pair-weight matrix W = A (one factor per unordered pair)."""
+    return rbf_interactions(grid_n, gamma)
+
+
+def ising_weights(grid_n=GRID_N, gamma=RBF_GAMMA):
+    """Ising pair-weight matrix W = 2A (D = 2 Potts equivalent)."""
+    return 2.0 * rbf_interactions(grid_n, gamma)
+
+
+def one_hot(x, d):
+    """(n,) int32 state -> (n, d) float32 one-hot encoding."""
+    return jax.nn.one_hot(x, d, dtype=jnp.float32)
+
+
+# --------------------------------------------------------------------------
+# Jitted graphs lowered by aot.py. Each takes the interaction matrix as an
+# argument (fed at runtime by Rust, not baked at compile time) so one
+# artifact serves any 20x20 dense model, and returns a 1-tuple (the rust
+# loader unwraps with to_tuple1).
+# --------------------------------------------------------------------------
+
+
+def cond_energies_graph(w, x_onehot, beta):
+    """All-variable conditional-energy table E[i, u] (Pallas matmul)."""
+    return (potts_energy.cond_energies(w, x_onehot, beta),)
+
+
+def weighted_cond_energies_graph(w, x_onehot, weights, beta):
+    """Minibatch-weighted conditional energies (MGPMH proposal path)."""
+    return (potts_energy.weighted_cond_energies(w, x_onehot, weights, beta),)
+
+
+def minibatch_estimate_graph(phi, s, coef):
+    """Eq. (2) bias-adjusted energy estimate over dense factor vectors."""
+    return (minibatch_energy.minibatch_estimate(phi, s, coef),)
+
+
+def potts_factor_values_graph(w, x_onehot, beta):
+    """Per-unordered-pair factor values phi_ij(x) = beta*W_ij*delta(x_i,x_j).
+
+    Emitted as the flattened (n*n,) upper-triangle-masked matrix (row-major;
+    entries with j <= i are zero), so entry i*n+j for i < j is the value of
+    factor {i, j}. Used by the MIN-Gibbs second minibatch to evaluate
+    sampled factors in bulk. sum(vals) == zeta(x).
+    """
+    agree = jnp.dot(x_onehot, x_onehot.T)  # (n, n) delta(x_i, x_j)
+    vals = beta * jnp.triu(w, k=1) * agree
+    return (vals.reshape(-1),)
+
+
+def total_energy_graph(w, x_onehot, beta):
+    """zeta(x) = beta * sum_{i<j} W_ij delta(x_i, x_j).
+
+    Computed from the conditional-energy table (each unordered pair is
+    counted twice in sum_i eps_{x(i)}(i), hence the 1/2).
+    """
+    e = potts_energy.cond_energies(w, x_onehot, beta)  # (n, D)
+    return (0.5 * jnp.sum(e * x_onehot),)
+
+
+# --------------------------------------------------------------------------
+# "dot" variants: the same math through a plain fused XLA dot instead of
+# the Pallas kernel. interpret=True compiles the Pallas grid to an HLO
+# while-loop that CPU-PJRT executes orders of magnitude slower than one
+# fused dot (see EXPERIMENTS.md §Perf); on a real TPU the Mosaic-compiled
+# Pallas kernel IS the fast path and these variants are redundant. The
+# Rust backend defaults to the dot variants on CPU and keeps the Pallas
+# artifacts as the (numerically identical) validation target.
+# --------------------------------------------------------------------------
+
+
+def cond_energies_dot_graph(w, x_onehot, beta):
+    """Conditional-energy table via a fused XLA dot (ref.py math)."""
+    from .kernels import ref
+
+    return (ref.cond_energies_ref(w, x_onehot, beta),)
+
+
+def total_energy_dot_graph(w, x_onehot, beta):
+    """Total energy via the fused dot."""
+    from .kernels import ref
+
+    e = ref.cond_energies_ref(w, x_onehot, beta)
+    return (0.5 * jnp.sum(e * x_onehot),)
+
+
+def artifact_specs():
+    """Static (function, example-shape) specs for every AOT artifact.
+
+    Keyed by artifact name; aot.py lowers each entry to
+    ``artifacts/<name>.hlo.txt``.
+    """
+    f32 = jnp.float32
+    n, dp, di = N_VARS, POTTS_D, ISING_D
+    w = jax.ShapeDtypeStruct((n, n), f32)
+    xp = jax.ShapeDtypeStruct((n, dp), f32)
+    xi = jax.ShapeDtypeStruct((n, di), f32)
+    wt = jax.ShapeDtypeStruct((n,), f32)
+    beta = jax.ShapeDtypeStruct((), f32)
+    m = jax.ShapeDtypeStruct((n * n,), f32)
+    return {
+        "potts_cond_energies": (cond_energies_graph, (w, xp, beta)),
+        "ising_cond_energies": (cond_energies_graph, (w, xi, beta)),
+        "potts_cond_energies_dot": (cond_energies_dot_graph, (w, xp, beta)),
+        "ising_cond_energies_dot": (cond_energies_dot_graph, (w, xi, beta)),
+        "potts_weighted_cond_energies": (
+            weighted_cond_energies_graph,
+            (w, xp, wt, beta),
+        ),
+        "minibatch_estimate": (minibatch_estimate_graph, (m, m, m)),
+        "potts_factor_values": (potts_factor_values_graph, (w, xp, beta)),
+        "potts_total_energy": (total_energy_graph, (w, xp, beta)),
+        "ising_total_energy": (total_energy_graph, (w, xi, beta)),
+        "potts_total_energy_dot": (total_energy_dot_graph, (w, xp, beta)),
+        "ising_total_energy_dot": (total_energy_dot_graph, (w, xi, beta)),
+    }

@@ -1,0 +1,142 @@
+"""Pallas kernels vs pure-jnp oracles — the core L1 correctness signal."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import minibatch_energy, potts_energy, ref
+
+
+def rand_state(rng, n, d):
+    x = rng.integers(0, d, size=n)
+    return jax.nn.one_hot(x, d, dtype=jnp.float32)
+
+
+def rand_w(rng, n):
+    w = rng.random((n, n), dtype=np.float32)
+    np.fill_diagonal(w, 0.0)
+    return jnp.asarray(w + w.T)
+
+
+class TestCondEnergies:
+    @pytest.mark.parametrize("n,d", [(4, 2), (20, 3), (128, 10), (400, 10), (400, 2), (513, 7)])
+    def test_matches_ref(self, n, d):
+        rng = np.random.default_rng(n * 1000 + d)
+        w = rand_w(rng, n)
+        x = rand_state(rng, n, d)
+        beta = 1.7
+        got = potts_energy.cond_energies(w, x, beta)
+        want = ref.cond_energies_ref(w, x, beta)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
+
+    def test_zero_beta(self):
+        rng = np.random.default_rng(0)
+        w = rand_w(rng, 16)
+        x = rand_state(rng, 16, 4)
+        got = potts_energy.cond_energies(w, x, 0.0)
+        assert np.allclose(got, 0.0)
+
+    def test_identity_structure(self):
+        # Two variables, one interaction: energies read off directly.
+        w = jnp.array([[0.0, 2.0], [2.0, 0.0]], dtype=jnp.float32)
+        x = jax.nn.one_hot(jnp.array([0, 1]), 3, dtype=jnp.float32)
+        e = potts_energy.cond_energies(w, x, 1.0)
+        # E[0, u] = 2 * onehot(x1)[u] = 2*delta(u,1)
+        np.testing.assert_allclose(e[0], [0.0, 2.0, 0.0], atol=1e-6)
+        np.testing.assert_allclose(e[1], [2.0, 0.0, 0.0], atol=1e-6)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        n=st.integers(min_value=2, max_value=200),
+        d=st.integers(min_value=2, max_value=16),
+        seed=st.integers(min_value=0, max_value=2**31 - 1),
+        beta=st.floats(min_value=0.0, max_value=8.0),
+    )
+    def test_hypothesis_shapes(self, n, d, seed, beta):
+        rng = np.random.default_rng(seed)
+        w = rand_w(rng, n)
+        x = rand_state(rng, n, d)
+        got = potts_energy.cond_energies(w, x, beta)
+        want = ref.cond_energies_ref(w, x, beta)
+        assert got.shape == (n, d)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-3)
+
+
+class TestWeightedCondEnergies:
+    @pytest.mark.parametrize("n,d", [(16, 4), (400, 10)])
+    def test_matches_ref(self, n, d):
+        rng = np.random.default_rng(7)
+        w = rand_w(rng, n)
+        x = rand_state(rng, n, d)
+        # sparse Poisson-style weights: mostly zero
+        weights = jnp.asarray(
+            rng.poisson(0.05, size=n).astype(np.float32) * rng.random(n).astype(np.float32) * 3.0
+        )
+        got = potts_energy.weighted_cond_energies(w, x, weights, 2.3)
+        want = ref.weighted_cond_energies_ref(w, x, weights, 2.3)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
+
+    def test_zero_weights_zero_energy(self):
+        rng = np.random.default_rng(3)
+        w = rand_w(rng, 32)
+        x = rand_state(rng, 32, 5)
+        got = potts_energy.weighted_cond_energies(w, x, jnp.zeros(32), 1.0)
+        assert np.allclose(got, 0.0)
+
+
+class TestMinibatchEstimate:
+    @pytest.mark.parametrize("m", [1, 7, 1024, 1025, 160000])
+    def test_matches_ref(self, m):
+        rng = np.random.default_rng(m)
+        phi = jnp.asarray(rng.random(m, dtype=np.float32))
+        s = jnp.asarray(rng.poisson(0.1, size=m).astype(np.float32))
+        coef = jnp.asarray(1.0 + rng.random(m, dtype=np.float32) * 10)
+        got = minibatch_energy.minibatch_estimate(phi, s, coef)
+        want = ref.minibatch_estimate_ref(phi, s, coef)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_zero_s_gives_zero(self):
+        m = 100
+        phi = jnp.ones(m)
+        s = jnp.zeros(m)
+        coef = jnp.ones(m)
+        assert float(minibatch_energy.minibatch_estimate(phi, s, coef)) == 0.0
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        m=st.integers(min_value=1, max_value=5000),
+        seed=st.integers(min_value=0, max_value=2**31 - 1),
+    )
+    def test_hypothesis(self, m, seed):
+        rng = np.random.default_rng(seed)
+        phi = jnp.asarray(rng.random(m, dtype=np.float32) * 5)
+        s = jnp.asarray(rng.poisson(0.2, size=m).astype(np.float32))
+        coef = jnp.asarray(rng.random(m, dtype=np.float32) * 20)
+        got = minibatch_energy.minibatch_estimate(phi, s, coef)
+        want = ref.minibatch_estimate_ref(phi, s, coef)
+        np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+class TestEstimatorUnbiasedness:
+    def test_eq2_unbiased_in_exp(self):
+        """Monte-Carlo check of Lemma 1: E[exp(eps_x)] == exp(zeta(x)).
+
+        Small factor set so exp moments are stable; this is the python
+        mirror of the exact rust-side test in samplers/estimator.rs.
+        """
+        rng = np.random.default_rng(42)
+        m = 8
+        phi = rng.random(m) * 0.2  # factor values
+        mphi = phi + rng.random(m) * 0.1  # maximum energies >= phi
+        psi = mphi.sum()
+        lam = 30.0
+        coef = psi / (lam * mphi)
+        trials = 200000
+        s = rng.poisson(lam * mphi / psi, size=(trials, m)).astype(np.float64)
+        eps = (s * np.log1p(coef[None, :] * phi[None, :])).sum(axis=1)
+        est = np.exp(eps).mean()
+        want = np.exp(phi.sum())
+        assert abs(est - want) / want < 0.02

@@ -1,0 +1,115 @@
+"""L2 model graphs: shapes, paper constants, AOT lowering round-trip."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from compile import aot, model
+from compile.kernels import ref
+
+
+class TestRbfInteractions:
+    def test_shape_and_diagonal(self):
+        a = model.rbf_interactions()
+        assert a.shape == (400, 400)
+        assert np.allclose(np.diag(a), 0.0)
+
+    def test_symmetric(self):
+        a = model.rbf_interactions()
+        np.testing.assert_allclose(a, a.T, atol=1e-7)
+
+    def test_neighbor_value(self):
+        # adjacent grid sites: d^2 = 1 -> A = exp(-1.5)
+        a = np.asarray(model.rbf_interactions())
+        assert abs(a[0, 1] - np.exp(-1.5)) < 1e-6
+        # diagonal neighbors: d^2 = 2
+        assert abs(a[0, 21] - np.exp(-3.0)) < 1e-6
+
+    def test_paper_constants_ising(self):
+        """Paper §2: Ising (beta=1) has L = 2.21, Psi = 416.1.
+
+        One factor per unordered pair, phi_ij = beta*A_ij*(x_i x_j + 1),
+        M_phi = 2*beta*A_ij. Psi = 2*beta*sum_{i<j} A_ij = beta*sum_ij A_ij;
+        L = max_i sum_{j != i} 2*beta*A_ij.
+        """
+        a = np.asarray(model.rbf_interactions(), dtype=np.float64)
+        beta = model.ISING_BETA
+        psi = beta * a.sum()
+        l = 2 * beta * a.sum(axis=1).max()
+        assert abs(psi - 416.1) < 0.2, psi
+        assert abs(l - 2.21) < 0.01, l
+
+    def test_paper_constants_potts(self):
+        """Paper §3: Potts (beta=4.6) has L = 5.09, Psi = 957.1.
+
+        phi_ij = beta*A_ij*delta(x_i,x_j) per unordered pair, M_phi =
+        beta*A_ij. Psi = beta*sum_{i<j} A_ij; L = beta*max_i sum_j A_ij.
+        """
+        a = np.asarray(model.rbf_interactions(), dtype=np.float64)
+        beta = model.POTTS_BETA
+        psi = beta * a.sum() / 2
+        l = beta * a.sum(axis=1).max()
+        assert abs(psi - 957.1) < 0.5, psi
+        assert abs(l - 5.09) < 0.01, l
+
+
+class TestGraphs:
+    def _setup(self, d):
+        rng = np.random.default_rng(0)
+        w = model.potts_weights()
+        x = jax.nn.one_hot(jnp.asarray(rng.integers(0, d, 400)), d, dtype=jnp.float32)
+        return w, x
+
+    def test_cond_energies_graph(self):
+        w, x = self._setup(10)
+        (e,) = model.cond_energies_graph(w, x, 4.6)
+        assert e.shape == (400, 10)
+        np.testing.assert_allclose(
+            e, ref.cond_energies_ref(w, x, 4.6), rtol=1e-4, atol=1e-3
+        )
+
+    def test_total_energy_consistent_with_factor_values(self):
+        w, x = self._setup(10)
+        (zeta,) = model.total_energy_graph(w, x, 4.6)
+        (vals,) = model.potts_factor_values_graph(w, x, 4.6)
+        np.testing.assert_allclose(float(zeta), float(vals.sum()), rtol=1e-4)
+
+    def test_ising_identity(self):
+        """Ising energy via D=2 Potts: zeta = sum_{i<j} beta*A_ij*(s_i s_j+1)."""
+        rng = np.random.default_rng(1)
+        spins = rng.integers(0, 2, 400)  # 0 -> -1, 1 -> +1
+        a = np.asarray(model.rbf_interactions(), dtype=np.float64)
+        s = 2.0 * spins - 1.0
+        want = (np.triu(a, 1) * (np.outer(s, s) + 1)).sum()
+        x = jax.nn.one_hot(jnp.asarray(spins), 2, dtype=jnp.float32)
+        (zeta,) = model.total_energy_graph(model.ising_weights(), x, 1.0)
+        np.testing.assert_allclose(float(zeta), want, rtol=1e-4)
+
+
+class TestAot:
+    def test_artifact_specs_complete(self):
+        specs = model.artifact_specs()
+        assert set(specs) >= {
+            "potts_cond_energies",
+            "ising_cond_energies",
+            "potts_weighted_cond_energies",
+            "minibatch_estimate",
+            "potts_factor_values",
+            "potts_total_energy",
+            "ising_total_energy",
+        }
+
+    def test_lower_one_to_hlo_text(self):
+        fn, shapes = model.artifact_specs()["potts_total_energy"]
+        lowered = jax.jit(fn).lower(*shapes)
+        text = aot.to_hlo_text(lowered)
+        assert "ENTRY" in text and "f32[400,400]" in text
+
+    def test_lower_all_manifest(self, tmp_path):
+        manifest = aot.lower_all(str(tmp_path))
+        assert len(manifest) == len(model.artifact_specs())
+        for name, meta in manifest.items():
+            assert (tmp_path / meta["file"]).exists()
+            assert meta["bytes"] > 100

@@ -1,0 +1,38 @@
+//! Figure 1 reproduction: MIN-Gibbs marginal-error trajectories vs vanilla
+//! Gibbs on the §B Ising model (20×20 RBF, β = 1, L = 2.21, Ψ = 416.1),
+//! for batch sizes λ ∈ {¼, ½, 1, 2}·Ψ².
+//!
+//! Expected shape: every MIN-Gibbs trajectory converges (unbiased chain);
+//! larger λ tracks the Gibbs trajectory more closely.
+//!
+//! Run: `cargo bench --bench fig1_mingibbs [-- --full]`
+//! (default 150k iterations; `--full` = the paper's 10⁶)
+
+use mbgibbs::bench::figures::{run_figure, FigureParams};
+use mbgibbs::bench::workload::fig1_workload;
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    let params = if full {
+        FigureParams::default()
+    } else {
+        FigureParams {
+            iters: 150_000,
+            record_every: 5_000,
+            seed: 42,
+        }
+    };
+    let (model, specs) = fig1_workload();
+    eprintln!(
+        "figure 1: Ising n = {}, Ψ = {:.1}, {} iterations per sampler",
+        model.graph.n(),
+        model.graph.stats().psi,
+        params.iters
+    );
+    let (traj, summary) = run_figure("figure1 min-gibbs ising", &model, &specs, &params);
+    println!("{}", summary.render());
+    let out = std::path::Path::new("bench_out");
+    summary.write_csv(out).expect("csv");
+    let p = traj.write_csv(out).expect("csv");
+    println!("(trajectories: {})", p.display());
+}

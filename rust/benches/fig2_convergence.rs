@@ -1,0 +1,52 @@
+//! Figure 2 reproduction — all three panels:
+//!   (a) Local Minibatch Gibbs on the §B Ising model, B ∈ {⅛, ¼, ½}·Δ;
+//!   (b) MGPMH on the §B Potts model (D = 10, β = 4.6), λ ∈ {1, 2, 4}·L²;
+//!   (c) DoubleMIN-Gibbs on the Potts model, λ₁ = L², λ₂ ∈ {1, 2, 4}·Ψ².
+//!
+//! Expected shape (paper): every variant converges with nearly the same
+//! trajectory as vanilla Gibbs, approaching it as batch size increases.
+//!
+//! Run: `cargo bench --bench fig2_convergence [-- 2a|2b|2c] [-- --full]`
+
+use mbgibbs::bench::figures::{run_figure, FigureParams};
+use mbgibbs::bench::workload;
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let full = args.iter().any(|a| a == "--full");
+    let which: Vec<&str> = ["2a", "2b", "2c"]
+        .into_iter()
+        .filter(|w| args.iter().any(|a| a == w))
+        .collect();
+    let which = if which.is_empty() {
+        vec!["2a", "2b", "2c"]
+    } else {
+        which
+    };
+    let out = std::path::Path::new("bench_out");
+    for panel in which {
+        let (title, (model, specs)) = match panel {
+            "2a" => ("figure2a local minibatch ising", workload::fig2a_workload()),
+            "2b" => ("figure2b mgpmh potts", workload::fig2b_workload()),
+            "2c" => ("figure2c doublemin potts", workload::fig2c_workload()),
+            _ => unreachable!(),
+        };
+        // 2c's second minibatch is Θ(Ψ²)-sized (≈ 1 ms/step), so its
+        // default is shorter; --full restores the paper's 10⁶ everywhere.
+        let params = if full {
+            FigureParams::default()
+        } else {
+            FigureParams {
+                iters: if panel == "2c" { 60_000 } else { 120_000 },
+                record_every: if panel == "2c" { 2_500 } else { 5_000 },
+                seed: 42,
+            }
+        };
+        eprintln!("{title}: {} iterations per sampler", params.iters);
+        let (traj, summary) = run_figure(title, &model, &specs, &params);
+        println!("{}", summary.render());
+        summary.write_csv(out).expect("csv");
+        let p = traj.write_csv(out).expect("csv");
+        println!("(trajectories: {})\n", p.display());
+    }
+}

@@ -1,0 +1,172 @@
+//! Hot-path micro-benchmarks: the per-iteration building blocks of every
+//! sampler, plus the XLA-backend call overhead. This is the §Perf
+//! instrument — EXPERIMENTS.md records its before/after numbers.
+//!
+//! Run: `cargo bench --bench hotpath [-- --quick] [-- --xla]`
+
+use mbgibbs::bench::report::{fmt_seconds, Table};
+use mbgibbs::bench::timer::{bench_iter, BenchConfig};
+use mbgibbs::graph::models;
+use mbgibbs::rng::{
+    sample_categorical_from_energies, sample_poisson, Pcg64, Rng, SparsePoissonSampler,
+};
+use mbgibbs::samplers::{
+    DenseGibbsSampler, DoubleMinGibbsSampler, EnergyPath, GibbsSampler, MgpmhSampler,
+    MinGibbsSampler, PoissonEnergyEstimator, Sampler,
+};
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let quick = args.iter().any(|a| a == "--quick");
+    let with_xla = args.iter().any(|a| a == "--xla");
+    let cfg = if quick {
+        BenchConfig {
+            warmup_iters: 200,
+            batch_iters: 2_000,
+            batches: 5,
+        }
+    } else {
+        BenchConfig::default()
+    };
+    let mut table = Table::new("hotpath", &["op", "median", "ns"]);
+    let mut add = |name: &str, median: f64| {
+        table.push_row(vec![
+            name.to_string(),
+            fmt_seconds(median),
+            format!("{:.1}", median * 1e9),
+        ]);
+    };
+
+    let potts = models::paper_potts();
+    let g = &potts.graph;
+    let stats = g.stats().clone();
+    let d = g.domain_size() as usize;
+    let mut rng = Pcg64::seeded(1);
+    let mut state: Vec<u16> = (0..g.n()).map(|_| rng.index(d) as u16).collect();
+
+    // --- primitive ops ---
+    {
+        let mut out = vec![0.0f64; d];
+        let mut i = 0usize;
+        let s = bench_iter(&cfg, |_| {
+            g.cond_energies_generic(&mut state, i, &mut out);
+            i = (i + 1) % g.n();
+        });
+        add("cond_energies generic (Δ=399,D=10)", s.median);
+        let s = bench_iter(&cfg, |_| {
+            g.cond_energies_fast(&mut state, i, &mut out);
+            i = (i + 1) % g.n();
+        });
+        add("cond_energies fast", s.median);
+    }
+    {
+        let s = bench_iter(&cfg, |_| {
+            std::hint::black_box(sample_poisson(&mut rng, 25.9));
+        });
+        add("poisson(λ=25.9)", s.median);
+        let s = bench_iter(&cfg, |_| {
+            std::hint::black_box(sample_poisson(&mut rng, 2.5));
+        });
+        add("poisson(λ=2.5)", s.median);
+    }
+    {
+        let rates: Vec<f64> = g.max_energies().to_vec();
+        let lambda = stats.l * stats.l;
+        let scaled: Vec<f64> = rates.iter().map(|&m| lambda * m / stats.psi).collect();
+        let mut sp = SparsePoissonSampler::new(&scaled);
+        let s = bench_iter(&cfg, |_| {
+            sp.sample_into(&mut rng, |i, c| {
+                std::hint::black_box((i, c));
+            });
+        });
+        add("sparse poisson vector (global)", s.median);
+    }
+    {
+        let energies: Vec<f64> = (0..d).map(|u| (u as f64) * 0.3).collect();
+        let s = bench_iter(&cfg, |_| {
+            std::hint::black_box(sample_categorical_from_energies(&mut rng, &energies));
+        });
+        add("categorical D=10", s.median);
+    }
+    {
+        let mut est = PoissonEnergyEstimator::new(g, 4_000.0);
+        let s = bench_iter(&cfg, |_| {
+            std::hint::black_box(est.estimate(g, &state, &mut rng));
+        });
+        add("eq2 estimator (λ=4000)", s.median);
+    }
+
+    // --- full sampler steps on the paper models ---
+    {
+        let mut s1 = GibbsSampler::new(g, EnergyPath::Generic);
+        let s = bench_iter(&cfg, |_| {
+            s1.step(&mut state, &mut rng);
+        });
+        add("step gibbs generic (potts)", s.median);
+        let mut s2 = GibbsSampler::new(g, EnergyPath::Specialized);
+        let s = bench_iter(&cfg, |_| {
+            s2.step(&mut state, &mut rng);
+        });
+        add("step gibbs fast (potts)", s.median);
+        let mut s2d = DenseGibbsSampler::new(&potts);
+        let s = bench_iter(&cfg, |_| {
+            s2d.step(&mut state, &mut rng);
+        });
+        add("step dense-gibbs (potts)", s.median);
+        let mut s3 = MgpmhSampler::new(g, stats.l * stats.l);
+        let s = bench_iter(&cfg, |_| {
+            s3.step(&mut state, &mut rng);
+        });
+        add("step mgpmh λ=L² (potts)", s.median);
+        let mut s4 = MinGibbsSampler::new(g, 4_000.0);
+        let mincfg = BenchConfig {
+            warmup_iters: 10,
+            batch_iters: if quick { 20 } else { 100 },
+            batches: 5,
+        };
+        let s = bench_iter(&mincfg, |_| {
+            s4.step(&mut state, &mut rng);
+        });
+        add("step min-gibbs λ=4000 (potts)", s.median);
+        let mut s5 = DoubleMinGibbsSampler::new(g, stats.l * stats.l, 4_000.0);
+        let dmcfg = BenchConfig {
+            warmup_iters: 10,
+            batch_iters: if quick { 50 } else { 500 },
+            batches: 5,
+        };
+        let s = bench_iter(&dmcfg, |_| {
+            s5.step(&mut state, &mut rng);
+        });
+        add("step doublemin λ₁=L²,λ₂=4000 (potts)", s.median);
+    }
+
+    // --- XLA backend round-trip (opt-in: PJRT client startup is slow) ---
+    if with_xla {
+        use mbgibbs::runtime::{ArtifactStore, XlaDenseBackend};
+        let store = ArtifactStore::open(std::path::Path::new("artifacts")).expect("artifacts");
+        let xcfg = BenchConfig {
+            warmup_iters: 3,
+            batch_iters: 20,
+            batches: 5,
+        };
+        let pallas = XlaDenseBackend::new_pallas(&store, &potts).expect("backend");
+        let s = bench_iter(&xcfg, |_| {
+            std::hint::black_box(pallas.cond_energies_all(&state).unwrap());
+        });
+        add("xla cond_energies_all pallas-interp (400×10)", s.median);
+        let dot = XlaDenseBackend::new(&store, &potts).expect("backend");
+        let s = bench_iter(&xcfg, |_| {
+            std::hint::black_box(dot.cond_energies_all(&state).unwrap());
+        });
+        add("xla cond_energies_all fused-dot (400×10)", s.median);
+        let s = bench_iter(&xcfg, |_| {
+            std::hint::black_box(dot.total_energy(&state).unwrap());
+        });
+        add("xla total_energy fused-dot", s.median);
+    }
+
+    println!("{}", table.render());
+    table
+        .write_csv(std::path::Path::new("bench_out"))
+        .expect("csv");
+}

@@ -1,0 +1,141 @@
+//! Generic MCMC convergence diagnostics: autocorrelation, effective sample
+//! size, and the Gelman–Rubin statistic across coordinator chains.
+
+/// Sample mean.
+pub fn mean(xs: &[f64]) -> f64 {
+    xs.iter().sum::<f64>() / xs.len().max(1) as f64
+}
+
+/// Unbiased sample variance.
+pub fn variance(xs: &[f64]) -> f64 {
+    let n = xs.len();
+    if n < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    xs.iter().map(|&x| (x - m) * (x - m)).sum::<f64>() / (n - 1) as f64
+}
+
+/// Normalized autocorrelation ρ(k) of a scalar series at lag `k`.
+pub fn autocorrelation(xs: &[f64], k: usize) -> f64 {
+    let n = xs.len();
+    if k >= n || n < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    let denom: f64 = xs.iter().map(|&x| (x - m) * (x - m)).sum();
+    if denom == 0.0 {
+        return if k == 0 { 1.0 } else { 0.0 };
+    }
+    let num: f64 = (0..n - k).map(|t| (xs[t] - m) * (xs[t + k] - m)).sum();
+    num / denom
+}
+
+/// Integrated autocorrelation time τ via Geyer's initial-positive-sequence
+/// truncation: τ = 1 + 2 Σ ρ(k), stopping when ρ(2j) + ρ(2j+1) ≤ 0.
+pub fn integrated_autocorr_time(xs: &[f64]) -> f64 {
+    let n = xs.len();
+    let mut tau = 1.0;
+    let mut k = 1;
+    while k + 1 < n {
+        let pair = autocorrelation(xs, k) + autocorrelation(xs, k + 1);
+        if pair <= 0.0 {
+            break;
+        }
+        tau += 2.0 * pair;
+        k += 2;
+    }
+    tau.max(1.0)
+}
+
+/// Effective sample size n/τ.
+pub fn effective_sample_size(xs: &[f64]) -> f64 {
+    xs.len() as f64 / integrated_autocorr_time(xs)
+}
+
+/// Gelman–Rubin potential scale reduction factor R̂ over ≥ 2 chains of
+/// equal length. R̂ ≈ 1 indicates convergence.
+pub fn gelman_rubin(chains: &[Vec<f64>]) -> f64 {
+    let m = chains.len();
+    assert!(m >= 2, "need at least two chains");
+    let n = chains[0].len();
+    assert!(
+        n >= 2 && chains.iter().all(|c| c.len() == n),
+        "chains must have equal length >= 2"
+    );
+    let means: Vec<f64> = chains.iter().map(|c| mean(c)).collect();
+    let grand = mean(&means);
+    let b = n as f64 / (m as f64 - 1.0)
+        * means.iter().map(|&x| (x - grand) * (x - grand)).sum::<f64>();
+    let w = chains.iter().map(|c| variance(c)).sum::<f64>() / m as f64;
+    if w == 0.0 {
+        return 1.0;
+    }
+    let var_plus = (n as f64 - 1.0) / n as f64 * w + b / n as f64;
+    (var_plus / w).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::{Pcg64, Rng};
+
+    fn iid_series(n: usize, seed: u64) -> Vec<f64> {
+        let mut rng = Pcg64::seeded(seed);
+        (0..n).map(|_| rng.f64()).collect()
+    }
+
+    #[test]
+    fn autocorr_lag0_is_one() {
+        let xs = iid_series(500, 1);
+        assert!((autocorrelation(&xs, 0) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn iid_has_tau_near_one() {
+        let xs = iid_series(20_000, 2);
+        let tau = integrated_autocorr_time(&xs);
+        assert!(tau < 1.3, "tau = {tau}");
+        let ess = effective_sample_size(&xs);
+        assert!(ess > 15_000.0, "ess = {ess}");
+    }
+
+    #[test]
+    fn ar1_has_large_tau() {
+        // AR(1) with φ = 0.95: τ ≈ (1+φ)/(1−φ) = 39.
+        let mut rng = Pcg64::seeded(3);
+        let mut xs = vec![0.0f64];
+        for _ in 0..50_000 {
+            let prev = *xs.last().unwrap();
+            xs.push(0.95 * prev + (rng.f64() - 0.5));
+        }
+        let tau = integrated_autocorr_time(&xs);
+        assert!(tau > 15.0, "tau = {tau}");
+        assert!(effective_sample_size(&xs) < 5_000.0);
+    }
+
+    #[test]
+    fn gelman_rubin_converged_chains() {
+        let chains: Vec<Vec<f64>> = (0..4).map(|i| iid_series(5000, 10 + i)).collect();
+        let r = gelman_rubin(&chains);
+        assert!((r - 1.0).abs() < 0.02, "rhat = {r}");
+    }
+
+    #[test]
+    fn gelman_rubin_detects_disagreement() {
+        let mut chains: Vec<Vec<f64>> = (0..3).map(|i| iid_series(2000, 20 + i)).collect();
+        // shift one chain far away
+        for v in chains[0].iter_mut() {
+            *v += 10.0;
+        }
+        let r = gelman_rubin(&chains);
+        assert!(r > 2.0, "rhat = {r}");
+    }
+
+    #[test]
+    fn variance_known_values() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert!((mean(&xs) - 2.5).abs() < 1e-12);
+        assert!((variance(&xs) - 5.0 / 3.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,146 @@
+//! Running marginal estimation — the paper's Figure 1/2 convergence metric.
+//!
+//! The experiments track a running average of per-variable marginal
+//! distributions and report the mean ℓ₂ distance to the known stationary
+//! marginals (uniform, by value symmetry of the §B models).
+
+/// Accumulates per-variable value counts over samples and reports
+/// marginal-error metrics.
+#[derive(Clone, Debug)]
+pub struct MarginalEstimator {
+    counts: Vec<u64>, // n × d, row-major
+    n: usize,
+    d: usize,
+    samples: u64,
+}
+
+impl MarginalEstimator {
+    /// For `n` variables over domain size `d`.
+    pub fn new(n: usize, d: usize) -> Self {
+        Self {
+            counts: vec![0; n * d],
+            n,
+            d,
+            samples: 0,
+        }
+    }
+
+    /// Record one full state sample.
+    pub fn update(&mut self, state: &[u16]) {
+        debug_assert_eq!(state.len(), self.n);
+        for (i, &v) in state.iter().enumerate() {
+            self.counts[i * self.d + v as usize] += 1;
+        }
+        self.samples += 1;
+    }
+
+    /// Number of samples recorded.
+    pub fn samples(&self) -> u64 {
+        self.samples
+    }
+
+    /// Current estimate of variable `i`'s marginal.
+    pub fn marginal(&self, i: usize) -> Vec<f64> {
+        let total = self.samples.max(1) as f64;
+        self.counts[i * self.d..(i + 1) * self.d]
+            .iter()
+            .map(|&c| c as f64 / total)
+            .collect()
+    }
+
+    /// Mean over variables of ‖p̂_i − uniform‖₂ — the paper's y-axis in
+    /// Figures 1 and 2.
+    pub fn l2_error_vs_uniform(&self) -> f64 {
+        let u = 1.0 / self.d as f64;
+        let total = self.samples.max(1) as f64;
+        let mut acc = 0.0;
+        for i in 0..self.n {
+            let mut sq = 0.0;
+            for v in 0..self.d {
+                let p = self.counts[i * self.d + v] as f64 / total;
+                sq += (p - u) * (p - u);
+            }
+            acc += sq.sqrt();
+        }
+        acc / self.n as f64
+    }
+
+    /// Mean ℓ₂ distance to arbitrary reference marginals (e.g. the exact
+    /// ones from enumeration).
+    pub fn l2_error_vs(&self, reference: &[Vec<f64>]) -> f64 {
+        debug_assert_eq!(reference.len(), self.n);
+        let total = self.samples.max(1) as f64;
+        let mut acc = 0.0;
+        for (i, r) in reference.iter().enumerate() {
+            let mut sq = 0.0;
+            for (v, &rv) in r.iter().enumerate() {
+                let p = self.counts[i * self.d + v] as f64 / total;
+                sq += (p - rv) * (p - rv);
+            }
+            acc += sq.sqrt();
+        }
+        acc / self.n as f64
+    }
+
+    /// Reset all counts.
+    pub fn reset(&mut self) {
+        self.counts.fill(0);
+        self.samples = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn marginal_estimates() {
+        let mut m = MarginalEstimator::new(2, 3);
+        m.update(&[0, 1]);
+        m.update(&[0, 2]);
+        m.update(&[1, 1]);
+        m.update(&[0, 1]);
+        assert_eq!(m.samples(), 4);
+        let p0 = m.marginal(0);
+        assert!((p0[0] - 0.75).abs() < 1e-12);
+        assert!((p0[1] - 0.25).abs() < 1e-12);
+        assert_eq!(p0[2], 0.0);
+    }
+
+    #[test]
+    fn error_zero_when_uniform() {
+        let mut m = MarginalEstimator::new(1, 2);
+        m.update(&[0]);
+        m.update(&[1]);
+        assert!(m.l2_error_vs_uniform() < 1e-12);
+    }
+
+    #[test]
+    fn error_max_when_degenerate() {
+        // All mass on one value of D=2: ‖(1,0) − (.5,.5)‖₂ = √0.5
+        let mut m = MarginalEstimator::new(1, 2);
+        for _ in 0..10 {
+            m.update(&[0]);
+        }
+        assert!((m.l2_error_vs_uniform() - 0.5f64.sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn error_vs_reference() {
+        let mut m = MarginalEstimator::new(1, 2);
+        m.update(&[0]);
+        m.update(&[0]);
+        m.update(&[1]);
+        let reference = vec![vec![2.0 / 3.0, 1.0 / 3.0]];
+        assert!(m.l2_error_vs(&reference) < 1e-12);
+    }
+
+    #[test]
+    fn reset_clears() {
+        let mut m = MarginalEstimator::new(2, 2);
+        m.update(&[1, 1]);
+        m.reset();
+        assert_eq!(m.samples(), 0);
+        assert_eq!(m.marginal(0)[1], 0.0);
+    }
+}

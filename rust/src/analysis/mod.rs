@@ -1,0 +1,199 @@
+//! Chain analysis: exact enumeration, transition matrices, spectral gaps,
+//! and convergence diagnostics.
+//!
+//! For models with enumerable state spaces (D^n small) this module builds
+//! the *exact* objects the paper's theorems talk about — π, T, and the
+//! spectral gap γ — so Theorems 2/4/6 can be validated numerically rather
+//! than just cited.
+
+pub mod diagnostics;
+pub mod marginals;
+pub mod spectral;
+pub mod transition;
+
+pub use marginals::MarginalEstimator;
+pub use spectral::{spectral_gap, spectral_gap_reversible};
+pub use transition::{gibbs_transition_matrix, mgpmh_transition_matrix};
+
+use crate::graph::FactorGraph;
+
+/// Enumerable state space {0,..,D-1}^n with index ↔ state conversion.
+///
+/// States are numbered with variable 0 as the most significant digit.
+#[derive(Clone, Copy, Debug)]
+pub struct StateSpace {
+    n: usize,
+    d: usize,
+    size: usize,
+}
+
+impl StateSpace {
+    /// Create; panics if D^n overflows or exceeds 2^24 (enumeration guard).
+    pub fn new(n: usize, d: usize) -> Self {
+        let size = d
+            .checked_pow(n as u32)
+            .filter(|&s| s <= (1 << 24))
+            .expect("state space too large to enumerate");
+        Self { n, d, size }
+    }
+
+    /// For a factor graph (n variables, domain D).
+    pub fn for_graph(g: &FactorGraph) -> Self {
+        Self::new(g.n(), g.domain_size() as usize)
+    }
+
+    /// Number of states D^n.
+    pub fn len(&self) -> usize {
+        self.size
+    }
+
+    /// True iff the space is empty (never: n ≥ 1, D ≥ 2).
+    pub fn is_empty(&self) -> bool {
+        self.size == 0
+    }
+
+    /// Decode index → state vector.
+    pub fn state(&self, mut idx: usize) -> Vec<u16> {
+        let mut s = vec![0u16; self.n];
+        for i in (0..self.n).rev() {
+            s[i] = (idx % self.d) as u16;
+            idx /= self.d;
+        }
+        s
+    }
+
+    /// Encode state vector → index.
+    pub fn index(&self, state: &[u16]) -> usize {
+        state
+            .iter()
+            .fold(0usize, |acc, &v| acc * self.d + v as usize)
+    }
+
+    /// The index obtained from `idx` by setting variable `i` to `u`.
+    pub fn with_value(&self, idx: usize, i: usize, u: usize) -> usize {
+        let place = self.d.pow((self.n - 1 - i) as u32);
+        let cur = (idx / place) % self.d;
+        idx + (u - cur).wrapping_mul(place)
+    }
+}
+
+/// Exact Gibbs measure π(x) ∝ exp(ζ(x)) by full enumeration.
+pub fn exact_distribution(g: &FactorGraph) -> Vec<f64> {
+    let space = StateSpace::for_graph(g);
+    let mut log_w: Vec<f64> = (0..space.len())
+        .map(|idx| g.total_energy(&space.state(idx)))
+        .collect();
+    let max = log_w.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let mut z = 0.0;
+    for w in log_w.iter_mut() {
+        *w = (*w - max).exp();
+        z += *w;
+    }
+    for w in log_w.iter_mut() {
+        *w /= z;
+    }
+    log_w
+}
+
+/// Exact per-variable marginals under π.
+pub fn exact_marginals(g: &FactorGraph) -> Vec<Vec<f64>> {
+    let space = StateSpace::for_graph(g);
+    let pi = exact_distribution(g);
+    let d = g.domain_size() as usize;
+    let mut marg = vec![vec![0.0f64; d]; g.n()];
+    for (idx, &p) in pi.iter().enumerate() {
+        let s = space.state(idx);
+        for (i, &v) in s.iter().enumerate() {
+            marg[i][v as usize] += p;
+        }
+    }
+    marg
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{models, FactorGraphBuilder};
+
+    #[test]
+    fn state_space_roundtrip() {
+        let space = StateSpace::new(3, 4);
+        assert_eq!(space.len(), 64);
+        for idx in 0..space.len() {
+            let s = space.state(idx);
+            assert_eq!(space.index(&s), idx);
+        }
+    }
+
+    #[test]
+    fn with_value_consistent() {
+        let space = StateSpace::new(4, 3);
+        for idx in [0usize, 5, 17, 80] {
+            for i in 0..4 {
+                for u in 0..3 {
+                    let j = space.with_value(idx, i, u);
+                    let mut s = space.state(idx);
+                    s[i] = u as u16;
+                    assert_eq!(j, space.index(&s));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn exact_distribution_normalizes() {
+        let g = models::tiny_random(4, 3, 1.0, 2);
+        let pi = exact_distribution(&g);
+        let sum: f64 = pi.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-12);
+        assert!(pi.iter().all(|&p| p > 0.0));
+    }
+
+    #[test]
+    fn exact_distribution_single_pair() {
+        // Two vars, one factor w·δ: P(agree) = D e^w / (D e^w + D(D−1)).
+        let w = 0.9f64;
+        let mut b = FactorGraphBuilder::new(2, 3);
+        b.add_potts_pair(0, 1, w);
+        let g = b.build();
+        let space = StateSpace::for_graph(&g);
+        let pi = exact_distribution(&g);
+        let agree: f64 = (0..space.len())
+            .filter(|&idx| {
+                let s = space.state(idx);
+                s[0] == s[1]
+            })
+            .map(|idx| pi[idx])
+            .sum();
+        let want = 3.0 * w.exp() / (3.0 * w.exp() + 6.0);
+        assert!((agree - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn exact_marginals_sum_to_one() {
+        let g = models::tiny_random(3, 4, 0.8, 3);
+        let marg = exact_marginals(&g);
+        for row in &marg {
+            let s: f64 = row.iter().sum();
+            assert!((s - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn symmetric_model_uniform_marginals() {
+        // A pure Potts model is value-symmetric: every marginal uniform.
+        let g = models::tiny_random(4, 3, 1.0, 4);
+        let marg = exact_marginals(&g);
+        for row in &marg {
+            for &p in row {
+                assert!((p - 1.0 / 3.0).abs() < 1e-12, "{row:?}");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "too large")]
+    fn rejects_huge_space() {
+        StateSpace::new(30, 10);
+    }
+}

@@ -1,0 +1,166 @@
+//! Spectral gap computation for reversible chains (Definition 3).
+//!
+//! A reversible T with stationary π is similar to the symmetric matrix
+//! S = D^{1/2} T D^{−1/2} (D = diag(π)), so its eigenvalues are real and
+//! computable with the cyclic Jacobi method. The spectral gap is
+//! γ = λ₁ − λ₂ = 1 − λ₂.
+
+/// Eigenvalues of a dense symmetric matrix via cyclic Jacobi rotations,
+/// returned in descending order. `a` is consumed as scratch.
+pub fn jacobi_eigenvalues(mut a: Vec<Vec<f64>>) -> Vec<f64> {
+    let n = a.len();
+    assert!(n > 0 && a.iter().all(|r| r.len() == n), "matrix must be square");
+    let off = |a: &Vec<Vec<f64>>| -> f64 {
+        let mut s = 0.0;
+        for i in 0..n {
+            for j in 0..n {
+                if i != j {
+                    s += a[i][j] * a[i][j];
+                }
+            }
+        }
+        s
+    };
+    let mut sweeps = 0;
+    while off(&a) > 1e-22 && sweeps < 200 {
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = a[p][q];
+                if apq.abs() < 1e-300 {
+                    continue;
+                }
+                let app = a[p][p];
+                let aqq = a[q][q];
+                let theta = (aqq - app) / (2.0 * apq);
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                // rotate rows/cols p and q
+                for k in 0..n {
+                    let akp = a[k][p];
+                    let akq = a[k][q];
+                    a[k][p] = c * akp - s * akq;
+                    a[k][q] = s * akp + c * akq;
+                }
+                for k in 0..n {
+                    let apk = a[p][k];
+                    let aqk = a[q][k];
+                    a[p][k] = c * apk - s * aqk;
+                    a[q][k] = s * apk + c * aqk;
+                }
+            }
+        }
+        sweeps += 1;
+    }
+    let mut eig: Vec<f64> = (0..n).map(|i| a[i][i]).collect();
+    eig.sort_by(|x, y| y.partial_cmp(x).unwrap());
+    eig
+}
+
+/// Spectral gap γ = 1 − λ₂ of a reversible row-stochastic `t` with
+/// stationary distribution `pi`. Panics if the chain is detectably
+/// non-reversible (detailed-balance violation > 1e-7).
+pub fn spectral_gap_reversible(t: &[Vec<f64>], pi: &[f64]) -> f64 {
+    let viol = super::transition::reversibility_violation(t, pi);
+    assert!(
+        viol < 1e-7,
+        "chain is not reversible (violation {viol}); spectral gap undefined"
+    );
+    let n = t.len();
+    let mut s = vec![vec![0.0f64; n]; n];
+    for i in 0..n {
+        for j in 0..n {
+            // S_ij = sqrt(pi_i / pi_j) T_ij; symmetrize vs the transpose
+            // entry to kill roundoff asymmetry.
+            let sij = (pi[i] / pi[j]).sqrt() * t[i][j];
+            let sji = (pi[j] / pi[i]).sqrt() * t[j][i];
+            s[i][j] = 0.5 * (sij + sji);
+        }
+    }
+    let eig = jacobi_eigenvalues(s);
+    debug_assert!((eig[0] - 1.0).abs() < 1e-6, "λ₁ = {} != 1", eig[0]);
+    1.0 - eig[1]
+}
+
+/// Convenience: compute π by enumeration and return the gap.
+pub fn spectral_gap(g: &crate::graph::FactorGraph, t: &[Vec<f64>]) -> f64 {
+    let pi = super::exact_distribution(g);
+    spectral_gap_reversible(t, &pi)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::{exact_distribution, gibbs_transition_matrix};
+    use crate::graph::models;
+
+    #[test]
+    fn jacobi_diag_matrix() {
+        let a = vec![
+            vec![3.0, 0.0, 0.0],
+            vec![0.0, -1.0, 0.0],
+            vec![0.0, 0.0, 2.0],
+        ];
+        let eig = jacobi_eigenvalues(a);
+        assert!((eig[0] - 3.0).abs() < 1e-12);
+        assert!((eig[1] - 2.0).abs() < 1e-12);
+        assert!((eig[2] + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn jacobi_known_2x2() {
+        // [[2,1],[1,2]] -> eigenvalues 3, 1
+        let eig = jacobi_eigenvalues(vec![vec![2.0, 1.0], vec![1.0, 2.0]]);
+        assert!((eig[0] - 3.0).abs() < 1e-12);
+        assert!((eig[1] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn jacobi_trace_preserved() {
+        // random symmetric 6x6: eigenvalue sum = trace
+        use crate::rng::{Pcg64, Rng};
+        let mut rng = Pcg64::seeded(101);
+        let n = 6;
+        let mut a = vec![vec![0.0f64; n]; n];
+        for i in 0..n {
+            for j in i..n {
+                let v = rng.f64() - 0.5;
+                a[i][j] = v;
+                a[j][i] = v;
+            }
+        }
+        let trace: f64 = (0..n).map(|i| a[i][i]).sum();
+        let eig = jacobi_eigenvalues(a);
+        let sum: f64 = eig.iter().sum();
+        assert!((sum - trace).abs() < 1e-9);
+    }
+
+    #[test]
+    fn two_state_chain_gap() {
+        // T = [[1-p, p], [q, 1-q]]: eigenvalues 1 and 1-p-q; gap = p+q.
+        let (p, q) = (0.3, 0.2);
+        let t = vec![vec![1.0 - p, p], vec![q, 1.0 - q]];
+        let pi = vec![q / (p + q), p / (p + q)];
+        let gap = spectral_gap_reversible(&t, &pi);
+        assert!((gap - (p + q)).abs() < 1e-10, "gap = {gap}");
+    }
+
+    #[test]
+    fn gibbs_gap_positive_and_at_most_one() {
+        let g = models::tiny_random(3, 2, 0.8, 102);
+        let t = gibbs_transition_matrix(&g);
+        let pi = exact_distribution(&g);
+        let gap = spectral_gap_reversible(&t, &pi);
+        assert!(gap > 0.0 && gap <= 1.0 + 1e-9, "gap = {gap}");
+    }
+
+    #[test]
+    fn stronger_interactions_shrink_gap() {
+        // Higher β couples variables more strongly -> slower mixing.
+        let weak = models::tiny_random(3, 2, 0.2, 103);
+        let strong = models::tiny_random(3, 2, 2.5, 103); // same topology, scaled weights
+        let gw = spectral_gap(&weak, &gibbs_transition_matrix(&weak));
+        let gs = spectral_gap(&strong, &gibbs_transition_matrix(&strong));
+        assert!(gs < gw, "strong {gs} !< weak {gw}");
+    }
+}

@@ -1,0 +1,277 @@
+//! Exact transition matrices for enumerable models.
+//!
+//! These are the objects Theorems 2–6 make claims about. For vanilla Gibbs
+//! the matrix is exact; for MGPMH the expectation over the Poisson
+//! minibatch coefficients is taken by enumerating s-vectors up to a
+//! truncation point whose leftover probability mass is provably below
+//! `1e-10` (rows are then closed by assigning the remainder to the
+//! diagonal, which can only *shrink* the computed spectral gap — so the
+//! theorem checks remain conservative).
+
+use crate::graph::FactorGraph;
+use crate::rng::special::ln_factorial;
+
+use super::StateSpace;
+
+/// Exact transition matrix of vanilla Gibbs (Algorithm 1), row-stochastic.
+pub fn gibbs_transition_matrix(g: &FactorGraph) -> Vec<Vec<f64>> {
+    let space = StateSpace::for_graph(g);
+    let n = g.n();
+    let d = g.domain_size() as usize;
+    let size = space.len();
+    let mut t = vec![vec![0.0f64; size]; size];
+    let mut eps = vec![0.0f64; d];
+    for idx in 0..size {
+        let mut state = space.state(idx);
+        for i in 0..n {
+            g.cond_energies_generic(&mut state, i, &mut eps);
+            let max = eps.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            let z: f64 = eps.iter().map(|&e| (e - max).exp()).sum();
+            for u in 0..d {
+                let p = (eps[u] - max).exp() / z;
+                let jdx = space.with_value(idx, i, u);
+                t[idx][jdx] += p / n as f64;
+            }
+        }
+    }
+    t
+}
+
+/// Poisson pmf values 0..=k_max for rate `lam`, plus leftover tail mass.
+fn poisson_pmf_truncated(lam: f64, k_max: usize) -> (Vec<f64>, f64) {
+    let mut pmf = Vec::with_capacity(k_max + 1);
+    let mut total = 0.0;
+    for k in 0..=k_max {
+        let lp = if lam == 0.0 {
+            if k == 0 {
+                0.0
+            } else {
+                f64::NEG_INFINITY
+            }
+        } else {
+            k as f64 * lam.ln() - lam - ln_factorial(k as u64)
+        };
+        let p = lp.exp();
+        pmf.push(p);
+        total += p;
+    }
+    (pmf, 1.0 - total)
+}
+
+/// Exact (to truncation ≤ 1e-10 per factor) transition matrix of MGPMH
+/// (Algorithm 4) with average batch size `lambda`.
+///
+/// Cost is |Ω| · n · Π_{φ∈A[i]} (k_max+1), so this is only for tiny
+/// graphs (Δ ≤ 4 or so).
+pub fn mgpmh_transition_matrix(g: &FactorGraph, lambda: f64) -> Vec<Vec<f64>> {
+    let space = StateSpace::for_graph(g);
+    let n = g.n();
+    let d = g.domain_size() as usize;
+    let size = space.len();
+    let l = g.stats().l;
+
+    let mut t = vec![vec![0.0f64; size]; size];
+    for i in 0..n {
+        let factors: Vec<usize> = g.factors_of(i).iter().map(|&f| f as usize).collect();
+        let delta_i = factors.len();
+        assert!(delta_i <= 6, "enumeration explodes beyond Δ = 6");
+        // Per-factor truncated Poisson pmfs.
+        let mut pmfs = Vec::with_capacity(delta_i);
+        for &fid in &factors {
+            let rate = lambda * g.max_energy(fid) / l;
+            // k_max: generous bound making tail < 1e-12 for small rates.
+            let k_max = (8.0 + 6.0 * rate).ceil() as usize;
+            let (pmf, tail) = poisson_pmf_truncated(rate, k_max);
+            assert!(tail < 1e-10, "tail mass {tail} too large");
+            pmfs.push(pmf);
+        }
+        // Enumerate all s-vectors via mixed-radix counting.
+        let mut s_vec = vec![0usize; delta_i];
+        loop {
+            // probability of this s-vector
+            let ps: f64 = s_vec
+                .iter()
+                .zip(pmfs.iter())
+                .map(|(&s, pmf)| pmf[s])
+                .product();
+            if ps > 0.0 {
+                accumulate_mgpmh_for_s(
+                    g, &space, i, &factors, &s_vec, lambda, l, ps, d, &mut t,
+                );
+            }
+            // increment mixed-radix counter
+            let mut pos = 0;
+            loop {
+                if pos == delta_i {
+                    break;
+                }
+                s_vec[pos] += 1;
+                if s_vec[pos] < pmfs[pos].len() {
+                    break;
+                }
+                s_vec[pos] = 0;
+                pos += 1;
+            }
+            if pos == delta_i {
+                break;
+            }
+        }
+    }
+    // Close rows: diagonal gets the remaining mass (variable-choice 1/n is
+    // folded in by accumulate; truncation leftovers land here too).
+    for (idx, row) in t.iter_mut().enumerate() {
+        let off: f64 = row
+            .iter()
+            .enumerate()
+            .filter(|&(j, _)| j != idx)
+            .map(|(_, &v)| v)
+            .sum();
+        row[idx] = 1.0 - off;
+    }
+    t
+}
+
+#[allow(clippy::too_many_arguments)]
+fn accumulate_mgpmh_for_s(
+    g: &FactorGraph,
+    space: &StateSpace,
+    i: usize,
+    factors: &[usize],
+    s_vec: &[usize],
+    lambda: f64,
+    l: f64,
+    ps: f64,
+    d: usize,
+    t: &mut [Vec<f64>],
+) {
+    let n = g.n();
+    for idx in 0..space.len() {
+        let mut state = space.state(idx);
+        let cur = state[i] as usize;
+        // proposal energies ε_u for this s-vector
+        let mut eps = vec![0.0f64; d];
+        for (u, slot) in eps.iter_mut().enumerate() {
+            state[i] = u as u16;
+            let mut sum = 0.0;
+            for (&fid, &s) in factors.iter().zip(s_vec.iter()) {
+                if s > 0 {
+                    let m = g.max_energy(fid);
+                    sum += (s as f64) * l / (lambda * m) * g.value(fid, &state);
+                }
+            }
+            *slot = sum;
+        }
+        let max = eps.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let z: f64 = eps.iter().map(|&e| (e - max).exp()).sum();
+
+        // local energies for acceptance
+        state[i] = cur as u16;
+        let local_x: f64 = factors.iter().map(|&f| g.value(f, &state)).sum();
+        for v in 0..d {
+            if v == cur {
+                continue; // self-proposal handled by row closing
+            }
+            state[i] = v as u16;
+            let local_y: f64 = factors.iter().map(|&f| g.value(f, &state)).sum();
+            let psi_v = (eps[v] - max).exp() / z;
+            let a = ((local_y - local_x) + (eps[cur] - eps[v])).exp().min(1.0);
+            let jdx = space.with_value(idx, i, v);
+            t[idx][jdx] += ps * psi_v * a / n as f64;
+        }
+        state[i] = cur as u16;
+    }
+}
+
+/// Verify detailed balance π(x)T(x,y) = π(y)T(y,x); returns the max
+/// violation.
+pub fn reversibility_violation(t: &[Vec<f64>], pi: &[f64]) -> f64 {
+    let mut worst = 0.0f64;
+    for (x, row) in t.iter().enumerate() {
+        for (y, &txy) in row.iter().enumerate() {
+            let flow_xy = pi[x] * txy;
+            let flow_yx = pi[y] * t[y][x];
+            worst = worst.max((flow_xy - flow_yx).abs());
+        }
+    }
+    worst
+}
+
+/// Max |πT − π| entry: stationarity check.
+pub fn stationarity_violation(t: &[Vec<f64>], pi: &[f64]) -> f64 {
+    let size = pi.len();
+    let mut worst = 0.0f64;
+    for y in 0..size {
+        let mut acc = 0.0;
+        for x in 0..size {
+            acc += pi[x] * t[x][y];
+        }
+        worst = worst.max((acc - pi[y]).abs());
+    }
+    worst
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::exact_distribution;
+    use crate::graph::models;
+
+    fn rows_stochastic(t: &[Vec<f64>]) {
+        for row in t {
+            let s: f64 = row.iter().sum();
+            assert!((s - 1.0).abs() < 1e-9, "row sum {s}");
+            assert!(row.iter().all(|&v| v >= -1e-12));
+        }
+    }
+
+    #[test]
+    fn gibbs_matrix_stochastic_and_reversible() {
+        let g = models::tiny_random(3, 3, 0.8, 91);
+        let t = gibbs_transition_matrix(&g);
+        rows_stochastic(&t);
+        let pi = exact_distribution(&g);
+        assert!(reversibility_violation(&t, &pi) < 1e-12);
+        assert!(stationarity_violation(&t, &pi) < 1e-12);
+    }
+
+    #[test]
+    fn mgpmh_matrix_stochastic_reversible_stationary() {
+        // Theorem 3 numerically: MGPMH is reversible wrt π.
+        let g = models::tiny_random(3, 2, 0.6, 92);
+        let t = mgpmh_transition_matrix(&g, 2.0);
+        rows_stochastic(&t);
+        let pi = exact_distribution(&g);
+        assert!(
+            reversibility_violation(&t, &pi) < 1e-8,
+            "violation = {}",
+            reversibility_violation(&t, &pi)
+        );
+        assert!(stationarity_violation(&t, &pi) < 1e-8);
+    }
+
+    #[test]
+    fn mgpmh_approaches_gibbs_for_large_lambda() {
+        let g = models::tiny_random(3, 2, 0.5, 93);
+        let tg = gibbs_transition_matrix(&g);
+        let tm = mgpmh_transition_matrix(&g, 60.0);
+        let mut worst = 0.0f64;
+        for (rg, rm) in tg.iter().zip(tm.iter()) {
+            for (a, b) in rg.iter().zip(rm.iter()) {
+                worst = worst.max((a - b).abs());
+            }
+        }
+        assert!(worst < 0.05, "max entry diff {worst}");
+    }
+
+    #[test]
+    fn poisson_pmf_truncation() {
+        let (pmf, tail) = poisson_pmf_truncated(1.5, 30);
+        assert!((pmf.iter().sum::<f64>() + tail - 1.0).abs() < 1e-12);
+        assert!(tail < 1e-12);
+        // zero rate: point mass at 0
+        let (pmf, tail) = poisson_pmf_truncated(0.0, 5);
+        assert_eq!(pmf[0], 1.0);
+        assert!(pmf[1..].iter().all(|&p| p == 0.0));
+        assert!(tail.abs() < 1e-12);
+    }
+}

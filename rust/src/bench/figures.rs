@@ -1,0 +1,146 @@
+//! Figure regeneration: run a sampler lineup on a model and emit the
+//! paper's convergence trajectories as one table (iteration × sampler).
+
+use std::path::Path;
+
+use crate::coordinator::{run_chains, RunSpec};
+use crate::graph::models::DenseModel;
+
+use super::report::Table;
+use super::workload::SamplerSpec;
+
+/// Parameters for one figure run.
+#[derive(Clone, Copy, Debug)]
+pub struct FigureParams {
+    /// Iterations per sampler (paper: 10⁶).
+    pub iters: u64,
+    /// Checkpoint cadence for the error trajectory.
+    pub record_every: u64,
+    /// Master seed.
+    pub seed: u64,
+}
+
+impl Default for FigureParams {
+    fn default() -> Self {
+        Self {
+            iters: 1_000_000,
+            record_every: 10_000,
+            seed: 42,
+        }
+    }
+}
+
+impl FigureParams {
+    /// A fast smoke profile (CI-sized).
+    pub fn quick() -> Self {
+        Self {
+            iters: 50_000,
+            record_every: 2_000,
+            seed: 42,
+        }
+    }
+}
+
+/// Run every sampler in `specs` on `model` and return the trajectory table
+/// (`iteration`, one error column per sampler) plus a summary table.
+pub fn run_figure(
+    title: &str,
+    model: &DenseModel,
+    specs: &[SamplerSpec],
+    params: &FigureParams,
+) -> (Table, Table) {
+    let g = &model.graph;
+    let mut columns: Vec<(String, Vec<(u64, f64)>)> = Vec::new();
+    let mut summary = Table::new(
+        &format!("{title} summary"),
+        &[
+            "sampler",
+            "final_l2_error",
+            "evals_per_iter",
+            "steps_per_sec",
+            "acceptance",
+        ],
+    );
+    for spec in specs {
+        let mut run = RunSpec::new(*spec);
+        run.iters = params.iters;
+        run.record_every = params.record_every;
+        run.seed = params.seed;
+        let report = run_chains(g, &run);
+        let chain = &report.chains[0];
+        summary.push_row(vec![
+            spec.label(g),
+            format!("{:.5}", chain.final_error),
+            format!("{:.1}", report.evals_per_iter),
+            format!("{:.0}", report.steps_per_sec),
+            format!("{:.3}", chain.acceptance),
+        ]);
+        columns.push((spec.label(g), chain.trajectory.clone()));
+    }
+
+    // Assemble the trajectory table on the shared checkpoint grid.
+    let mut headers = vec!["iteration".to_string()];
+    headers.extend(columns.iter().map(|(l, _)| l.clone()));
+    let mut traj = Table::new(
+        title,
+        &headers.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
+    );
+    let rows = columns.iter().map(|(_, t)| t.len()).min().unwrap_or(0);
+    for r in 0..rows {
+        let iter = columns[0].1[r].0;
+        let mut cells = vec![iter.to_string()];
+        for (_, t) in &columns {
+            cells.push(format!("{:.6}", t[r].1));
+        }
+        traj.push_row(cells);
+    }
+    (traj, summary)
+}
+
+/// Run a figure and emit both tables to stdout + CSV under `out`.
+pub fn emit_figure(
+    title: &str,
+    model: &DenseModel,
+    specs: &[SamplerSpec],
+    params: &FigureParams,
+    out: &Path,
+) -> std::io::Result<()> {
+    let (traj, summary) = run_figure(title, model, specs, params);
+    println!("{}", summary.render());
+    summary.write_csv(out)?;
+    let path = traj.write_csv(out)?;
+    println!("(trajectories: {})", path.display());
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::models;
+    use crate::samplers::EnergyPath;
+
+    #[test]
+    fn figure_tables_have_shared_grid() {
+        // Tiny stand-in model so the test is fast; the real figures use
+        // the paper models via the workload module.
+        let m = models::potts_rbf(3, 10, 1.0, 1.5);
+        let specs = [
+            SamplerSpec::Gibbs(EnergyPath::Specialized),
+            SamplerSpec::Mgpmh { lambda: 4.0 },
+        ];
+        let params = FigureParams {
+            iters: 2_000,
+            record_every: 500,
+            seed: 1,
+        };
+        let (traj, summary) = run_figure("test fig", &m, &specs, &params);
+        assert_eq!(traj.headers.len(), 3);
+        assert!(traj.rows.len() >= 4);
+        assert_eq!(summary.rows.len(), 2);
+        // Errors must be finite and decreasing-ish from the degenerate
+        // all-zeros start (first checkpoint > last checkpoint).
+        let first: f64 = traj.rows[0][1].parse().unwrap();
+        let last: f64 = traj.rows.last().unwrap()[1].parse().unwrap();
+        assert!(first >= last, "error should shrink: {first} -> {last}");
+    }
+}

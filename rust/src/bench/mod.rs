@@ -1,0 +1,17 @@
+//! Benchmark harness (criterion is not in the offline dependency set, so
+//! the harness is first-party; `cargo bench` targets call into it with
+//! `harness = false`).
+//!
+//! Pieces: [`timer`] measures; [`stats`] summarizes (median/MAD/CI);
+//! [`workload`] builds the paper's models and sweeps; [`report`] renders
+//! aligned tables and CSV files under `bench_out/`.
+
+pub mod figures;
+pub mod report;
+pub mod stats;
+pub mod timer;
+pub mod workload;
+
+pub use report::{Report, Table};
+pub use stats::{summarize, Summary};
+pub use timer::{bench_iter, BenchConfig};

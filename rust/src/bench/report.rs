@@ -1,0 +1,167 @@
+//! Table rendering and CSV output for the benchmark harness.
+
+use std::fmt::Write as _;
+use std::io::Write as _;
+use std::path::Path;
+
+/// A simple column-aligned table.
+#[derive(Clone, Debug)]
+pub struct Table {
+    /// Table title (used as CSV filename stem and markdown heading).
+    pub title: String,
+    /// Column headers.
+    pub headers: Vec<String>,
+    /// Rows of stringified cells.
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    /// New empty table.
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Self {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Append a row (must match header arity).
+    pub fn push_row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    /// Render as an aligned text/markdown table.
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (c, cell) in row.iter().enumerate() {
+                widths[c] = widths[c].max(cell.len());
+            }
+        }
+        let mut out = String::new();
+        let _ = writeln!(out, "## {}", self.title);
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::from("|");
+            for c in 0..ncol {
+                let _ = write!(line, " {:w$} |", cells[c], w = widths[c]);
+            }
+            line
+        };
+        let _ = writeln!(out, "{}", fmt_row(&self.headers, &widths));
+        let mut sep = String::from("|");
+        for w in &widths {
+            let _ = write!(sep, "{}|", "-".repeat(w + 2));
+        }
+        let _ = writeln!(out, "{sep}");
+        for row in &self.rows {
+            let _ = writeln!(out, "{}", fmt_row(row, &widths));
+        }
+        out
+    }
+
+    /// Write as CSV to `dir/<title>.csv` (title slugified).
+    pub fn write_csv(&self, dir: &Path) -> std::io::Result<std::path::PathBuf> {
+        std::fs::create_dir_all(dir)?;
+        let slug: String = self
+            .title
+            .chars()
+            .map(|c| if c.is_alphanumeric() { c.to_ascii_lowercase() } else { '_' })
+            .collect();
+        let path = dir.join(format!("{slug}.csv"));
+        let mut f = std::fs::File::create(&path)?;
+        writeln!(f, "{}", self.headers.join(","))?;
+        for row in &self.rows {
+            writeln!(f, "{}", row.join(","))?;
+        }
+        Ok(path)
+    }
+}
+
+/// A collection of tables making up one benchmark run's output.
+#[derive(Clone, Debug, Default)]
+pub struct Report {
+    /// Tables in presentation order.
+    pub tables: Vec<Table>,
+}
+
+impl Report {
+    /// New empty report.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add a table.
+    pub fn push(&mut self, t: Table) {
+        self.tables.push(t);
+    }
+
+    /// Print all tables to stdout and write CSVs under `dir`.
+    pub fn emit(&self, dir: &Path) -> std::io::Result<()> {
+        for t in &self.tables {
+            println!("{}", t.render());
+            let path = t.write_csv(dir)?;
+            println!("(csv: {})\n", path.display());
+        }
+        Ok(())
+    }
+}
+
+/// Format seconds human-readably (ns/µs/ms/s).
+pub fn fmt_seconds(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1} ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2} µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2} ms", s * 1e3)
+    } else {
+        format!("{s:.3} s")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_aligns() {
+        let mut t = Table::new("demo", &["alg", "cost"]);
+        t.push_row(vec!["gibbs".into(), "1.0".into()]);
+        t.push_row(vec!["mgpmh-long-name".into(), "2".into()]);
+        let r = t.render();
+        assert!(r.contains("## demo"));
+        assert!(r.lines().count() >= 4);
+        // all data lines same width
+        let widths: Vec<usize> = r.lines().skip(1).map(|l| l.len()).collect();
+        assert!(widths.windows(2).all(|w| w[0] == w[1]));
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn rejects_bad_row() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.push_row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let dir = std::env::temp_dir().join("mbgibbs_test_csv");
+        let mut t = Table::new("My Table 1", &["a", "b"]);
+        t.push_row(vec!["1".into(), "2".into()]);
+        let path = t.write_csv(&dir).unwrap();
+        let content = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(content, "a,b\n1,2\n");
+        assert!(path.file_name().unwrap().to_str().unwrap().starts_with("my_table_1"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn human_times() {
+        assert!(fmt_seconds(3e-9).contains("ns"));
+        assert!(fmt_seconds(3e-6).contains("µs"));
+        assert!(fmt_seconds(3e-3).contains("ms"));
+        assert!(fmt_seconds(3.0).contains(" s"));
+    }
+}

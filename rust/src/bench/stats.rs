@@ -1,0 +1,92 @@
+//! Summary statistics for benchmark samples.
+
+/// Robust summary of a sample of measurements.
+#[derive(Clone, Copy, Debug)]
+pub struct Summary {
+    /// Number of samples.
+    pub n: usize,
+    /// Arithmetic mean.
+    pub mean: f64,
+    /// Median (50th percentile).
+    pub median: f64,
+    /// Sample standard deviation.
+    pub stddev: f64,
+    /// Median absolute deviation (scaled by 1.4826 for normal consistency).
+    pub mad: f64,
+    /// Minimum.
+    pub min: f64,
+    /// Maximum.
+    pub max: f64,
+}
+
+/// Compute a [`Summary`]; panics on empty input.
+pub fn summarize(samples: &[f64]) -> Summary {
+    assert!(!samples.is_empty(), "no samples");
+    let n = samples.len();
+    let mean = samples.iter().sum::<f64>() / n as f64;
+    let var = if n > 1 {
+        samples.iter().map(|&x| (x - mean) * (x - mean)).sum::<f64>() / (n - 1) as f64
+    } else {
+        0.0
+    };
+    let mut sorted = samples.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = percentile_sorted(&sorted, 0.5);
+    let mut devs: Vec<f64> = sorted.iter().map(|&x| (x - median).abs()).collect();
+    devs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mad = 1.4826 * percentile_sorted(&devs, 0.5);
+    Summary {
+        n,
+        mean,
+        median,
+        stddev: var.sqrt(),
+        mad,
+        min: sorted[0],
+        max: sorted[n - 1],
+    }
+}
+
+/// Linear-interpolated percentile of pre-sorted data, q in [0,1].
+pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
+    let n = sorted.len();
+    if n == 1 {
+        return sorted[0];
+    }
+    let pos = q.clamp(0.0, 1.0) * (n - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    let frac = pos - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basic() {
+        let s = summarize(&[1.0, 2.0, 3.0, 4.0, 100.0]);
+        assert_eq!(s.n, 5);
+        assert_eq!(s.median, 3.0);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 100.0);
+        assert!((s.mean - 22.0).abs() < 1e-12);
+        // MAD robust to the outlier
+        assert!(s.mad < 3.0, "mad = {}", s.mad);
+    }
+
+    #[test]
+    fn percentiles() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile_sorted(&xs, 0.0), 1.0);
+        assert_eq!(percentile_sorted(&xs, 1.0), 4.0);
+        assert!((percentile_sorted(&xs, 0.5) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn single_sample() {
+        let s = summarize(&[7.0]);
+        assert_eq!(s.median, 7.0);
+        assert_eq!(s.stddev, 0.0);
+    }
+}

@@ -1,0 +1,92 @@
+//! Measurement loop: warmup, batched timing, per-iteration costs.
+
+use std::time::Instant;
+
+use super::stats::{summarize, Summary};
+
+/// How a benchmark runs.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchConfig {
+    /// Warmup iterations (not measured).
+    pub warmup_iters: u64,
+    /// Iterations per timed batch.
+    pub batch_iters: u64,
+    /// Number of timed batches (= number of samples in the summary).
+    pub batches: usize,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        Self {
+            warmup_iters: 1_000,
+            batch_iters: 10_000,
+            batches: 20,
+        }
+    }
+}
+
+impl BenchConfig {
+    /// A quick profile for expensive benchmarks.
+    pub fn quick() -> Self {
+        Self {
+            warmup_iters: 200,
+            batch_iters: 2_000,
+            batches: 8,
+        }
+    }
+}
+
+/// Benchmark a per-iteration closure; returns per-iteration seconds.
+///
+/// `f` is called once per iteration with the iteration index; batching
+/// amortizes timer overhead.
+pub fn bench_iter<F: FnMut(u64)>(cfg: &BenchConfig, mut f: F) -> Summary {
+    for i in 0..cfg.warmup_iters {
+        f(i);
+    }
+    let mut samples = Vec::with_capacity(cfg.batches);
+    let mut iter = cfg.warmup_iters;
+    for _ in 0..cfg.batches {
+        let start = Instant::now();
+        for _ in 0..cfg.batch_iters {
+            f(iter);
+            iter += 1;
+        }
+        let dt = start.elapsed().as_secs_f64();
+        samples.push(dt / cfg.batch_iters as f64);
+    }
+    summarize(&samples)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        let cfg = BenchConfig {
+            warmup_iters: 10,
+            batch_iters: 1000,
+            batches: 5,
+        };
+        let mut acc = 0u64;
+        let s = bench_iter(&cfg, |i| {
+            acc = acc.wrapping_add(i).rotate_left(7);
+        });
+        assert_eq!(s.n, 5);
+        assert!(s.median > 0.0);
+        assert!(acc != 0); // keep the work observable
+    }
+
+    #[test]
+    fn iteration_indices_continue_across_batches() {
+        let cfg = BenchConfig {
+            warmup_iters: 3,
+            batch_iters: 10,
+            batches: 2,
+        };
+        let mut max_seen = 0;
+        bench_iter(&cfg, |i| max_seen = max_seen.max(i));
+        assert_eq!(max_seen, 3 + 20 - 1);
+    }
+}

@@ -1,0 +1,212 @@
+//! Workload construction for the paper's experiments.
+//!
+//! Each experiment in DESIGN.md's index maps to one function here; the
+//! `cargo bench` targets and the CLI subcommands both call these so there
+//! is a single source of truth for the parameters.
+
+use crate::graph::models::{self, DenseModel};
+use crate::graph::FactorGraph;
+use crate::samplers::{
+    DoubleMinGibbsSampler, EnergyPath, GibbsSampler, LocalMinibatchSampler, MgpmhSampler,
+    MinGibbsSampler, Sampler,
+};
+
+/// Which sampler to construct, with its batch parameters.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum SamplerSpec {
+    /// Vanilla Gibbs (Algorithm 1) with the given evaluation path.
+    Gibbs(EnergyPath),
+    /// MIN-Gibbs (Algorithm 2) with global expected batch λ.
+    MinGibbs { lambda: f64 },
+    /// Local Minibatch Gibbs (Algorithm 3) with fixed batch B.
+    Local { batch: usize },
+    /// MGPMH (Algorithm 4) with local expected batch λ.
+    Mgpmh { lambda: f64 },
+    /// DoubleMIN-Gibbs (Algorithm 5) with batch sizes (λ₁, λ₂).
+    DoubleMin { lambda1: f64, lambda2: f64 },
+}
+
+impl SamplerSpec {
+    /// Instantiate against a graph.
+    pub fn build<'g>(&self, g: &'g FactorGraph) -> Box<dyn Sampler + 'g> {
+        match *self {
+            SamplerSpec::Gibbs(path) => Box::new(GibbsSampler::new(g, path)),
+            SamplerSpec::MinGibbs { lambda } => Box::new(MinGibbsSampler::new(g, lambda)),
+            SamplerSpec::Local { batch } => Box::new(LocalMinibatchSampler::new(g, batch)),
+            SamplerSpec::Mgpmh { lambda } => Box::new(MgpmhSampler::new(g, lambda)),
+            SamplerSpec::DoubleMin { lambda1, lambda2 } => {
+                Box::new(DoubleMinGibbsSampler::new(g, lambda1, lambda2))
+            }
+        }
+    }
+
+    /// Label for reports ("gibbs", "min-gibbs λ=2Ψ²", ...).
+    pub fn label(&self, g: &FactorGraph) -> String {
+        let s = g.stats();
+        match *self {
+            SamplerSpec::Gibbs(EnergyPath::Generic) => "gibbs".to_string(),
+            SamplerSpec::Gibbs(EnergyPath::Specialized) => "gibbs(fast)".to_string(),
+            SamplerSpec::MinGibbs { lambda } => {
+                format!("min-gibbs λ={:.3}Ψ²", lambda / (s.psi * s.psi))
+            }
+            SamplerSpec::Local { batch } => format!("local B={batch}"),
+            SamplerSpec::Mgpmh { lambda } => {
+                format!("mgpmh λ={:.2}L²", lambda / (s.l * s.l))
+            }
+            SamplerSpec::DoubleMin { lambda1, lambda2 } => format!(
+                "doublemin λ₁={:.2}L² λ₂={:.3}Ψ²",
+                lambda1 / (s.l * s.l),
+                lambda2 / (s.psi * s.psi)
+            ),
+        }
+    }
+}
+
+/// Figure 1 workload: the §B Ising model and the sampler lineup
+/// (vanilla Gibbs + MIN-Gibbs at increasing batch sizes).
+///
+/// Note on batch sizes: λ = Ψ² ≈ 1.7·10⁵ makes each MIN-Gibbs iteration
+/// *more* expensive than exact Gibbs on this dense model — the paper
+/// concedes exactly this in footnote 5 ("we do not expect MIN-Gibbs to
+/// be faster than Gibbs for this particular synthetic example"). Figure 1
+/// demonstrates the *trajectory* claim instead: the chain is unbiased at
+/// any λ and approaches the Gibbs trajectory as λ grows, so we sweep
+/// λ ∈ {Ψ²/16, Ψ²/4, Ψ²} (estimator noise δ ≈ Ψ/√λ ∈ {2.6, 1.3, 0.64}).
+pub fn fig1_workload() -> (DenseModel, Vec<SamplerSpec>) {
+    let m = models::paper_ising();
+    let p2 = {
+        let psi = m.graph.stats().psi;
+        psi * psi
+    };
+    let specs = vec![
+        SamplerSpec::Gibbs(EnergyPath::Specialized),
+        SamplerSpec::MinGibbs { lambda: p2 / 16.0 },
+        SamplerSpec::MinGibbs { lambda: p2 / 4.0 },
+        SamplerSpec::MinGibbs { lambda: p2 },
+    ];
+    (m, specs)
+}
+
+/// Figure 2(a) workload: the §B Ising model, Local Minibatch Gibbs at
+/// B ∈ {⅛Δ, ¼Δ, ½Δ} plus the Gibbs reference.
+pub fn fig2a_workload() -> (DenseModel, Vec<SamplerSpec>) {
+    let m = models::paper_ising();
+    let delta = m.graph.stats().delta;
+    let specs = vec![
+        SamplerSpec::Gibbs(EnergyPath::Specialized),
+        SamplerSpec::Local { batch: delta / 8 },
+        SamplerSpec::Local { batch: delta / 4 },
+        SamplerSpec::Local { batch: delta / 2 },
+    ];
+    (m, specs)
+}
+
+/// Figure 2(b) workload: the §B Potts model, MGPMH at λ ∈ {L², 2L², 4L²}
+/// plus the Gibbs reference (paper evaluates three multiples of L²).
+pub fn fig2b_workload() -> (DenseModel, Vec<SamplerSpec>) {
+    let m = models::paper_potts();
+    let l = m.graph.stats().l;
+    let specs = vec![
+        SamplerSpec::Gibbs(EnergyPath::Specialized),
+        SamplerSpec::Mgpmh { lambda: l * l },
+        SamplerSpec::Mgpmh { lambda: 2.0 * l * l },
+        SamplerSpec::Mgpmh { lambda: 4.0 * l * l },
+    ];
+    (m, specs)
+}
+
+/// Figure 2(c) workload: the §B Potts model, DoubleMIN-Gibbs with
+/// λ₁ = L² and second batch sizes λ₂ ∈ {Ψ²/4, Ψ²/2, Ψ²} (the paper
+/// adjusts λ₂ "to multiples of Ψ²"), plus MGPMH and Gibbs references.
+/// Expected shape: as λ₂ grows DoubleMIN approaches the MGPMH/Gibbs
+/// trajectory (Theorem 6).
+pub fn fig2c_workload() -> (DenseModel, Vec<SamplerSpec>) {
+    let m = models::paper_potts();
+    let s = m.graph.stats().clone();
+    let (l2, p2) = (s.l * s.l, s.psi * s.psi);
+    let specs = vec![
+        SamplerSpec::Gibbs(EnergyPath::Specialized),
+        SamplerSpec::Mgpmh { lambda: l2 },
+        SamplerSpec::DoubleMin { lambda1: l2, lambda2: p2 / 4.0 },
+        SamplerSpec::DoubleMin { lambda1: l2, lambda2: p2 / 2.0 },
+        SamplerSpec::DoubleMin { lambda1: l2, lambda2: p2 },
+    ];
+    (m, specs)
+}
+
+/// Table-1 sweep sizes: Δ = n − 1 doubles each step. Returns (n values, D).
+pub fn table1_sweep() -> (Vec<usize>, u16) {
+    (vec![50, 100, 200, 400, 800, 1600], 10)
+}
+
+/// Table-1 sweep A — the "many low-energy factors" regime (fixed Ψ = 8,
+/// L = 2Ψ/n): Gibbs cost grows O(DΔ) while MIN-Gibbs O(DΨ²) and
+/// DoubleMIN O(DL² + Ψ²) stay flat. Each minibatched algorithm gets the
+/// paper's O(1)-penalty setting (λ = Ψ², λ₁ = L², λ₂ = Ψ²).
+pub fn table1_samplers_fixed_psi(g: &FactorGraph) -> Vec<SamplerSpec> {
+    let s = g.stats();
+    let (l2, p2) = (s.l * s.l, s.psi * s.psi);
+    vec![
+        SamplerSpec::Gibbs(EnergyPath::Generic),
+        SamplerSpec::MinGibbs { lambda: p2 },
+        SamplerSpec::DoubleMin { lambda1: l2.max(0.5), lambda2: p2 },
+    ]
+}
+
+/// Table-1 sweep B — the "large local neighborhoods" regime (fixed L = 2,
+/// Ψ = nL/2): Gibbs O(DΔ) vs MGPMH O(DL² + Δ), whose Δ term has no D
+/// factor, so the gap widens by ~D as Δ grows.
+pub fn table1_samplers_fixed_l(g: &FactorGraph) -> Vec<SamplerSpec> {
+    let s = g.stats();
+    let l2 = s.l * s.l;
+    vec![
+        SamplerSpec::Gibbs(EnergyPath::Generic),
+        SamplerSpec::Mgpmh { lambda: l2 },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig_workloads_build() {
+        let (m, specs) = fig1_workload();
+        assert_eq!(m.graph.n(), 400);
+        assert_eq!(specs.len(), 4);
+        for spec in &specs {
+            let mut smp = spec.build(&m.graph);
+            let mut rng = crate::rng::Pcg64::seeded(1);
+            let mut state = vec![0u16; m.graph.n()];
+            smp.step(&mut state, &mut rng);
+            assert!(!spec.label(&m.graph).is_empty());
+        }
+    }
+
+    #[test]
+    fn fig2_workloads_parameters() {
+        let (m, specs) = fig2b_workload();
+        assert_eq!(m.graph.domain_size(), 10);
+        // first non-gibbs spec is λ = L²
+        if let SamplerSpec::Mgpmh { lambda } = specs[1] {
+            let l = m.graph.stats().l;
+            assert!((lambda - l * l).abs() < 1e-9);
+        } else {
+            panic!("expected mgpmh spec");
+        }
+        let (_, specs) = fig2c_workload();
+        assert!(matches!(specs[2], SamplerSpec::DoubleMin { .. }));
+    }
+
+    #[test]
+    fn table1_sweep_monotone() {
+        let (ns, d) = table1_sweep();
+        assert!(ns.windows(2).all(|w| w[0] < w[1]));
+        assert!(d >= 2);
+        // both lineups build against a sweep graph
+        let g = crate::graph::models::table1_workload_fixed_psi(ns[0], d, 8.0);
+        assert_eq!(table1_samplers_fixed_psi(&g).len(), 3);
+        let g = crate::graph::models::table1_workload(ns[0], d, 2.0);
+        assert_eq!(table1_samplers_fixed_l(&g).len(), 2);
+    }
+}

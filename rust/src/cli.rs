@@ -1,0 +1,418 @@
+//! Command-line launcher.
+//!
+//! Subcommands (clap is not in the offline dependency set; parsing is
+//! first-party):
+//!
+//! ```text
+//! mbgibbs sample --config cfg.toml      run an experiment from a config
+//! mbgibbs fig1|fig2a|fig2b|fig2c        regenerate a paper figure
+//! mbgibbs table1                        regenerate the Table-1 cost sweep
+//! mbgibbs validate                      numeric checks of Theorems 2/4
+//! mbgibbs check-artifacts               XLA vs native energy parity
+//! mbgibbs info                          paper-model statistics (Δ, L, Ψ)
+//! ```
+//!
+//! Common flags: `--iters N`, `--out DIR`, `--seed S`, `--quick`.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::analysis::{
+    exact_distribution, gibbs_transition_matrix, mgpmh_transition_matrix,
+    spectral_gap_reversible,
+};
+use crate::bench::figures::{emit_figure, FigureParams};
+use crate::bench::report::{fmt_seconds, Table};
+use crate::bench::timer::{bench_iter, BenchConfig};
+use crate::bench::workload;
+use crate::config::ExperimentConfig;
+use crate::coordinator::{run_chains, RunSpec};
+use crate::graph::models;
+use crate::rng::Pcg64;
+use crate::runtime::{backend::parity_report, ArtifactStore, XlaDenseBackend};
+
+/// Parsed command line: subcommand plus `--key value` / `--flag` options.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    /// The subcommand name.
+    pub command: String,
+    /// `--key value` options.
+    pub options: BTreeMap<String, String>,
+    /// Bare `--flag`s.
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Result<Self> {
+        let mut args = Args::default();
+        let mut iter = raw.into_iter().peekable();
+        if let Some(cmd) = iter.next() {
+            if cmd.starts_with('-') {
+                bail!("expected a subcommand before {cmd:?}");
+            }
+            args.command = cmd;
+        }
+        while let Some(tok) = iter.next() {
+            let key = tok
+                .strip_prefix("--")
+                .ok_or_else(|| anyhow!("unexpected argument {tok:?}"))?;
+            if key.is_empty() {
+                bail!("empty option name");
+            }
+            match iter.peek() {
+                Some(next) if !next.starts_with("--") => {
+                    let value = iter.next().unwrap();
+                    args.options.insert(key.to_string(), value);
+                }
+                _ => args.flags.push(key.to_string()),
+            }
+        }
+        Ok(args)
+    }
+
+    /// Option value with default.
+    pub fn opt_u64(&self, key: &str, default: u64) -> Result<u64> {
+        match self.options.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse::<u64>()
+                .with_context(|| format!("--{key} must be an integer, got {v:?}")),
+        }
+    }
+
+    /// Presence of a bare flag.
+    pub fn has_flag(&self, flag: &str) -> bool {
+        self.flags.iter().any(|f| f == flag)
+    }
+
+    /// Output directory option.
+    pub fn out_dir(&self) -> PathBuf {
+        PathBuf::from(
+            self.options
+                .get("out")
+                .map(String::as_str)
+                .unwrap_or("bench_out"),
+        )
+    }
+}
+
+/// Figure parameters derived from common flags.
+fn figure_params(args: &Args) -> Result<FigureParams> {
+    let mut p = if args.has_flag("quick") {
+        FigureParams::quick()
+    } else {
+        FigureParams::default()
+    };
+    p.iters = args.opt_u64("iters", p.iters)?;
+    p.record_every = args.opt_u64("record-every", p.record_every)?;
+    p.seed = args.opt_u64("seed", p.seed)?;
+    Ok(p)
+}
+
+/// Entry point used by main(); returns the process exit code.
+pub fn run(raw: Vec<String>) -> Result<()> {
+    let args = Args::parse(raw)?;
+    match args.command.as_str() {
+        "" | "help" | "--help" => {
+            print_help();
+            Ok(())
+        }
+        "sample" => cmd_sample(&args),
+        "fig1" => {
+            let (m, specs) = workload::fig1_workload();
+            emit_figure("figure1 min-gibbs ising", &m, &specs, &figure_params(&args)?, &args.out_dir())?;
+            Ok(())
+        }
+        "fig2a" => {
+            let (m, specs) = workload::fig2a_workload();
+            emit_figure("figure2a local minibatch ising", &m, &specs, &figure_params(&args)?, &args.out_dir())?;
+            Ok(())
+        }
+        "fig2b" => {
+            let (m, specs) = workload::fig2b_workload();
+            emit_figure("figure2b mgpmh potts", &m, &specs, &figure_params(&args)?, &args.out_dir())?;
+            Ok(())
+        }
+        "fig2c" => {
+            let (m, specs) = workload::fig2c_workload();
+            emit_figure("figure2c doublemin potts", &m, &specs, &figure_params(&args)?, &args.out_dir())?;
+            Ok(())
+        }
+        "table1" => cmd_table1(&args),
+        "validate" => cmd_validate(&args),
+        "check-artifacts" => cmd_check_artifacts(&args),
+        "info" => cmd_info(),
+        other => bail!("unknown subcommand {other:?} (try `mbgibbs help`)"),
+    }
+}
+
+fn print_help() {
+    println!(
+        "mbgibbs — Minibatch Gibbs Sampling on Large Graphical Models\n\
+         (De Sa, Chen & Wong, ICML 2018)\n\n\
+         USAGE: mbgibbs <command> [--iters N] [--out DIR] [--seed S] [--quick]\n\n\
+         COMMANDS:\n\
+         \x20 sample --config FILE   run an experiment described by a TOML config\n\
+         \x20 fig1                   Figure 1: MIN-Gibbs vs Gibbs on the Ising model\n\
+         \x20 fig2a                  Figure 2(a): Local Minibatch Gibbs (Ising)\n\
+         \x20 fig2b                  Figure 2(b): MGPMH (Potts)\n\
+         \x20 fig2c                  Figure 2(c): DoubleMIN-Gibbs (Potts)\n\
+         \x20 table1                 Table 1: per-iteration cost sweep over Δ\n\
+         \x20 validate               numeric validation of Theorems 2 and 4\n\
+         \x20 check-artifacts        XLA kernels vs native energies parity check\n\
+         \x20 info                   paper-model statistics (Δ, L, Ψ)"
+    );
+}
+
+fn cmd_sample(args: &Args) -> Result<()> {
+    let config_path = args
+        .options
+        .get("config")
+        .ok_or_else(|| anyhow!("sample requires --config FILE"))?;
+    let cfg = ExperimentConfig::load(Path::new(config_path))?;
+    let (graph, _dense) = cfg.build_model()?;
+    let spec = cfg.sampler_spec(&graph)?;
+    let mut run = RunSpec::new(spec);
+    run.iters = args.opt_u64("iters", cfg.run.iters)?;
+    run.chains = cfg.run.chains;
+    run.seed = args.opt_u64("seed", cfg.run.seed)?;
+    run.record_every = cfg.run.record_every;
+    if cfg.run.checkpoint_every > 0 {
+        run.checkpoint_every = cfg.run.checkpoint_every;
+        run.checkpoint_dir = Some(cfg.run.output_dir.join("checkpoints"));
+    }
+    println!(
+        "model: {} (n = {}, D = {}, Δ = {}, L = {:.3}, Ψ = {:.1})",
+        cfg.model.kind,
+        graph.n(),
+        graph.domain_size(),
+        graph.stats().delta,
+        graph.stats().l,
+        graph.stats().psi,
+    );
+    println!("sampler: {}", spec.label(&graph));
+    let report = run_chains(&graph, &run);
+    let mut t = Table::new(
+        "sample run",
+        &["chain", "final_l2_error", "evals/iter", "steps/s", "acceptance", "seconds"],
+    );
+    for c in &report.chains {
+        t.push_row(vec![
+            c.chain.to_string(),
+            format!("{:.5}", c.final_error),
+            format!("{:.1}", c.factor_evals as f64 / run.iters as f64),
+            format!("{:.0}", run.iters as f64 / c.seconds),
+            format!("{:.3}", c.acceptance),
+            format!("{:.2}", c.seconds),
+        ]);
+    }
+    println!("{}", t.render());
+    t.write_csv(&cfg.run.output_dir)?;
+    Ok(())
+}
+
+fn cmd_table1(args: &Args) -> Result<()> {
+    let quick = args.has_flag("quick");
+    let bench_cfg = if quick {
+        BenchConfig {
+            warmup_iters: 100,
+            batch_iters: 500,
+            batches: 5,
+        }
+    } else {
+        BenchConfig {
+            warmup_iters: 1_000,
+            batch_iters: 5_000,
+            batches: 10,
+        }
+    };
+    let (mut ns, d) = workload::table1_sweep();
+    if quick {
+        ns.truncate(4);
+    }
+    let mut t = Table::new(
+        "table1 per-iteration cost",
+        &["sweep", "n", "delta", "sampler", "median_iter_time", "evals_per_iter"],
+    );
+    type BuildFn = fn(usize, u16) -> crate::graph::FactorGraph;
+    type LineupFn = fn(&crate::graph::FactorGraph) -> Vec<workload::SamplerSpec>;
+    let sweeps: [(&str, BuildFn, LineupFn); 2] = [
+        (
+            "A(Ψ=8)",
+            |n, d| models::table1_workload_fixed_psi(n, d, 8.0),
+            |g| workload::table1_samplers_fixed_psi(g),
+        ),
+        (
+            "B(L=2)",
+            |n, d| models::table1_workload(n, d, 2.0),
+            |g| workload::table1_samplers_fixed_l(g),
+        ),
+    ];
+    for (name, build, lineup) in sweeps {
+        for &n in &ns {
+            let g = build(n, d);
+            for spec in lineup(&g) {
+                let mut sampler = spec.build(&g);
+                let mut rng = Pcg64::seeded(7);
+                let mut state = vec![0u16; n];
+                sampler.reset(&state, &mut rng);
+                let mut evals = 0u64;
+                let mut steps = 0u64;
+                let summary = bench_iter(&bench_cfg, |_| {
+                    let st = sampler.step(&mut state, &mut rng);
+                    evals += st.factor_evals;
+                    steps += 1;
+                });
+                t.push_row(vec![
+                    name.to_string(),
+                    n.to_string(),
+                    g.stats().delta.to_string(),
+                    spec.label(&g),
+                    fmt_seconds(summary.median),
+                    format!("{:.1}", evals as f64 / steps as f64),
+                ]);
+            }
+        }
+    }
+    println!("{}", t.render());
+    t.write_csv(&args.out_dir())?;
+    Ok(())
+}
+
+fn cmd_validate(args: &Args) -> Result<()> {
+    let seeds = if args.has_flag("quick") { 2 } else { 5 };
+    let mut t = Table::new(
+        "theorem validation",
+        &["model_seed", "gamma_gibbs", "gamma_mgpmh", "ratio", "bound exp(-L2/lambda)", "ok"],
+    );
+    let mut all_ok = true;
+    for seed in 0..seeds {
+        let g = models::tiny_random(3, 2, 0.6, 100 + seed);
+        let s = g.stats();
+        let lambda = (s.l * s.l).max(1.0);
+        let pi = exact_distribution(&g);
+        let gamma_gibbs = spectral_gap_reversible(&gibbs_transition_matrix(&g), &pi);
+        let gamma_mgpmh =
+            spectral_gap_reversible(&mgpmh_transition_matrix(&g, lambda), &pi);
+        let bound = (-s.l * s.l / lambda).exp();
+        let ratio = gamma_mgpmh / gamma_gibbs;
+        let ok = ratio >= bound - 1e-9;
+        all_ok &= ok;
+        t.push_row(vec![
+            (100 + seed).to_string(),
+            format!("{gamma_gibbs:.5}"),
+            format!("{gamma_mgpmh:.5}"),
+            format!("{ratio:.4}"),
+            format!("{bound:.4}"),
+            ok.to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+    t.write_csv(&args.out_dir())?;
+    if !all_ok {
+        bail!("Theorem 4 bound violated — see table");
+    }
+    println!("Theorem 4 spectral-gap bound holds on all sampled models.");
+    Ok(())
+}
+
+fn cmd_check_artifacts(args: &Args) -> Result<()> {
+    let dir = PathBuf::from(
+        args.options
+            .get("artifacts")
+            .map(String::as_str)
+            .unwrap_or("artifacts"),
+    );
+    let store = ArtifactStore::open(&dir)?;
+    println!("artifacts: {:?}", store.names());
+    let mut worst_all = 0.0f64;
+    for (name, model) in [
+        ("potts", models::paper_potts()),
+        ("ising", models::paper_ising()),
+    ] {
+        let backend = XlaDenseBackend::new(&store, &model)?;
+        let worst = parity_report(&backend, &model, 2, 11)?;
+        println!("{name}: max |xla − native| = {worst:.2e}");
+        worst_all = worst_all.max(worst);
+    }
+    if worst_all > 2e-3 {
+        bail!("parity check failed: deviation {worst_all:.2e} > 2e-3");
+    }
+    println!("parity OK (float32 tolerance)");
+    Ok(())
+}
+
+fn cmd_info() -> Result<()> {
+    let mut t = Table::new(
+        "paper models",
+        &["model", "n", "D", "delta", "L", "psi", "paper L", "paper psi"],
+    );
+    let ising = models::paper_ising();
+    let s = ising.graph.stats();
+    t.push_row(vec![
+        "ising β=1.0 γ=1.5".into(),
+        ising.graph.n().to_string(),
+        "2".into(),
+        s.delta.to_string(),
+        format!("{:.3}", s.l),
+        format!("{:.1}", s.psi),
+        "2.21".into(),
+        "416.1".into(),
+    ]);
+    let potts = models::paper_potts();
+    let s = potts.graph.stats();
+    t.push_row(vec![
+        "potts β=4.6 γ=1.5".into(),
+        potts.graph.n().to_string(),
+        "10".into(),
+        s.delta.to_string(),
+        format!("{:.3}", s.l),
+        format!("{:.1}", s.psi),
+        "5.09".into(),
+        "957.1".into(),
+    ]);
+    println!("{}", t.render());
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(tokens: &[&str]) -> Args {
+        Args::parse(tokens.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn parses_options_and_flags() {
+        let a = parse(&["fig1", "--iters", "5000", "--quick", "--out", "x"]);
+        assert_eq!(a.command, "fig1");
+        assert_eq!(a.opt_u64("iters", 0).unwrap(), 5000);
+        assert!(a.has_flag("quick"));
+        assert_eq!(a.out_dir(), PathBuf::from("x"));
+    }
+
+    #[test]
+    fn rejects_leading_flag() {
+        assert!(Args::parse(vec!["--oops".to_string()]).is_err());
+    }
+
+    #[test]
+    fn bad_int_reported() {
+        let a = parse(&["fig1", "--iters", "lots"]);
+        assert!(a.opt_u64("iters", 0).is_err());
+    }
+
+    #[test]
+    fn unknown_subcommand_fails() {
+        assert!(run(vec!["frobnicate".to_string()]).is_err());
+    }
+
+    #[test]
+    fn info_runs() {
+        run(vec!["info".to_string()]).unwrap();
+    }
+}

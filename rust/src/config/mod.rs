@@ -1,0 +1,14 @@
+//! Configuration system.
+//!
+//! serde is not in the offline dependency set, so parsing is first-party:
+//! [`toml`] is a TOML-subset parser for experiment configs, [`json`] a
+//! minimal JSON parser for the artifact manifest, and [`schema`] the typed
+//! experiment configuration extracted from either.
+
+pub mod json;
+pub mod schema;
+pub mod toml;
+
+pub use json::JsonValue;
+pub use schema::{ExperimentConfig, ModelConfig, RunConfig, SamplerConfig};
+pub use toml::{TomlDoc, TomlValue};

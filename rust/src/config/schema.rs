@@ -1,0 +1,301 @@
+//! Typed experiment configuration, extracted from a [`TomlDoc`].
+//!
+//! A config file looks like:
+//!
+//! ```toml
+//! [model]
+//! type = "potts_rbf"     # ising_rbf | potts_rbf | ising_grid | potts_random
+//! grid_n = 20
+//! d = 10
+//! beta = 4.6
+//! gamma = 1.5
+//!
+//! [sampler]
+//! algorithm = "mgpmh"    # gibbs | min-gibbs | local | mgpmh | doublemin
+//! lambda = 25.9          # or lambda_scale = 1.0 (multiples of L² / Ψ²)
+//!
+//! [run]
+//! iters = 1000000
+//! chains = 4
+//! seed = 42
+//! record_every = 1000
+//! output_dir = "out"
+//! ```
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::bench::workload::SamplerSpec;
+use crate::graph::models::{self, DenseModel};
+use crate::graph::FactorGraph;
+use crate::samplers::EnergyPath;
+
+use super::toml::TomlDoc;
+
+/// Model section.
+#[derive(Clone, Debug)]
+pub struct ModelConfig {
+    /// Model family name.
+    pub kind: String,
+    /// Grid side (rbf/grid models).
+    pub grid_n: usize,
+    /// Domain size.
+    pub d: u16,
+    /// Inverse temperature.
+    pub beta: f64,
+    /// RBF bandwidth γ.
+    pub gamma: f64,
+    /// Degree (random models).
+    pub degree: usize,
+    /// Seed (random models).
+    pub seed: u64,
+}
+
+/// Sampler section.
+#[derive(Clone, Debug)]
+pub struct SamplerConfig {
+    /// Algorithm name.
+    pub algorithm: String,
+    /// Absolute λ (or B for local); if None, `lambda_scale` applies.
+    pub lambda: Option<f64>,
+    /// λ as a multiple of the algorithm's natural scale (L² or Ψ²).
+    pub lambda_scale: f64,
+    /// Second batch scale for DoubleMIN (multiple of Ψ²) or absolute.
+    pub lambda2: Option<f64>,
+    /// Second batch scale factor.
+    pub lambda2_scale: f64,
+}
+
+/// Run section.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    /// Total iterations per chain.
+    pub iters: u64,
+    /// Number of parallel chains.
+    pub chains: usize,
+    /// Master seed.
+    pub seed: u64,
+    /// Record a marginal-error checkpoint every this many iterations.
+    pub record_every: u64,
+    /// Output directory for CSVs.
+    pub output_dir: PathBuf,
+    /// Write a resumable chain checkpoint every this many iterations
+    /// (0 = disabled). Files land in `output_dir/checkpoints/`.
+    pub checkpoint_every: u64,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        Self {
+            iters: 1_000_000,
+            chains: 1,
+            seed: 42,
+            record_every: 10_000,
+            output_dir: PathBuf::from("out"),
+            checkpoint_every: 0,
+        }
+    }
+}
+
+/// A full experiment description.
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    /// Model to build.
+    pub model: ModelConfig,
+    /// Sampler to run.
+    pub sampler: SamplerConfig,
+    /// Run parameters.
+    pub run: RunConfig,
+}
+
+impl ExperimentConfig {
+    /// Load from a TOML file.
+    pub fn load(path: &Path) -> Result<Self> {
+        let doc = TomlDoc::load(path)?;
+        Self::from_doc(&doc).with_context(|| format!("in {}", path.display()))
+    }
+
+    /// Extract from a parsed document.
+    pub fn from_doc(doc: &TomlDoc) -> Result<Self> {
+        let gets = |sec: &str, key: &str| doc.get(sec, key);
+        let get_f64 = |sec: &str, key: &str, default: f64| -> Result<f64> {
+            match gets(sec, key) {
+                None => Ok(default),
+                Some(v) => v
+                    .as_f64()
+                    .ok_or_else(|| anyhow!("{sec}.{key} must be a number")),
+            }
+        };
+        let get_u64 = |sec: &str, key: &str, default: u64| -> Result<u64> {
+            match gets(sec, key) {
+                None => Ok(default),
+                Some(v) => v
+                    .as_i64()
+                    .filter(|&i| i >= 0)
+                    .map(|i| i as u64)
+                    .ok_or_else(|| anyhow!("{sec}.{key} must be a non-negative integer")),
+            }
+        };
+
+        let kind = gets("model", "type")
+            .and_then(|v| v.as_str())
+            .unwrap_or("potts_rbf")
+            .to_string();
+        let model = ModelConfig {
+            kind,
+            grid_n: get_u64("model", "grid_n", 20)? as usize,
+            d: get_u64("model", "d", 10)? as u16,
+            beta: get_f64("model", "beta", 4.6)?,
+            gamma: get_f64("model", "gamma", 1.5)?,
+            degree: get_u64("model", "degree", 8)? as usize,
+            seed: get_u64("model", "seed", 0)?,
+        };
+        let sampler = SamplerConfig {
+            algorithm: gets("sampler", "algorithm")
+                .and_then(|v| v.as_str())
+                .unwrap_or("gibbs")
+                .to_string(),
+            lambda: gets("sampler", "lambda").and_then(|v| v.as_f64()),
+            lambda_scale: get_f64("sampler", "lambda_scale", 1.0)?,
+            lambda2: gets("sampler", "lambda2").and_then(|v| v.as_f64()),
+            lambda2_scale: get_f64("sampler", "lambda2_scale", 1.0)?,
+        };
+        let run = RunConfig {
+            iters: get_u64("run", "iters", 1_000_000)?,
+            chains: get_u64("run", "chains", 1)? as usize,
+            seed: get_u64("run", "seed", 42)?,
+            record_every: get_u64("run", "record_every", 10_000)?,
+            output_dir: PathBuf::from(
+                gets("run", "output_dir")
+                    .and_then(|v| v.as_str())
+                    .unwrap_or("out"),
+            ),
+            checkpoint_every: get_u64("run", "checkpoint_every", 0)?,
+        };
+        Ok(Self {
+            model,
+            sampler,
+            run,
+        })
+    }
+
+    /// Build the model. Dense rbf models carry kernel weights for the XLA
+    /// backend; others return just the graph.
+    pub fn build_model(&self) -> Result<(FactorGraph, Option<DenseModel>)> {
+        let m = &self.model;
+        Ok(match m.kind.as_str() {
+            "ising_rbf" => {
+                let dm = models::ising_rbf(m.grid_n, m.beta, m.gamma);
+                (dm.graph.clone(), Some(dm))
+            }
+            "potts_rbf" => {
+                let dm = models::potts_rbf(m.grid_n, m.d, m.beta, m.gamma);
+                (dm.graph.clone(), Some(dm))
+            }
+            "ising_grid" => (models::ising_grid_local(m.grid_n, m.beta), None),
+            "potts_random" => (
+                models::potts_random(m.grid_n * m.grid_n, m.d, m.degree, m.beta, m.seed),
+                None,
+            ),
+            other => bail!("unknown model type {other:?}"),
+        })
+    }
+
+    /// Resolve the sampler spec against a built graph (λ scales resolve
+    /// to L²/Ψ² multiples).
+    pub fn sampler_spec(&self, g: &FactorGraph) -> Result<SamplerSpec> {
+        let s = g.stats();
+        let (l2, p2) = (s.l * s.l, s.psi * s.psi);
+        let sc = &self.sampler;
+        Ok(match sc.algorithm.as_str() {
+            "gibbs" => SamplerSpec::Gibbs(EnergyPath::Specialized),
+            "gibbs-generic" => SamplerSpec::Gibbs(EnergyPath::Generic),
+            "min-gibbs" => SamplerSpec::MinGibbs {
+                lambda: sc.lambda.unwrap_or(sc.lambda_scale * p2),
+            },
+            "local" => SamplerSpec::Local {
+                batch: sc.lambda.unwrap_or(s.delta as f64 / 4.0).max(1.0) as usize,
+            },
+            "mgpmh" => SamplerSpec::Mgpmh {
+                lambda: sc.lambda.unwrap_or(sc.lambda_scale * l2),
+            },
+            "doublemin" => SamplerSpec::DoubleMin {
+                lambda1: sc.lambda.unwrap_or(sc.lambda_scale * l2),
+                lambda2: sc.lambda2.unwrap_or(sc.lambda2_scale * p2),
+            },
+            other => bail!("unknown sampler algorithm {other:?}"),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn doc(text: &str) -> TomlDoc {
+        TomlDoc::parse(text).unwrap()
+    }
+
+    #[test]
+    fn defaults_fill_in() {
+        let cfg = ExperimentConfig::from_doc(&doc("")).unwrap();
+        assert_eq!(cfg.model.kind, "potts_rbf");
+        assert_eq!(cfg.run.iters, 1_000_000);
+        assert_eq!(cfg.sampler.algorithm, "gibbs");
+    }
+
+    #[test]
+    fn full_roundtrip() {
+        let cfg = ExperimentConfig::from_doc(&doc(
+            r#"
+[model]
+type = "ising_rbf"
+grid_n = 4
+beta = 1.0
+
+[sampler]
+algorithm = "doublemin"
+lambda_scale = 2.0
+
+[run]
+iters = 5000
+chains = 2
+seed = 9
+"#,
+        ))
+        .unwrap();
+        let (g, dense) = cfg.build_model().unwrap();
+        assert_eq!(g.n(), 16);
+        assert!(dense.is_some());
+        let spec = cfg.sampler_spec(&g).unwrap();
+        match spec {
+            SamplerSpec::DoubleMin { lambda1, lambda2 } => {
+                let s = g.stats();
+                assert!((lambda1 - 2.0 * s.l * s.l).abs() < 1e-9);
+                assert!((lambda2 - s.psi * s.psi).abs() < 1e-9);
+            }
+            _ => panic!("wrong spec"),
+        }
+    }
+
+    #[test]
+    fn rejects_unknown_model() {
+        let cfg = ExperimentConfig::from_doc(&doc("[model]\ntype = \"nope\"")).unwrap();
+        assert!(cfg.build_model().is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_sampler() {
+        let cfg =
+            ExperimentConfig::from_doc(&doc("[sampler]\nalgorithm = \"nope\"")).unwrap();
+        let g = crate::graph::models::tiny_random(3, 2, 1.0, 1);
+        assert!(cfg.sampler_spec(&g).is_err());
+    }
+
+    #[test]
+    fn type_errors_are_reported() {
+        let err = ExperimentConfig::from_doc(&doc("[run]\niters = \"many\"")).unwrap_err();
+        assert!(err.to_string().contains("run.iters"));
+    }
+}

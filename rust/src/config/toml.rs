@@ -1,0 +1,249 @@
+//! Minimal TOML-subset parser: sections, `key = value`, comments.
+//!
+//! Supported values: strings ("..."), integers, floats, booleans, and flat
+//! arrays of those. This covers the experiment configs in `configs/`;
+//! anything fancier (nested tables, dates, multiline strings) is rejected
+//! with a line-numbered error.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// A parsed TOML value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    /// Quoted string.
+    Str(String),
+    /// Integer.
+    Int(i64),
+    /// Float.
+    Float(f64),
+    /// Boolean.
+    Bool(bool),
+    /// Flat array.
+    Array(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    /// As f64 (ints coerce).
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(f) => Some(*f),
+            TomlValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    /// As i64.
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    /// As &str.
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// As bool.
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// Parse error with line number.
+#[derive(Debug)]
+pub struct TomlError {
+    /// 1-based line.
+    pub line: usize,
+    /// Explanation.
+    pub message: String,
+}
+
+impl fmt::Display for TomlError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "toml parse error at line {}: {}", self.line, self.message)
+    }
+}
+
+impl std::error::Error for TomlError {}
+
+/// A parsed document: `sections["section"]["key"]`. Top-level keys live
+/// in the "" section.
+#[derive(Clone, Debug, Default)]
+pub struct TomlDoc {
+    /// Section name → key → value.
+    pub sections: BTreeMap<String, BTreeMap<String, TomlValue>>,
+}
+
+impl TomlDoc {
+    /// Parse a document.
+    pub fn parse(text: &str) -> Result<Self, TomlError> {
+        let mut doc = TomlDoc::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            let err = |m: &str| TomlError {
+                line: lineno + 1,
+                message: m.to_string(),
+            };
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .ok_or_else(|| err("unterminated section header"))?;
+                if name.contains('[') || name.contains(']') {
+                    return Err(err("nested tables are not supported"));
+                }
+                section = name.trim().to_string();
+                doc.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let eq = line.find('=').ok_or_else(|| err("expected key = value"))?;
+            let key = line[..eq].trim();
+            if key.is_empty() {
+                return Err(err("empty key"));
+            }
+            let value = parse_value(line[eq + 1..].trim())
+                .map_err(|m| err(&m))?;
+            doc.sections
+                .entry(section.clone())
+                .or_default()
+                .insert(key.to_string(), value);
+        }
+        Ok(doc)
+    }
+
+    /// Load and parse a file.
+    pub fn load(path: &std::path::Path) -> anyhow::Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        Ok(Self::parse(&text).map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?)
+    }
+
+    /// Get `section.key`.
+    pub fn get(&self, section: &str, key: &str) -> Option<&TomlValue> {
+        self.sections.get(section)?.get(key)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a quoted string.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<TomlValue, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let end = rest.find('"').ok_or("unterminated string")?;
+        if !rest[end + 1..].trim().is_empty() {
+            return Err("trailing characters after string".into());
+        }
+        return Ok(TomlValue::Str(rest[..end].to_string()));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner.strip_suffix(']').ok_or("unterminated array")?;
+        let mut items = Vec::new();
+        for part in inner.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            items.push(parse_value(part)?);
+        }
+        return Ok(TomlValue::Array(items));
+    }
+    match s {
+        "true" => return Ok(TomlValue::Bool(true)),
+        "false" => return Ok(TomlValue::Bool(false)),
+        _ => {}
+    }
+    let cleaned = s.replace('_', "");
+    if let Ok(i) = cleaned.parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = cleaned.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    Err(format!("cannot parse value: {s:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_typical_config() {
+        let doc = TomlDoc::parse(
+            r#"
+# experiment config
+title = "demo"
+
+[model]
+type = "potts_rbf"
+grid_n = 20
+beta = 4.6
+d = 10
+
+[run]
+iters = 1_000_000
+record = true
+checkpoints = [10, 100, 1000]
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.get("", "title").unwrap().as_str(), Some("demo"));
+        assert_eq!(doc.get("model", "grid_n").unwrap().as_i64(), Some(20));
+        assert_eq!(doc.get("model", "beta").unwrap().as_f64(), Some(4.6));
+        assert_eq!(doc.get("run", "iters").unwrap().as_i64(), Some(1_000_000));
+        assert_eq!(doc.get("run", "record").unwrap().as_bool(), Some(true));
+        match doc.get("run", "checkpoints").unwrap() {
+            TomlValue::Array(items) => assert_eq!(items.len(), 3),
+            _ => panic!("expected array"),
+        }
+    }
+
+    #[test]
+    fn comments_inside_strings() {
+        let doc = TomlDoc::parse("s = \"a # b\" # real comment").unwrap();
+        assert_eq!(doc.get("", "s").unwrap().as_str(), Some("a # b"));
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let err = TomlDoc::parse("ok = 1\nbad line\n").unwrap_err();
+        assert_eq!(err.line, 2);
+    }
+
+    #[test]
+    fn rejects_nested_tables() {
+        assert!(TomlDoc::parse("[[a]]").is_err());
+        assert!(TomlDoc::parse("[a.b]").is_ok()); // dotted name treated as flat
+    }
+
+    #[test]
+    fn value_coercions() {
+        assert_eq!(parse_value("3").unwrap().as_f64(), Some(3.0));
+        assert_eq!(parse_value("-2.5e1").unwrap().as_f64(), Some(-25.0));
+        assert!(parse_value("nope").is_err());
+        assert!(parse_value("\"open").is_err());
+    }
+}

@@ -1,0 +1,143 @@
+//! Chain checkpointing: save/restore a chain's position so long runs can
+//! resume after interruption.
+//!
+//! Format is a small self-describing text file (no serde in the offline
+//! dependency set):
+//!
+//! ```text
+//! mbgibbs-checkpoint v1
+//! iter = 123456
+//! seed = 42
+//! chain = 0
+//! state = 0 1 2 0 1 ...
+//! ```
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+/// A point-in-time snapshot of one chain.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Checkpoint {
+    /// Iterations completed.
+    pub iter: u64,
+    /// Master seed the run started from.
+    pub seed: u64,
+    /// Chain index.
+    pub chain: usize,
+    /// Variable assignment.
+    pub state: Vec<u16>,
+}
+
+impl Checkpoint {
+    /// Serialize to the text format.
+    pub fn to_text(&self) -> String {
+        let state: Vec<String> = self.state.iter().map(|v| v.to_string()).collect();
+        format!(
+            "mbgibbs-checkpoint v1\niter = {}\nseed = {}\nchain = {}\nstate = {}\n",
+            self.iter,
+            self.seed,
+            self.chain,
+            state.join(" ")
+        )
+    }
+
+    /// Parse from the text format.
+    pub fn from_text(text: &str) -> Result<Self> {
+        let mut lines = text.lines();
+        let header = lines.next().unwrap_or_default();
+        if header != "mbgibbs-checkpoint v1" {
+            bail!("bad checkpoint header: {header:?}");
+        }
+        let (mut iter, mut seed, mut chain, mut state) = (None, None, None, None);
+        for line in lines {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (key, value) = line
+                .split_once('=')
+                .with_context(|| format!("bad checkpoint line: {line:?}"))?;
+            match key.trim() {
+                "iter" => iter = Some(value.trim().parse::<u64>()?),
+                "seed" => seed = Some(value.trim().parse::<u64>()?),
+                "chain" => chain = Some(value.trim().parse::<usize>()?),
+                "state" => {
+                    let vs: Result<Vec<u16>, _> =
+                        value.split_whitespace().map(|t| t.parse::<u16>()).collect();
+                    state = Some(vs?);
+                }
+                other => bail!("unknown checkpoint key {other:?}"),
+            }
+        }
+        Ok(Self {
+            iter: iter.context("missing iter")?,
+            seed: seed.context("missing seed")?,
+            chain: chain.context("missing chain")?,
+            state: state.context("missing state")?,
+        })
+    }
+
+    /// Write atomically (tmp file + rename).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let tmp = path.with_extension("tmp");
+        std::fs::write(&tmp, self.to_text())?;
+        std::fs::rename(&tmp, path)?;
+        Ok(())
+    }
+
+    /// Load from a file.
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading checkpoint {}", path.display()))?;
+        Self::from_text(&text)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Checkpoint {
+        Checkpoint {
+            iter: 12345,
+            seed: 42,
+            chain: 3,
+            state: vec![0, 1, 2, 9, 0],
+        }
+    }
+
+    #[test]
+    fn text_roundtrip() {
+        let c = sample();
+        let parsed = Checkpoint::from_text(&c.to_text()).unwrap();
+        assert_eq!(c, parsed);
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = std::env::temp_dir().join("mbgibbs_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("c.ckpt");
+        let c = sample();
+        c.save(&path).unwrap();
+        assert_eq!(Checkpoint::load(&path).unwrap(), c);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_bad_header() {
+        assert!(Checkpoint::from_text("not a checkpoint").is_err());
+    }
+
+    #[test]
+    fn rejects_missing_fields() {
+        assert!(Checkpoint::from_text("mbgibbs-checkpoint v1\niter = 1\n").is_err());
+    }
+
+    #[test]
+    fn rejects_garbage_state() {
+        let text = "mbgibbs-checkpoint v1\niter = 1\nseed = 2\nchain = 0\nstate = 0 x 1\n";
+        assert!(Checkpoint::from_text(text).is_err());
+    }
+}

@@ -1,0 +1,14 @@
+//! Multi-chain sampling coordinator.
+//!
+//! The coordinator owns process topology: it fans a workload out over
+//! OS threads (one chain per thread, each with an independent split RNG
+//! stream), drives per-chain samplers, streams samples into [`sink`]s,
+//! writes [`checkpoint`]s, and aggregates a [`RunReport`].
+
+pub mod checkpoint;
+pub mod runner;
+pub mod sink;
+
+pub use checkpoint::Checkpoint;
+pub use runner::{run_chains, run_chains_with_metrics, ChainReport, RunReport, RunSpec};
+pub use sink::{EnergyTraceSink, MarginalTrajectorySink, SampleSink};

@@ -1,0 +1,299 @@
+//! The chain runner: fan out chains over threads, aggregate reports.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::bench::workload::SamplerSpec;
+use crate::graph::FactorGraph;
+use crate::metrics::MetricsHub;
+use crate::rng::Pcg64;
+
+use super::checkpoint::Checkpoint;
+use super::sink::MarginalTrajectorySink;
+
+/// What to run.
+#[derive(Clone, Debug)]
+pub struct RunSpec {
+    /// Sampler to instantiate per chain.
+    pub sampler: SamplerSpec,
+    /// Iterations per chain.
+    pub iters: u64,
+    /// Number of chains (threads).
+    pub chains: usize,
+    /// Master seed; chain k gets an independent split stream.
+    pub seed: u64,
+    /// Marginal-error checkpoint cadence.
+    pub record_every: u64,
+    /// Initial state: `None` = all zeros (the paper's unmixed start).
+    pub init: Option<Vec<u16>>,
+    /// If set, write a resumable checkpoint per chain every
+    /// `checkpoint_every` iterations into this directory.
+    pub checkpoint_dir: Option<PathBuf>,
+    /// Checkpoint cadence (iterations); 0 disables periodic checkpoints.
+    pub checkpoint_every: u64,
+}
+
+impl RunSpec {
+    /// Sensible defaults: 1 chain, 10⁶ iterations, paper's unmixed init.
+    pub fn new(sampler: SamplerSpec) -> Self {
+        Self {
+            sampler,
+            iters: 1_000_000,
+            chains: 1,
+            seed: 42,
+            record_every: 10_000,
+            init: None,
+            checkpoint_dir: None,
+            checkpoint_every: 0,
+        }
+    }
+}
+
+/// Per-chain results.
+#[derive(Clone, Debug)]
+pub struct ChainReport {
+    /// Chain index.
+    pub chain: usize,
+    /// (iteration, running ℓ₂ marginal error vs uniform) checkpoints.
+    pub trajectory: Vec<(u64, f64)>,
+    /// Final error.
+    pub final_error: f64,
+    /// Total factor evaluations.
+    pub factor_evals: u64,
+    /// Accepted / proposed (1.0 for Gibbs-type samplers).
+    pub acceptance: f64,
+    /// Wall time in seconds.
+    pub seconds: f64,
+    /// Final state.
+    pub final_state: Vec<u16>,
+}
+
+/// Aggregated results.
+#[derive(Clone, Debug)]
+pub struct RunReport {
+    /// Per-chain reports.
+    pub chains: Vec<ChainReport>,
+    /// Steps per second aggregated over chains.
+    pub steps_per_sec: f64,
+    /// Mean factor evaluations per iteration.
+    pub evals_per_iter: f64,
+}
+
+impl RunReport {
+    /// Mean final error across chains.
+    pub fn mean_final_error(&self) -> f64 {
+        self.chains.iter().map(|c| c.final_error).sum::<f64>() / self.chains.len() as f64
+    }
+}
+
+/// Run `spec.chains` independent chains in parallel threads.
+pub fn run_chains(graph: &FactorGraph, spec: &RunSpec) -> RunReport {
+    run_chains_with_metrics(graph, spec, &Arc::new(MetricsHub::new()))
+}
+
+/// [`run_chains`] with an externally owned metrics hub: the caller can
+/// watch `chain<k>.steps` / `chain<k>.factor_evals` counters live from
+/// another thread while the run progresses.
+pub fn run_chains_with_metrics(
+    graph: &FactorGraph,
+    spec: &RunSpec,
+    hub: &Arc<MetricsHub>,
+) -> RunReport {
+    let mut master = Pcg64::seeded(spec.seed);
+    let streams: Vec<Pcg64> = (0..spec.chains).map(|k| master.split(k as u64)).collect();
+
+    let reports: Vec<ChainReport> = std::thread::scope(|scope| {
+        let handles: Vec<_> = streams
+            .into_iter()
+            .enumerate()
+            .map(|(k, rng)| {
+                let hub = hub.clone();
+                scope.spawn(move || run_one_chain(graph, spec, k, rng, &hub))
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+
+    let total_secs: f64 = reports.iter().map(|r| r.seconds).sum();
+    let total_steps = spec.iters * spec.chains as u64;
+    let total_evals: u64 = reports.iter().map(|r| r.factor_evals).sum();
+    RunReport {
+        steps_per_sec: total_steps as f64 / (total_secs / spec.chains as f64).max(1e-12),
+        evals_per_iter: total_evals as f64 / total_steps as f64,
+        chains: reports,
+    }
+}
+
+fn run_one_chain(
+    graph: &FactorGraph,
+    spec: &RunSpec,
+    k: usize,
+    mut rng: Pcg64,
+    hub: &MetricsHub,
+) -> ChainReport {
+    let n = graph.n();
+    let d = graph.domain_size() as usize;
+    let mut state = spec.init.clone().unwrap_or_else(|| vec![0u16; n]);
+    assert_eq!(state.len(), n, "init state has wrong length");
+    let mut sampler = spec.sampler.build(graph);
+    sampler.reset(&state, &mut rng);
+    let mut sink = MarginalTrajectorySink::new(n, d, spec.record_every);
+    let steps_counter = hub.counter(&format!("chain{k}.steps"));
+    let evals_counter = hub.counter(&format!("chain{k}.factor_evals"));
+    // Batch metric updates so the atomics stay off the per-step path.
+    const METRICS_BATCH: u64 = 4096;
+
+    let start = Instant::now();
+    let mut factor_evals = 0u64;
+    let mut accepted = 0u64;
+    let mut last_published = 0u64;
+    for it in 0..spec.iters {
+        let st = sampler.step(&mut state, &mut rng);
+        factor_evals += st.factor_evals;
+        accepted += st.accepted as u64;
+        use super::sink::SampleSink;
+        sink.on_sample(it, &state);
+        if it % METRICS_BATCH == METRICS_BATCH - 1 {
+            steps_counter.add(METRICS_BATCH);
+            evals_counter.add(factor_evals - last_published);
+            last_published = factor_evals;
+        }
+        if spec.checkpoint_every > 0 && (it + 1) % spec.checkpoint_every == 0 {
+            if let Some(dir) = &spec.checkpoint_dir {
+                let _ = std::fs::create_dir_all(dir);
+                let ckpt = Checkpoint {
+                    iter: it + 1,
+                    seed: spec.seed,
+                    chain: k,
+                    state: state.clone(),
+                };
+                ckpt.save(&dir.join(format!("chain{k}.ckpt")))
+                    .expect("checkpoint write failed");
+            }
+        }
+    }
+    steps_counter.add(spec.iters % METRICS_BATCH);
+    evals_counter.add(factor_evals - last_published);
+    {
+        use super::sink::SampleSink;
+        sink.on_finish(&state);
+    }
+    let seconds = start.elapsed().as_secs_f64();
+    let final_error = sink.estimator().l2_error_vs_uniform();
+    ChainReport {
+        chain: k,
+        trajectory: sink.trajectory,
+        final_error,
+        factor_evals,
+        acceptance: accepted as f64 / spec.iters.max(1) as f64,
+        seconds,
+        final_state: state,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::models;
+    use crate::samplers::EnergyPath;
+
+    #[test]
+    fn runs_multiple_chains() {
+        let g = models::tiny_random(4, 3, 0.8, 5);
+        let mut spec = RunSpec::new(SamplerSpec::Gibbs(EnergyPath::Specialized));
+        spec.iters = 20_000;
+        spec.chains = 3;
+        spec.record_every = 5_000;
+        let report = run_chains(&g, &spec);
+        assert_eq!(report.chains.len(), 3);
+        for c in &report.chains {
+            assert!(c.final_error < 0.2, "chain {} error {}", c.chain, c.final_error);
+            assert!(!c.trajectory.is_empty());
+            assert_eq!(c.acceptance, 1.0);
+        }
+        assert!(report.steps_per_sec > 0.0);
+        assert!(report.evals_per_iter > 0.0);
+    }
+
+    #[test]
+    fn chains_use_distinct_streams() {
+        let g = models::tiny_random(4, 2, 0.5, 6);
+        let mut spec = RunSpec::new(SamplerSpec::Gibbs(EnergyPath::Generic));
+        spec.iters = 500;
+        spec.chains = 2;
+        let report = run_chains(&g, &spec);
+        // Overwhelmingly the final states should differ.
+        assert_ne!(
+            report.chains[0].final_state, report.chains[1].final_state,
+            "chains produced identical trajectories"
+        );
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let g = models::tiny_random(3, 2, 0.5, 7);
+        let mut spec = RunSpec::new(SamplerSpec::Mgpmh { lambda: 3.0 });
+        spec.iters = 5_000;
+        spec.chains = 2;
+        let a = run_chains(&g, &spec);
+        let b = run_chains(&g, &spec);
+        for (ca, cb) in a.chains.iter().zip(b.chains.iter()) {
+            assert_eq!(ca.final_state, cb.final_state);
+            assert_eq!(ca.factor_evals, cb.factor_evals);
+        }
+    }
+
+    #[test]
+    fn periodic_checkpoints_written_and_loadable() {
+        let g = models::tiny_random(3, 2, 0.5, 9);
+        let dir = std::env::temp_dir().join(format!("mbgibbs_run_ckpt_{}", std::process::id()));
+        let mut spec = RunSpec::new(SamplerSpec::Gibbs(EnergyPath::Specialized));
+        spec.iters = 1_000;
+        spec.chains = 2;
+        spec.checkpoint_dir = Some(dir.clone());
+        spec.checkpoint_every = 400;
+        let report = run_chains(&g, &spec);
+        for k in 0..2 {
+            let ckpt =
+                crate::coordinator::Checkpoint::load(&dir.join(format!("chain{k}.ckpt")))
+                    .unwrap();
+            assert_eq!(ckpt.chain, k);
+            assert_eq!(ckpt.iter, 800); // last multiple of 400 within 1000
+            assert_eq!(ckpt.state.len(), 3);
+        }
+        assert_eq!(report.chains.len(), 2);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn metrics_hub_sees_progress() {
+        use std::sync::Arc;
+        let g = models::tiny_random(3, 2, 0.5, 10);
+        let hub = Arc::new(crate::metrics::MetricsHub::new());
+        let mut spec = RunSpec::new(SamplerSpec::Gibbs(EnergyPath::Generic));
+        spec.iters = 10_000;
+        spec.chains = 1;
+        run_chains_with_metrics(&g, &spec, &hub);
+        let snap: std::collections::BTreeMap<String, u64> =
+            hub.snapshot().into_iter().collect();
+        assert_eq!(snap["chain0.steps"], 10_000);
+        assert!(snap["chain0.factor_evals"] > 0);
+    }
+
+    #[test]
+    fn respects_custom_init() {
+        let g = models::tiny_random(3, 3, 0.3, 8);
+        let mut spec = RunSpec::new(SamplerSpec::Gibbs(EnergyPath::Specialized));
+        spec.iters = 1;
+        spec.init = Some(vec![2, 2, 2]);
+        let report = run_chains(&g, &spec);
+        // After one step only one variable may have changed.
+        let diff = report.chains[0]
+            .final_state
+            .iter()
+            .filter(|&&v| v != 2)
+            .count();
+        assert!(diff <= 1);
+    }
+}

@@ -1,0 +1,121 @@
+//! Sample sinks: streaming consumers of chain output.
+
+use crate::analysis::MarginalEstimator;
+use crate::graph::FactorGraph;
+
+/// A streaming consumer of samples from one chain.
+pub trait SampleSink: Send {
+    /// Called after every sampler step with the current state.
+    fn on_sample(&mut self, iter: u64, state: &[u16]);
+
+    /// Called once when the chain finishes.
+    fn on_finish(&mut self, _final_state: &[u16]) {}
+}
+
+/// Records the paper's Figure-1/2 metric: the running-marginal ℓ₂ error
+/// vs uniform, checkpointed every `record_every` iterations.
+pub struct MarginalTrajectorySink {
+    estimator: MarginalEstimator,
+    record_every: u64,
+    /// (iteration, error) checkpoints.
+    pub trajectory: Vec<(u64, f64)>,
+}
+
+impl MarginalTrajectorySink {
+    /// New sink for `n` variables over domain `d`.
+    pub fn new(n: usize, d: usize, record_every: u64) -> Self {
+        Self {
+            estimator: MarginalEstimator::new(n, d),
+            record_every: record_every.max(1),
+            trajectory: Vec::new(),
+        }
+    }
+
+    /// Final marginal estimator (e.g. to compare chains).
+    pub fn estimator(&self) -> &MarginalEstimator {
+        &self.estimator
+    }
+}
+
+impl SampleSink for MarginalTrajectorySink {
+    fn on_sample(&mut self, iter: u64, state: &[u16]) {
+        self.estimator.update(state);
+        if iter % self.record_every == 0 {
+            self.trajectory
+                .push((iter, self.estimator.l2_error_vs_uniform()));
+        }
+    }
+
+    fn on_finish(&mut self, _final_state: &[u16]) {
+        self.trajectory.push((
+            self.estimator.samples(),
+            self.estimator.l2_error_vs_uniform(),
+        ));
+    }
+}
+
+/// Records a thinned trace of the total energy ζ(x) — handy for mixing
+/// diagnostics (autocorrelation/ESS are computed on this series).
+pub struct EnergyTraceSink<'g> {
+    graph: &'g FactorGraph,
+    every: u64,
+    /// Thinned energy series.
+    pub trace: Vec<f64>,
+}
+
+impl<'g> EnergyTraceSink<'g> {
+    /// Record ζ(x) every `every` iterations.
+    pub fn new(graph: &'g FactorGraph, every: u64) -> Self {
+        Self {
+            graph,
+            every: every.max(1),
+            trace: Vec::new(),
+        }
+    }
+}
+
+impl SampleSink for EnergyTraceSink<'_> {
+    fn on_sample(&mut self, iter: u64, state: &[u16]) {
+        if iter % self.every == 0 {
+            self.trace.push(self.graph.total_energy(state));
+        }
+    }
+}
+
+/// Discards everything (benchmark baseline).
+pub struct NullSink;
+
+impl SampleSink for NullSink {
+    fn on_sample(&mut self, _iter: u64, _state: &[u16]) {}
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::models;
+
+    #[test]
+    fn marginal_sink_checkpoints() {
+        let mut sink = MarginalTrajectorySink::new(2, 2, 10);
+        for it in 0..35u64 {
+            sink.on_sample(it, &[0, 1]);
+        }
+        sink.on_finish(&[0, 1]);
+        // checkpoints at 0, 10, 20, 30 + final
+        assert_eq!(sink.trajectory.len(), 5);
+        assert!(sink.trajectory.iter().all(|&(_, e)| e.is_finite()));
+    }
+
+    #[test]
+    fn energy_trace_thinned() {
+        let g = models::tiny_random(3, 2, 1.0, 1);
+        let mut sink = EnergyTraceSink::new(&g, 5);
+        let state = vec![0u16; 3];
+        for it in 0..20u64 {
+            sink.on_sample(it, &state);
+        }
+        assert_eq!(sink.trace.len(), 4);
+        let want = g.total_energy(&state);
+        assert!(sink.trace.iter().all(|&e| (e - want).abs() < 1e-12));
+    }
+}

@@ -1,0 +1,152 @@
+//! Incremental factor-graph construction with validation.
+
+use super::{Factor, FactorGraph};
+
+/// Builder for [`FactorGraph`]: collect factors, then `build()`.
+#[derive(Clone, Debug)]
+pub struct FactorGraphBuilder {
+    n: usize,
+    d: u16,
+    factors: Vec<Factor>,
+}
+
+impl FactorGraphBuilder {
+    /// Start a graph over `n` variables with shared domain `{0, .., d-1}`.
+    pub fn new(n: usize, d: u16) -> Self {
+        assert!(n > 0, "need at least one variable");
+        assert!(d >= 2, "domain size must be >= 2");
+        Self {
+            n,
+            d,
+            factors: Vec::new(),
+        }
+    }
+
+    fn check_var(&self, v: u32) {
+        assert!(
+            (v as usize) < self.n,
+            "variable {v} out of range (n = {})",
+            self.n
+        );
+    }
+
+    /// Add `w * delta(x_i, x_j)`; w must be ≥ 0 and finite.
+    pub fn add_potts_pair(&mut self, i: u32, j: u32, w: f64) -> &mut Self {
+        self.check_var(i);
+        self.check_var(j);
+        assert!(i != j, "potts pair needs distinct variables");
+        assert!(w >= 0.0 && w.is_finite(), "weight must be >= 0, got {w}");
+        self.factors.push(Factor::PottsPair { i, j, w });
+        self
+    }
+
+    /// Add `w * (s_i s_j + 1)` (spins ±1 encoded as {0,1}); requires D = 2.
+    pub fn add_ising_pair(&mut self, i: u32, j: u32, w: f64) -> &mut Self {
+        assert_eq!(self.d, 2, "ising pairs require domain size 2");
+        self.check_var(i);
+        self.check_var(j);
+        assert!(i != j, "ising pair needs distinct variables");
+        assert!(w >= 0.0 && w.is_finite(), "weight must be >= 0, got {w}");
+        self.factors.push(Factor::IsingPair { i, j, w });
+        self
+    }
+
+    /// Add a dense non-negative table factor over `vars` (row-major,
+    /// last variable fastest). Table length must be D^arity.
+    pub fn add_table(&mut self, vars: Vec<u32>, table: Vec<f64>) -> &mut Self {
+        assert!(!vars.is_empty() && vars.len() <= 4, "table arity must be 1..=4");
+        for &v in &vars {
+            self.check_var(v);
+        }
+        let want = (self.d as usize).pow(vars.len() as u32);
+        assert_eq!(
+            table.len(),
+            want,
+            "table length {} != D^arity = {want}",
+            table.len()
+        );
+        assert!(
+            table.iter().all(|&v| v >= 0.0 && v.is_finite()),
+            "table entries must be non-negative and finite"
+        );
+        self.factors.push(Factor::Table {
+            vars,
+            d: self.d,
+            table,
+        });
+        self
+    }
+
+    /// Number of factors added so far.
+    pub fn num_factors(&self) -> usize {
+        self.factors.len()
+    }
+
+    /// Finalize: compute CSR adjacency and Definition-1 statistics.
+    pub fn build(self) -> FactorGraph {
+        assert!(
+            !self.factors.is_empty(),
+            "graph must have at least one factor"
+        );
+        FactorGraph::from_parts(self.n, self.d, self.factors)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builds_mixed_graph() {
+        let mut b = FactorGraphBuilder::new(3, 4);
+        b.add_potts_pair(0, 1, 1.0)
+            .add_potts_pair(1, 2, 2.0)
+            .add_table(vec![0], vec![0.0, 0.1, 0.2, 0.3]);
+        assert_eq!(b.num_factors(), 3);
+        let g = b.build();
+        assert_eq!(g.n(), 3);
+        assert_eq!(g.num_factors(), 3);
+        assert_eq!(g.stats().delta, 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn rejects_bad_var() {
+        let mut b = FactorGraphBuilder::new(2, 2);
+        b.add_potts_pair(0, 5, 1.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "distinct")]
+    fn rejects_self_pair() {
+        let mut b = FactorGraphBuilder::new(2, 2);
+        b.add_potts_pair(1, 1, 1.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "domain size 2")]
+    fn rejects_ising_with_large_domain() {
+        let mut b = FactorGraphBuilder::new(2, 3);
+        b.add_ising_pair(0, 1, 1.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "table length")]
+    fn rejects_bad_table_len() {
+        let mut b = FactorGraphBuilder::new(2, 3);
+        b.add_table(vec![0, 1], vec![1.0; 8]);
+    }
+
+    #[test]
+    #[should_panic(expected = "non-negative")]
+    fn rejects_negative_table() {
+        let mut b = FactorGraphBuilder::new(1, 2);
+        b.add_table(vec![0], vec![1.0, -0.5]);
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one factor")]
+    fn rejects_empty_graph() {
+        FactorGraphBuilder::new(2, 2).build();
+    }
+}

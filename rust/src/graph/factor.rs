@@ -1,0 +1,196 @@
+//! Factor kinds.
+//!
+//! All factors are non-negative (the paper's WLOG convention): π(x) ∝
+//! exp(Σ φ(x)) with 0 ≤ φ(x) ≤ M_φ. Three kinds cover the paper's
+//! experiments and general usage:
+//!
+//! * [`Factor::PottsPair`] — `w · δ(x_i, x_j)`: the §B Potts interaction.
+//! * [`Factor::IsingPair`] — `w · (s_i s_j + 1)` with spins s = ±1 encoded
+//!   as values {0, 1}: the §B Ising interaction (equals `2w · δ`).
+//! * [`Factor::Table`] — arbitrary non-negative table over ≤ 4 variables:
+//!   the general factor-graph case (and the O(D·arity) cost model).
+
+/// One non-negative factor φ.
+#[derive(Clone, Debug)]
+pub enum Factor {
+    /// `w * delta(x_i, x_j)`, w ≥ 0.
+    PottsPair { i: u32, j: u32, w: f64 },
+    /// `w * (s_i * s_j + 1)` with s = 2x − 1 ∈ {−1, +1}, w ≥ 0.
+    IsingPair { i: u32, j: u32, w: f64 },
+    /// Dense non-negative table over `vars` (row-major, last var fastest).
+    Table {
+        vars: Vec<u32>,
+        /// Domain size used to index the table.
+        d: u16,
+        table: Vec<f64>,
+    },
+}
+
+impl Factor {
+    /// φ(x).
+    #[inline]
+    pub fn value(&self, state: &[u16]) -> f64 {
+        match self {
+            Factor::PottsPair { i, j, w } => {
+                if state[*i as usize] == state[*j as usize] {
+                    *w
+                } else {
+                    0.0
+                }
+            }
+            Factor::IsingPair { i, j, w } => {
+                // s_i s_j + 1 = 2 if equal else 0
+                if state[*i as usize] == state[*j as usize] {
+                    2.0 * *w
+                } else {
+                    0.0
+                }
+            }
+            Factor::Table { vars, d, table } => {
+                let mut idx = 0usize;
+                for &v in vars {
+                    idx = idx * (*d as usize) + state[v as usize] as usize;
+                }
+                table[idx]
+            }
+        }
+    }
+
+    /// M_φ = max_x φ(x) (Definition 1).
+    pub fn max_energy(&self) -> f64 {
+        match self {
+            Factor::PottsPair { w, .. } => *w,
+            Factor::IsingPair { w, .. } => 2.0 * *w,
+            Factor::Table { table, .. } => {
+                table.iter().cloned().fold(0.0f64, f64::max)
+            }
+        }
+    }
+
+    /// Visit each variable this factor depends on.
+    #[inline]
+    pub fn for_each_var<F: FnMut(usize)>(&self, mut f: F) {
+        match self {
+            Factor::PottsPair { i, j, .. } | Factor::IsingPair { i, j, .. } => {
+                f(*i as usize);
+                f(*j as usize);
+            }
+            Factor::Table { vars, .. } => {
+                for &v in vars {
+                    f(v as usize);
+                }
+            }
+        }
+    }
+
+    /// Number of variables (arity).
+    pub fn arity(&self) -> usize {
+        match self {
+            Factor::PottsPair { .. } | Factor::IsingPair { .. } => 2,
+            Factor::Table { vars, .. } => vars.len(),
+        }
+    }
+
+    /// Add this factor's contribution to the conditional-energy vector of
+    /// variable `i`: `out[u] += φ(x_{i→u})` for all u — in O(1) for
+    /// pairwise factors, O(D) for tables. `state[i]` may hold any value;
+    /// it is not read for pairwise factors and is overwritten per-u for
+    /// tables (callers restore it afterwards).
+    #[inline]
+    pub fn accumulate_cond(&self, state: &mut [u16], i: usize, out: &mut [f64]) {
+        match self {
+            Factor::PottsPair { i: a, j: b, w } => {
+                let other = if *a as usize == i { *b } else { *a } as usize;
+                out[state[other] as usize] += *w;
+            }
+            Factor::IsingPair { i: a, j: b, w } => {
+                let other = if *a as usize == i { *b } else { *a } as usize;
+                out[state[other] as usize] += 2.0 * *w;
+            }
+            Factor::Table { .. } => {
+                for (u, slot) in out.iter_mut().enumerate() {
+                    state[i] = u as u16;
+                    *slot += self.value(state);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn potts_pair_value() {
+        let f = Factor::PottsPair { i: 0, j: 1, w: 2.5 };
+        assert_eq!(f.value(&[3, 3]), 2.5);
+        assert_eq!(f.value(&[3, 4]), 0.0);
+        assert_eq!(f.max_energy(), 2.5);
+        assert_eq!(f.arity(), 2);
+    }
+
+    #[test]
+    fn ising_pair_value() {
+        let f = Factor::IsingPair { i: 0, j: 1, w: 0.7 };
+        // equal spins: s_i s_j + 1 = 2
+        assert!((f.value(&[0, 0]) - 1.4).abs() < 1e-15);
+        assert!((f.value(&[1, 1]) - 1.4).abs() < 1e-15);
+        assert_eq!(f.value(&[0, 1]), 0.0);
+        assert!((f.max_energy() - 1.4).abs() < 1e-15);
+    }
+
+    #[test]
+    fn table_value_row_major() {
+        // f(x0, x1) over D=3: table[x0*3 + x1]
+        let table: Vec<f64> = (0..9).map(|v| v as f64).collect();
+        let f = Factor::Table {
+            vars: vec![0, 1],
+            d: 3,
+            table,
+        };
+        assert_eq!(f.value(&[0, 0]), 0.0);
+        assert_eq!(f.value(&[1, 2]), 5.0);
+        assert_eq!(f.value(&[2, 1]), 7.0);
+        assert_eq!(f.max_energy(), 8.0);
+    }
+
+    #[test]
+    fn unary_table() {
+        let f = Factor::Table {
+            vars: vec![2],
+            d: 4,
+            table: vec![0.1, 0.2, 0.3, 0.05],
+        };
+        assert_eq!(f.value(&[0, 0, 2]), 0.3);
+        assert_eq!(f.max_energy(), 0.3);
+        assert_eq!(f.arity(), 1);
+    }
+
+    #[test]
+    fn accumulate_cond_matches_value_loop() {
+        let factors = vec![
+            Factor::PottsPair { i: 0, j: 1, w: 1.0 },
+            Factor::IsingPair { i: 1, j: 0, w: 0.5 },
+            Factor::Table {
+                vars: vec![0, 1],
+                d: 3,
+                table: (0..9).map(|v| (v * v) as f64 * 0.1).collect(),
+            },
+        ];
+        for f in &factors {
+            let mut state = vec![2u16, 1u16];
+            let mut fast = vec![0.0; 3];
+            f.accumulate_cond(&mut state, 0, &mut fast);
+            for u in 0..3u16 {
+                let mut s = vec![u, 1u16];
+                let want = f.value(&mut s);
+                assert!(
+                    (fast[u as usize] - want).abs() < 1e-12,
+                    "{f:?} u={u}: {} vs {want}",
+                    fast[u as usize]
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,243 @@
+//! Factor-graph substrate: the model class of the paper (§1.1).
+//!
+//! A [`FactorGraph`] holds `n` categorical variables over a shared domain
+//! `{0, .., D-1}` and a set of non-negative factors φ with π(x) ∝
+//! exp(Σ_φ φ(x)). The bipartite variable↔factor adjacency is stored in CSR
+//! form; Definition-1 statistics (max energies M_φ, total Ψ, local L,
+//! degree Δ) are computed at build time and cached.
+
+pub mod builder;
+pub mod factor;
+pub mod models;
+pub mod stats;
+
+pub use builder::FactorGraphBuilder;
+pub use factor::Factor;
+pub use stats::GraphStats;
+
+/// A variable assignment: `state[i] ∈ {0, .., D-1}`.
+pub type State = Vec<u16>;
+
+/// An immutable factor graph with cached Definition-1 statistics.
+#[derive(Clone, Debug)]
+pub struct FactorGraph {
+    n: usize,
+    d: u16,
+    factors: Vec<Factor>,
+    max_energies: Vec<f64>,
+    // CSR: factors adjacent to variable i are
+    // adj_factors[adj_offsets[i] .. adj_offsets[i+1]].
+    adj_offsets: Vec<u32>,
+    adj_factors: Vec<u32>,
+    stats: GraphStats,
+}
+
+impl FactorGraph {
+    pub(crate) fn from_parts(n: usize, d: u16, factors: Vec<Factor>) -> Self {
+        assert!(n > 0 && d >= 2, "need n > 0 variables and D >= 2 values");
+        let max_energies: Vec<f64> = factors.iter().map(|f| f.max_energy()).collect();
+        for (fid, &m) in max_energies.iter().enumerate() {
+            assert!(
+                m.is_finite() && m >= 0.0,
+                "factor {fid} has invalid max energy {m}"
+            );
+        }
+        // Build CSR adjacency.
+        let mut degree = vec![0u32; n];
+        for f in &factors {
+            f.for_each_var(|v| degree[v] += 1);
+        }
+        let mut adj_offsets = vec![0u32; n + 1];
+        for i in 0..n {
+            adj_offsets[i + 1] = adj_offsets[i] + degree[i];
+        }
+        let mut cursor: Vec<u32> = adj_offsets[..n].to_vec();
+        let mut adj_factors = vec![0u32; adj_offsets[n] as usize];
+        for (fid, f) in factors.iter().enumerate() {
+            f.for_each_var(|v| {
+                adj_factors[cursor[v] as usize] = fid as u32;
+                cursor[v] += 1;
+            });
+        }
+        let stats = GraphStats::compute(n, &max_energies, &adj_offsets, &adj_factors);
+        Self {
+            n,
+            d,
+            factors,
+            max_energies,
+            adj_offsets,
+            adj_factors,
+            stats,
+        }
+    }
+
+    /// Number of variables n.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Shared domain size D.
+    pub fn domain_size(&self) -> u16 {
+        self.d
+    }
+
+    /// Number of factors |Φ|.
+    pub fn num_factors(&self) -> usize {
+        self.factors.len()
+    }
+
+    /// The factor with id `fid`.
+    pub fn factor(&self, fid: usize) -> &Factor {
+        &self.factors[fid]
+    }
+
+    /// All factors.
+    pub fn factors(&self) -> &[Factor] {
+        &self.factors
+    }
+
+    /// Factor ids adjacent to variable `i` (the paper's A[i]).
+    #[inline]
+    pub fn factors_of(&self, i: usize) -> &[u32] {
+        let lo = self.adj_offsets[i] as usize;
+        let hi = self.adj_offsets[i + 1] as usize;
+        &self.adj_factors[lo..hi]
+    }
+
+    /// Maximum energy M_φ of factor `fid` (Definition 1).
+    #[inline]
+    pub fn max_energy(&self, fid: usize) -> f64 {
+        self.max_energies[fid]
+    }
+
+    /// All per-factor maximum energies.
+    pub fn max_energies(&self) -> &[f64] {
+        &self.max_energies
+    }
+
+    /// Cached Definition-1 statistics (Δ, L, Ψ, per-variable L_i).
+    pub fn stats(&self) -> &GraphStats {
+        &self.stats
+    }
+
+    /// Evaluate factor `fid` on `state`.
+    #[inline]
+    pub fn value(&self, fid: usize, state: &[u16]) -> f64 {
+        self.factors[fid].value(state)
+    }
+
+    /// ζ(x) = Σ_φ φ(x): the total energy.
+    pub fn total_energy(&self, state: &[u16]) -> f64 {
+        self.factors.iter().map(|f| f.value(state)).sum()
+    }
+
+    /// Σ_{φ ∈ A[i]} φ(x): the energy local to variable `i`.
+    pub fn local_energy(&self, state: &[u16], i: usize) -> f64 {
+        self.factors_of(i)
+            .iter()
+            .map(|&fid| self.factors[fid as usize].value(state))
+            .sum()
+    }
+
+    /// Conditional energies ε_u = Σ_{φ∈A[i]} φ(x_{i→u}) for all u, via the
+    /// generic per-factor evaluation loop — the O(DΔ) path of Algorithm 1
+    /// that the paper's cost model assumes. `state` is restored on return.
+    ///
+    /// This is the *measured* baseline for the Table-1 reproduction; use
+    /// [`FactorGraph::cond_energies_fast`] in production.
+    pub fn cond_energies_generic(&self, state: &mut [u16], i: usize, out: &mut [f64]) {
+        debug_assert_eq!(out.len(), self.d as usize);
+        let saved = state[i];
+        for (u, slot) in out.iter_mut().enumerate() {
+            state[i] = u as u16;
+            *slot = self.local_energy(state, i);
+        }
+        state[i] = saved;
+    }
+
+    /// Conditional energies via factor-structure-aware accumulation:
+    /// pairwise factors contribute to a single `out[u]` bucket in O(1),
+    /// so the whole call is O(Δ + D) instead of O(ΔD).
+    pub fn cond_energies_fast(&self, state: &mut [u16], i: usize, out: &mut [f64]) {
+        debug_assert_eq!(out.len(), self.d as usize);
+        out.fill(0.0);
+        let saved = state[i];
+        for &fid in self.factors_of(i) {
+            self.factors[fid as usize].accumulate_cond(state, i, out);
+        }
+        state[i] = saved;
+    }
+
+    /// Flat index of the first factor touching each variable — handy for
+    /// deterministic iteration in tests.
+    pub fn degree(&self, i: usize) -> usize {
+        self.factors_of(i).len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn two_var_graph() -> FactorGraph {
+        // phi0 = 1.5 * delta(x0, x1); phi1 = table on x0: [0.2, 0.7]
+        let mut b = FactorGraphBuilder::new(2, 2);
+        b.add_potts_pair(0, 1, 1.5);
+        b.add_table(vec![0], vec![0.2, 0.7]);
+        b.build()
+    }
+
+    #[test]
+    fn adjacency_csr() {
+        let g = two_var_graph();
+        assert_eq!(g.factors_of(0), &[0, 1]);
+        assert_eq!(g.factors_of(1), &[0]);
+        assert_eq!(g.degree(0), 2);
+        assert_eq!(g.degree(1), 1);
+    }
+
+    #[test]
+    fn stats_definition_1() {
+        let g = two_var_graph();
+        let s = g.stats();
+        assert_eq!(s.delta, 2);
+        // Psi = 1.5 + 0.7; L = max(1.5 + 0.7, 1.5)
+        assert!((s.psi - 2.2).abs() < 1e-12);
+        assert!((s.l - 2.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn energies() {
+        let g = two_var_graph();
+        assert!((g.total_energy(&[0, 0]) - (1.5 + 0.2)).abs() < 1e-12);
+        assert!((g.total_energy(&[1, 0]) - 0.7).abs() < 1e-12);
+        assert!((g.local_energy(&[0, 0], 1) - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cond_energies_generic_vs_fast() {
+        let g = two_var_graph();
+        let mut state = vec![1u16, 0u16];
+        let mut a = vec![0.0; 2];
+        let mut b = vec![0.0; 2];
+        for i in 0..2 {
+            g.cond_energies_generic(&mut state, i, &mut a);
+            g.cond_energies_fast(&mut state, i, &mut b);
+            for u in 0..2 {
+                assert!((a[u] - b[u]).abs() < 1e-12, "i={i} u={u}: {a:?} vs {b:?}");
+            }
+        }
+        assert_eq!(state, vec![1, 0]); // state restored
+    }
+
+    #[test]
+    fn cond_energies_values() {
+        let g = two_var_graph();
+        let mut state = vec![0u16, 1u16];
+        let mut e = vec![0.0; 2];
+        g.cond_energies_fast(&mut state, 0, &mut e);
+        // u=0: potts 0 (x1=1) + table 0.2; u=1: potts 1.5 + table 0.7
+        assert!((e[0] - 0.2).abs() < 1e-12);
+        assert!((e[1] - 2.2).abs() < 1e-12);
+    }
+}

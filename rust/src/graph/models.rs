@@ -1,0 +1,326 @@
+//! Model zoo: the paper's §B synthetic models plus workload generators
+//! for the Table-1 sweeps and the exact-chain validation suite.
+//!
+//! Conventions (shared with python/compile/model.py — see the docstring
+//! there for how the paper's reported constants pin them down): one factor
+//! per *unordered* pair {i, j}, with
+//!
+//! * Potts:  φ_ij = β A_ij δ(x_i, x_j),       M_φ = β A_ij
+//! * Ising:  φ_ij = β A_ij (s_i s_j + 1),      M_φ = 2 β A_ij
+//!
+//! where A_ij = exp(−γ d_ij²) on the grid. Paper constants reproduced by
+//! these builders (asserted in tests): Ising β=1: L = 2.21, Ψ = 416.1;
+//! Potts β=4.6: L = 5.09, Ψ = 957.1.
+
+use super::{FactorGraph, FactorGraphBuilder};
+use crate::rng::{Pcg64, Rng};
+
+/// A dense pairwise model: the factor graph plus the dense matrices the
+/// XLA backend feeds the AOT kernels.
+#[derive(Clone, Debug)]
+pub struct DenseModel {
+    /// The factor graph (source of truth for the samplers).
+    pub graph: FactorGraph,
+    /// Row-major n×n kernel weight matrix W with zero diagonal, defined so
+    /// that the conditional energies are ε_u(i) = β Σ_j W_ij δ(u, x_j).
+    /// (W = A for Potts, W = 2A for Ising.)
+    pub kernel_weights: Vec<f64>,
+    /// Inverse temperature β (fed to the XLA kernels as a scalar).
+    pub beta: f64,
+    /// Grid side length N (n = N²).
+    pub grid_n: usize,
+}
+
+impl DenseModel {
+    /// Conditional energies of variable `i` straight from the dense
+    /// weight row: `out[u] = β Σ_j W[i,j] δ(u, x_j)`.
+    ///
+    /// Identical values to `graph.cond_energies_fast` (asserted in tests)
+    /// but reads one contiguous f64 row instead of chasing Δ factor
+    /// objects — the production hot path for dense models (§Perf).
+    #[inline]
+    pub fn cond_energies_row(&self, state: &[u16], i: usize, out: &mut [f64]) {
+        let n = self.graph.n();
+        debug_assert_eq!(out.len(), self.graph.domain_size() as usize);
+        out.fill(0.0);
+        let row = &self.kernel_weights[i * n..(i + 1) * n];
+        for (j, &w) in row.iter().enumerate() {
+            out[state[j] as usize] += w;
+        }
+        // W has a zero diagonal, so x_i's own bucket got += 0 — no fixup.
+        for e in out.iter_mut() {
+            *e *= self.beta;
+        }
+    }
+}
+
+/// Gaussian-RBF interaction matrix A on an N×N grid (paper §B):
+/// `A_ij = exp(−γ ||pos_i − pos_j||²)` for i ≠ j, `A_ii = 0`. Row-major.
+pub fn rbf_interactions(grid_n: usize, gamma: f64) -> Vec<f64> {
+    let n = grid_n * grid_n;
+    let mut a = vec![0.0f64; n * n];
+    for i in 0..n {
+        let (ri, ci) = ((i / grid_n) as f64, (i % grid_n) as f64);
+        for j in 0..n {
+            if i == j {
+                continue;
+            }
+            let (rj, cj) = ((j / grid_n) as f64, (j % grid_n) as f64);
+            let d2 = (ri - rj).powi(2) + (ci - cj).powi(2);
+            a[i * n + j] = (-gamma * d2).exp();
+        }
+    }
+    a
+}
+
+/// The paper's §B Ising model: fully connected N×N grid, RBF interactions,
+/// D = 2 (spins ±1 encoded {0, 1}).
+pub fn ising_rbf(grid_n: usize, beta: f64, gamma: f64) -> DenseModel {
+    let n = grid_n * grid_n;
+    let a = rbf_interactions(grid_n, gamma);
+    let mut b = FactorGraphBuilder::new(n, 2);
+    for i in 0..n {
+        for j in (i + 1)..n {
+            b.add_ising_pair(i as u32, j as u32, beta * a[i * n + j]);
+        }
+    }
+    let kernel_weights = a.iter().map(|&v| 2.0 * v).collect();
+    DenseModel {
+        graph: b.build(),
+        kernel_weights,
+        beta,
+        grid_n,
+    }
+}
+
+/// The paper's §B Potts model: fully connected N×N grid, RBF interactions,
+/// domain size `d` (paper uses D = 10).
+pub fn potts_rbf(grid_n: usize, d: u16, beta: f64, gamma: f64) -> DenseModel {
+    let n = grid_n * grid_n;
+    let a = rbf_interactions(grid_n, gamma);
+    let mut b = FactorGraphBuilder::new(n, d);
+    for i in 0..n {
+        for j in (i + 1)..n {
+            b.add_potts_pair(i as u32, j as u32, beta * a[i * n + j]);
+        }
+    }
+    DenseModel {
+        graph: b.build(),
+        kernel_weights: a,
+        beta,
+        grid_n,
+    }
+}
+
+/// Paper defaults: Ising 20×20, β = 1.0, γ = 1.5 (L = 2.21, Ψ = 416.1).
+pub fn paper_ising() -> DenseModel {
+    ising_rbf(20, 1.0, 1.5)
+}
+
+/// Paper defaults: Potts 20×20, D = 10, β = 4.6, γ = 1.5
+/// (L = 5.09, Ψ = 957.1).
+pub fn paper_potts() -> DenseModel {
+    potts_rbf(20, 10, 4.6, 1.5)
+}
+
+/// Classic 4-neighbor grid Ising (sparse): a contrast workload where Δ is
+/// tiny and minibatching cannot win — used in ablation benches.
+pub fn ising_grid_local(grid_n: usize, beta: f64) -> FactorGraph {
+    let n = grid_n * grid_n;
+    let mut b = FactorGraphBuilder::new(n, 2);
+    for r in 0..grid_n {
+        for c in 0..grid_n {
+            let i = (r * grid_n + c) as u32;
+            if c + 1 < grid_n {
+                b.add_ising_pair(i, i + 1, beta);
+            }
+            if r + 1 < grid_n {
+                b.add_ising_pair(i, i + grid_n as u32, beta);
+            }
+        }
+    }
+    b.build()
+}
+
+/// Random sparse pairwise Potts graph: each variable gets ~`degree`
+/// neighbors with i.i.d. Uniform(0, max_w] weights. For coordinator and
+/// failure-injection tests.
+pub fn potts_random(n: usize, d: u16, degree: usize, max_w: f64, seed: u64) -> FactorGraph {
+    assert!(degree < n);
+    let mut rng = Pcg64::seeded(seed);
+    let mut b = FactorGraphBuilder::new(n, d);
+    let mut seen = std::collections::HashSet::new();
+    for i in 0..n {
+        for _ in 0..degree.div_ceil(2) {
+            let mut j = rng.index(n);
+            while j == i {
+                j = rng.index(n);
+            }
+            let (lo, hi) = (i.min(j), i.max(j));
+            if seen.insert((lo, hi)) {
+                b.add_potts_pair(lo as u32, hi as u32, rng.f64_open() * max_w);
+            }
+        }
+    }
+    b.build()
+}
+
+/// Table-1 workload (fixed L): a fully connected Potts graph over `n`
+/// variables where every pair weight is `l_target / (n - 1)` — so
+/// Δ = n − 1 grows with n while L = l_target stays constant
+/// (Ψ = n·l_target/2 grows). Sweeping n isolates the Δ-dependence of
+/// Gibbs O(DΔ) vs MGPMH O(DL² + Δ).
+pub fn table1_workload(n: usize, d: u16, l_target: f64) -> FactorGraph {
+    assert!(n >= 2);
+    let w = l_target / (n - 1) as f64;
+    let mut b = FactorGraphBuilder::new(n, d);
+    for i in 0..n as u32 {
+        for j in (i + 1)..n as u32 {
+            b.add_potts_pair(i, j, w);
+        }
+    }
+    b.build()
+}
+
+/// Table-1 workload (fixed Ψ): a fully connected Potts graph where every
+/// pair weight is `2·psi_target / (n(n−1))` — the paper's "very large
+/// number of low-energy factors" regime. Δ = n − 1 grows while
+/// Ψ = psi_target stays constant (and L = 2Ψ/n shrinks), so MIN-Gibbs's
+/// O(DΨ²) and DoubleMIN's O(DL² + Ψ²) costs are provably flat in Δ.
+pub fn table1_workload_fixed_psi(n: usize, d: u16, psi_target: f64) -> FactorGraph {
+    assert!(n >= 2);
+    let w = 2.0 * psi_target / (n as f64 * (n - 1) as f64);
+    let mut b = FactorGraphBuilder::new(n, d);
+    for i in 0..n as u32 {
+        for j in (i + 1)..n as u32 {
+            b.add_potts_pair(i, j, w);
+        }
+    }
+    b.build()
+}
+
+/// Tiny random model with enumerable state space (for the exact-chain
+/// spectral validation): fully connected Potts over `n ≤ 8` variables
+/// with Uniform(0, max_w] weights.
+pub fn tiny_random(n: usize, d: u16, max_w: f64, seed: u64) -> FactorGraph {
+    assert!(n <= 8, "state space must stay enumerable");
+    let mut rng = Pcg64::seeded(seed);
+    let mut b = FactorGraphBuilder::new(n, d);
+    for i in 0..n as u32 {
+        for j in (i + 1)..n as u32 {
+            b.add_potts_pair(i, j, rng.f64_open() * max_w);
+        }
+    }
+    b.build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rbf_matrix_properties() {
+        let a = rbf_interactions(4, 1.5);
+        let n = 16;
+        for i in 0..n {
+            assert_eq!(a[i * n + i], 0.0);
+            for j in 0..n {
+                assert!((a[i * n + j] - a[j * n + i]).abs() < 1e-15);
+            }
+        }
+        // neighbors: d² = 1
+        assert!((a[1] - (-1.5f64).exp()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn paper_ising_constants() {
+        // Paper §2: L = 2.21, Ψ = 416.1 for the 20×20 RBF Ising at β=1.
+        let m = paper_ising();
+        let s = m.graph.stats();
+        assert_eq!(m.graph.n(), 400);
+        assert_eq!(s.delta, 399);
+        assert!((s.psi - 416.1).abs() < 0.2, "psi = {}", s.psi);
+        assert!((s.l - 2.21).abs() < 0.01, "l = {}", s.l);
+    }
+
+    #[test]
+    fn paper_potts_constants() {
+        // Paper §3: L = 5.09, Ψ = 957.1 for the 20×20 RBF Potts at β=4.6.
+        let m = paper_potts();
+        let s = m.graph.stats();
+        assert_eq!(m.graph.n(), 400);
+        assert_eq!(m.graph.domain_size(), 10);
+        assert!((s.psi - 957.1).abs() < 0.5, "psi = {}", s.psi);
+        assert!((s.l - 5.09).abs() < 0.01, "l = {}", s.l);
+        // The regime the paper targets: L² ≪ Δ.
+        assert!(s.l * s.l < s.delta as f64 / 10.0);
+    }
+
+    #[test]
+    fn kernel_weights_reproduce_cond_energies() {
+        // ε_u(i) from the dense kernel weights must equal the factor-graph
+        // conditional energies — this is the invariant that makes the
+        // XLA backend interchangeable with the native path.
+        let m = potts_rbf(3, 4, 2.0, 1.0);
+        let n = m.graph.n();
+        let mut rng = Pcg64::seeded(5);
+        let mut state: Vec<u16> = (0..n).map(|_| rng.index(4) as u16).collect();
+        let mut want = vec![0.0; 4];
+        for i in 0..n {
+            m.graph.cond_energies_fast(&mut state, i, &mut want);
+            for u in 0..4usize {
+                let got: f64 = (0..n)
+                    .filter(|&j| state[j] as usize == u && j != i)
+                    .map(|j| m.beta * m.kernel_weights[i * n + j])
+                    .sum();
+                assert!(
+                    (got - want[u]).abs() < 1e-10,
+                    "i={i} u={u}: {got} vs {}",
+                    want[u]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn grid_local_degree() {
+        let g = ising_grid_local(5, 0.4);
+        assert_eq!(g.stats().delta, 4);
+        assert_eq!(g.num_factors(), 2 * 5 * 4);
+    }
+
+    #[test]
+    fn table1_workload_controls_l() {
+        for &n in &[10, 50, 200] {
+            let g = table1_workload(n, 4, 3.0);
+            let s = g.stats();
+            assert_eq!(s.delta, n - 1);
+            assert!((s.l - 3.0).abs() < 1e-9, "n={n}: l={}", s.l);
+            assert!((s.psi - 3.0 * n as f64 / 2.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn table1_workload_fixed_psi_controls_psi() {
+        for &n in &[10, 50, 200] {
+            let g = table1_workload_fixed_psi(n, 4, 8.0);
+            let s = g.stats();
+            assert_eq!(s.delta, n - 1);
+            assert!((s.psi - 8.0).abs() < 1e-9, "n={n}: psi={}", s.psi);
+            assert!((s.l - 16.0 / n as f64).abs() < 1e-9, "n={n}: l={}", s.l);
+        }
+    }
+
+    #[test]
+    fn random_graphs_deterministic_by_seed() {
+        let a = potts_random(30, 3, 6, 1.0, 7);
+        let b = potts_random(30, 3, 6, 1.0, 7);
+        assert_eq!(a.num_factors(), b.num_factors());
+        let c = potts_random(30, 3, 6, 1.0, 8);
+        // different seed should (overwhelmingly) give a different graph
+        assert!(a.num_factors() != c.num_factors() || {
+            let s: Vec<u16> = vec![0; 30];
+            (a.total_energy(&s) - c.total_energy(&s)).abs() > 1e-12
+        });
+    }
+}

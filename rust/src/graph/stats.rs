@@ -1,0 +1,95 @@
+//! Definition-1 statistics: Δ, L, Ψ and friends, computed once per graph.
+
+/// Cached graph statistics (Definition 1 of the paper).
+#[derive(Clone, Debug, PartialEq)]
+pub struct GraphStats {
+    /// Maximum degree Δ = max_i |A[i]|.
+    pub delta: usize,
+    /// Total maximum energy Ψ = Σ_φ M_φ.
+    pub psi: f64,
+    /// Local maximum energy L = max_i Σ_{φ∈A[i]} M_φ.
+    pub l: f64,
+    /// Per-variable local energies L_i = Σ_{φ∈A[i]} M_φ.
+    pub per_var_l: Vec<f64>,
+}
+
+impl GraphStats {
+    pub(crate) fn compute(
+        n: usize,
+        max_energies: &[f64],
+        adj_offsets: &[u32],
+        adj_factors: &[u32],
+    ) -> Self {
+        let psi: f64 = max_energies.iter().sum();
+        let mut delta = 0usize;
+        let mut l = 0.0f64;
+        let mut per_var_l = vec![0.0f64; n];
+        for i in 0..n {
+            let lo = adj_offsets[i] as usize;
+            let hi = adj_offsets[i + 1] as usize;
+            delta = delta.max(hi - lo);
+            let li: f64 = adj_factors[lo..hi]
+                .iter()
+                .map(|&fid| max_energies[fid as usize])
+                .sum();
+            per_var_l[i] = li;
+            l = l.max(li);
+        }
+        Self {
+            delta,
+            psi,
+            l,
+            per_var_l,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::graph::FactorGraphBuilder;
+
+    #[test]
+    fn star_graph_stats() {
+        // variable 0 is the hub of a 5-spoke star, each spoke weight 0.5
+        let mut b = FactorGraphBuilder::new(6, 2);
+        for j in 1..6 {
+            b.add_potts_pair(0, j, 0.5);
+        }
+        let g = b.build();
+        let s = g.stats();
+        assert_eq!(s.delta, 5);
+        assert!((s.psi - 2.5).abs() < 1e-12);
+        assert!((s.l - 2.5).abs() < 1e-12); // the hub
+        assert!((s.per_var_l[1] - 0.5).abs() < 1e-12); // a spoke
+    }
+
+    #[test]
+    fn psi_can_be_small_with_many_factors() {
+        // Many low-energy factors: Psi << |Phi| — the regime where
+        // MIN-Gibbs wins (paper §1.1).
+        let n = 50;
+        let mut b = FactorGraphBuilder::new(n, 2);
+        for i in 0..n as u32 {
+            for j in (i + 1)..n as u32 {
+                b.add_potts_pair(i, j, 0.001);
+            }
+        }
+        let g = b.build();
+        let s = g.stats();
+        let m = n * (n - 1) / 2;
+        assert_eq!(g.num_factors(), m);
+        assert!((s.psi - 0.001 * m as f64).abs() < 1e-9);
+        assert!(s.psi < 2.0);
+        assert_eq!(s.delta, n - 1);
+    }
+
+    #[test]
+    fn l_uses_max_energy_not_value() {
+        // Ising pair max energy is 2w.
+        let mut b = FactorGraphBuilder::new(2, 2);
+        b.add_ising_pair(0, 1, 1.5);
+        let g = b.build();
+        assert!((g.stats().psi - 3.0).abs() < 1e-12);
+        assert!((g.stats().l - 3.0).abs() < 1e-12);
+    }
+}

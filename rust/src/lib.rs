@@ -1,0 +1,44 @@
+//! `mbgibbs` — Minibatch Gibbs Sampling on Large Graphical Models.
+//!
+//! A three-layer reproduction of De Sa, Chen & Wong (ICML 2018):
+//!
+//! * **Layer 3 (this crate)** — the sampling runtime: factor graphs, the
+//!   five samplers (Gibbs, MIN-Gibbs, Local Minibatch Gibbs, MGPMH,
+//!   DoubleMIN-Gibbs), the multi-chain coordinator, analysis tools, the
+//!   benchmark harness, and a PJRT executor for the AOT energy kernels.
+//! * **Layer 2 (python/compile/model.py)** — JAX conditional-energy graphs
+//!   for the paper's dense lattice models, lowered once to HLO text.
+//! * **Layer 1 (python/compile/kernels/)** — Pallas kernels called by L2.
+//!
+//! Python never runs on the sampling path: `make artifacts` compiles the
+//! kernels ahead of time and [`runtime`] loads them via the PJRT C API.
+//!
+//! # Quickstart
+//!
+//! ```no_run
+//! use mbgibbs::graph::models;
+//! use mbgibbs::rng::Pcg64;
+//! use mbgibbs::samplers::{Sampler, MgpmhSampler};
+//!
+//! let model = models::paper_potts();
+//! let mut rng = Pcg64::seeded(0);
+//! let mut state = vec![0u16; model.graph.n()];
+//! let l = model.graph.stats().l;
+//! // Minibatch sampler with the paper's recommended λ = L².
+//! let mut sampler = MgpmhSampler::new(&model.graph, l * l);
+//! for _ in 0..10_000 {
+//!     sampler.step(&mut state, &mut rng);
+//! }
+//! ```
+
+pub mod analysis;
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod graph;
+pub mod metrics;
+pub mod rng;
+pub mod runtime;
+pub mod samplers;
+pub mod testutil;

@@ -1,0 +1,9 @@
+//! `mbgibbs` binary: the Layer-3 leader entrypoint.
+
+fn main() {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = mbgibbs::cli::run(raw) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,190 @@
+//! Lightweight runtime metrics: counters, gauges, and latency histograms.
+//!
+//! The coordinator publishes per-chain progress through a [`MetricsHub`];
+//! everything is lock-cheap (atomics) so metrics never perturb the hot
+//! sampling loop.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Monotone counter.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    /// Increment by `n`.
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-write-wins gauge (bit-cast f64).
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    /// Set the gauge.
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+/// Fixed-bucket log-scale latency histogram (nanoseconds).
+#[derive(Debug)]
+pub struct LatencyHistogram {
+    /// Bucket k covers [2^k, 2^(k+1)) ns; 48 buckets ≈ up to 3 days.
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    total_ns: AtomicU64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    /// Empty histogram.
+    pub fn new() -> Self {
+        Self {
+            buckets: (0..48).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            total_ns: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one duration.
+    pub fn record(&self, d: Duration) {
+        let ns = d.as_nanos().min(u64::MAX as u128) as u64;
+        let bucket = (64 - ns.max(1).leading_zeros() - 1).min(47) as usize;
+        self.buckets[bucket].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.total_ns.fetch_add(ns, Ordering::Relaxed);
+    }
+
+    /// Number of recorded samples.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Mean recorded latency.
+    pub fn mean(&self) -> Duration {
+        let c = self.count();
+        if c == 0 {
+            return Duration::ZERO;
+        }
+        Duration::from_nanos(self.total_ns.load(Ordering::Relaxed) / c)
+    }
+
+    /// Approximate quantile (bucket upper bound), q in [0, 1].
+    pub fn quantile(&self, q: f64) -> Duration {
+        let c = self.count();
+        if c == 0 {
+            return Duration::ZERO;
+        }
+        let target = (q.clamp(0.0, 1.0) * c as f64).ceil() as u64;
+        let mut acc = 0u64;
+        for (k, b) in self.buckets.iter().enumerate() {
+            acc += b.load(Ordering::Relaxed);
+            if acc >= target {
+                return Duration::from_nanos(1u64 << (k + 1));
+            }
+        }
+        Duration::from_nanos(u64::MAX)
+    }
+}
+
+/// Named metrics registry shared between coordinator and CLI reporting.
+#[derive(Debug, Default)]
+pub struct MetricsHub {
+    counters: Mutex<Vec<(String, std::sync::Arc<Counter>)>>,
+}
+
+impl MetricsHub {
+    /// New empty hub.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Get or create a named counter.
+    pub fn counter(&self, name: &str) -> std::sync::Arc<Counter> {
+        let mut g = self.counters.lock().unwrap();
+        if let Some((_, c)) = g.iter().find(|(n, _)| n == name) {
+            return c.clone();
+        }
+        let c = std::sync::Arc::new(Counter::default());
+        g.push((name.to_string(), c.clone()));
+        c
+    }
+
+    /// Snapshot all counters (name, value).
+    pub fn snapshot(&self) -> Vec<(String, u64)> {
+        self.counters
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(n, c)| (n.clone(), c.get()))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_accumulates() {
+        let c = Counter::default();
+        c.add(3);
+        c.add(4);
+        assert_eq!(c.get(), 7);
+    }
+
+    #[test]
+    fn gauge_roundtrips() {
+        let g = Gauge::default();
+        g.set(2.75);
+        assert_eq!(g.get(), 2.75);
+    }
+
+    #[test]
+    fn histogram_mean_and_quantile() {
+        let h = LatencyHistogram::new();
+        for us in [1u64, 2, 4, 8, 1000] {
+            h.record(Duration::from_micros(us));
+        }
+        assert_eq!(h.count(), 5);
+        assert!(h.mean() >= Duration::from_micros(100));
+        assert!(h.quantile(0.5) >= Duration::from_micros(2));
+        assert!(h.quantile(1.0) >= Duration::from_micros(1000));
+    }
+
+    #[test]
+    fn hub_reuses_counters() {
+        let hub = MetricsHub::new();
+        hub.counter("steps").add(5);
+        hub.counter("steps").add(2);
+        let snap = hub.snapshot();
+        assert_eq!(snap, vec![("steps".to_string(), 7)]);
+    }
+
+    #[test]
+    fn histogram_empty() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.mean(), Duration::ZERO);
+        assert_eq!(h.quantile(0.9), Duration::ZERO);
+    }
+}

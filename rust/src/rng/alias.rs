@@ -1,0 +1,172 @@
+//! Walker/Vose alias method: O(1) sampling from a fixed discrete
+//! distribution after O(m) setup.
+//!
+//! The sparse Poisson-vector sampler multinomial-splits `B` trials over the
+//! per-factor probabilities `p_φ = M_φ / Ψ`; the alias table makes each of
+//! the `B` picks O(1), which is what gives the paper's O(λ) total
+//! (§3, footnote 7). Tables are built once per graph and reused.
+
+use super::Rng;
+
+/// Alias table over `m` outcomes with probabilities ∝ `weights`.
+#[derive(Clone, Debug)]
+pub struct AliasTable {
+    prob: Vec<f64>,  // threshold in [0,1] for keeping the slot's own index
+    alias: Vec<u32>, // fallback index per slot
+    total: f64,      // sum of the input weights (callers reuse it as Λ)
+}
+
+impl AliasTable {
+    /// Build from non-negative weights; at least one weight must be > 0.
+    pub fn new(weights: &[f64]) -> Self {
+        assert!(!weights.is_empty(), "alias table needs >= 1 outcome");
+        let m = weights.len();
+        let total: f64 = weights.iter().sum();
+        assert!(
+            total > 0.0 && weights.iter().all(|&w| w >= 0.0 && w.is_finite()),
+            "weights must be non-negative, finite, not all zero"
+        );
+
+        // Vose's stable partition into small/large stacks.
+        let scale = m as f64 / total;
+        let mut scaled: Vec<f64> = weights.iter().map(|&w| w * scale).collect();
+        let mut prob = vec![0.0f64; m];
+        let mut alias = vec![0u32; m];
+        let mut small: Vec<u32> = Vec::with_capacity(m);
+        let mut large: Vec<u32> = Vec::with_capacity(m);
+        for (i, &p) in scaled.iter().enumerate() {
+            if p < 1.0 {
+                small.push(i as u32);
+            } else {
+                large.push(i as u32);
+            }
+        }
+        while let (Some(&s), Some(&l)) = (small.last(), large.last()) {
+            small.pop();
+            prob[s as usize] = scaled[s as usize];
+            alias[s as usize] = l;
+            scaled[l as usize] -= 1.0 - scaled[s as usize];
+            if scaled[l as usize] < 1.0 {
+                large.pop();
+                small.push(l);
+            }
+        }
+        // Numerical leftovers keep their own index with certainty.
+        for &s in small.iter().chain(large.iter()) {
+            prob[s as usize] = 1.0;
+            alias[s as usize] = s;
+        }
+        Self { prob, alias, total }
+    }
+
+    /// Number of outcomes.
+    pub fn len(&self) -> usize {
+        self.prob.len()
+    }
+
+    /// True if the table has no outcomes (never: `new` asserts non-empty).
+    pub fn is_empty(&self) -> bool {
+        self.prob.is_empty()
+    }
+
+    /// Sum of the weights the table was built from.
+    pub fn total_weight(&self) -> f64 {
+        self.total
+    }
+
+    /// Draw one outcome index in O(1).
+    #[inline]
+    pub fn sample<R: Rng + ?Sized>(&self, rng: &mut R) -> usize {
+        let slot = rng.index(self.prob.len());
+        if rng.f64() < self.prob[slot] {
+            slot
+        } else {
+            self.alias[slot] as usize
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    fn empirical(weights: &[f64], n: usize, seed: u64) -> Vec<f64> {
+        let table = AliasTable::new(weights);
+        let mut rng = Pcg64::seeded(seed);
+        let mut counts = vec![0u64; weights.len()];
+        for _ in 0..n {
+            counts[table.sample(&mut rng)] += 1;
+        }
+        counts.iter().map(|&c| c as f64 / n as f64).collect()
+    }
+
+    #[test]
+    fn uniform_weights() {
+        let freq = empirical(&[1.0; 8], 400_000, 21);
+        for &f in &freq {
+            assert!((f - 0.125).abs() < 0.005, "{freq:?}");
+        }
+    }
+
+    #[test]
+    fn skewed_weights() {
+        let w = [0.1, 0.0, 3.0, 0.4, 10.0, 0.001];
+        let total: f64 = w.iter().sum();
+        let freq = empirical(&w, 1_000_000, 22);
+        for (i, (&f, &wi)) in freq.iter().zip(w.iter()).enumerate() {
+            let p = wi / total;
+            assert!((f - p).abs() < 0.004, "i={i} f={f} p={p}");
+        }
+    }
+
+    #[test]
+    fn zero_weight_never_sampled() {
+        let freq = empirical(&[1.0, 0.0, 1.0], 100_000, 23);
+        assert_eq!(freq[1], 0.0);
+    }
+
+    #[test]
+    fn single_outcome() {
+        let freq = empirical(&[5.0], 1000, 24);
+        assert_eq!(freq[0], 1.0);
+    }
+
+    #[test]
+    fn total_weight_recorded() {
+        let t = AliasTable::new(&[1.5, 2.5]);
+        assert!((t.total_weight() - 4.0).abs() < 1e-12);
+        assert_eq!(t.len(), 2);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_all_zero() {
+        AliasTable::new(&[0.0, 0.0]);
+    }
+
+    #[test]
+    fn property_many_random_tables() {
+        // Seeded sweep standing in for proptest: random weight vectors of
+        // random sizes must produce empirical frequencies matching the
+        // normalized weights.
+        let mut meta = Pcg64::seeded(99);
+        use crate::rng::Rng;
+        for trial in 0..10 {
+            let m = 2 + meta.index(40);
+            let weights: Vec<f64> = (0..m).map(|_| meta.f64() * 3.0).collect();
+            let total: f64 = weights.iter().sum();
+            if total <= 0.0 {
+                continue;
+            }
+            let freq = empirical(&weights, 200_000, 1000 + trial);
+            for (i, (&f, &w)) in freq.iter().zip(weights.iter()).enumerate() {
+                let p = w / total;
+                assert!(
+                    (f - p).abs() < 0.01,
+                    "trial={trial} i={i} f={f} p={p}"
+                );
+            }
+        }
+    }
+}

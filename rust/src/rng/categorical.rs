@@ -1,0 +1,118 @@
+//! Categorical sampling from unnormalized energies: ρ(v) ∝ exp(ε_v).
+//!
+//! Every Gibbs variant ends its iteration with this draw (Algorithm 1's
+//! "construct distribution ρ ... sample v from ρ"). Numerically stabilized
+//! with the usual max-subtraction; D is small (2–1000), so a linear CDF
+//! scan beats building an alias table per iteration.
+
+use super::Rng;
+
+/// In-place softmax over energies: `probs[v] = exp(e_v - max) / Z`.
+/// Returns the normalizer `Z` (of the shifted weights).
+pub fn softmax_from_energies(energies: &[f64], probs: &mut Vec<f64>) -> f64 {
+    probs.clear();
+    probs.extend_from_slice(energies);
+    let max = probs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let mut z = 0.0;
+    for p in probs.iter_mut() {
+        *p = (*p - max).exp();
+        z += *p;
+    }
+    for p in probs.iter_mut() {
+        *p /= z;
+    }
+    z
+}
+
+/// Sample v ~ ρ where ρ(v) ∝ exp(energies[v]). O(D), allocation-free.
+#[inline]
+pub fn sample_categorical_from_energies<R: Rng + ?Sized>(
+    rng: &mut R,
+    energies: &[f64],
+) -> usize {
+    debug_assert!(!energies.is_empty());
+    let max = energies.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let mut z = 0.0;
+    for &e in energies {
+        z += (e - max).exp();
+    }
+    let target = rng.f64() * z;
+    let mut acc = 0.0;
+    for (v, &e) in energies.iter().enumerate() {
+        acc += (e - max).exp();
+        if target < acc {
+            return v;
+        }
+    }
+    energies.len() - 1 // floating-point edge: return the last value
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn softmax_normalizes() {
+        let mut probs = Vec::new();
+        softmax_from_energies(&[1.0, 2.0, 3.0], &mut probs);
+        let sum: f64 = probs.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-12);
+        assert!(probs[2] > probs[1] && probs[1] > probs[0]);
+    }
+
+    #[test]
+    fn softmax_handles_huge_energies() {
+        let mut probs = Vec::new();
+        softmax_from_energies(&[1e4, 1e4 + 1.0], &mut probs);
+        assert!(probs.iter().all(|p| p.is_finite()));
+        let want = 1.0 / (1.0 + 1f64.exp());
+        assert!((probs[0] - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sample_matches_softmax() {
+        let energies = [0.0, 1.0, -0.5, 2.0];
+        let mut probs = Vec::new();
+        softmax_from_energies(&energies, &mut probs);
+        let mut rng = Pcg64::seeded(31);
+        let n = 500_000;
+        let mut counts = [0u64; 4];
+        for _ in 0..n {
+            counts[sample_categorical_from_energies(&mut rng, &energies)] += 1;
+        }
+        for (v, &c) in counts.iter().enumerate() {
+            let f = c as f64 / n as f64;
+            assert!((f - probs[v]).abs() < 0.004, "v={v} f={f} p={}", probs[v]);
+        }
+    }
+
+    #[test]
+    fn deterministic_when_one_dominates() {
+        let mut rng = Pcg64::seeded(32);
+        for _ in 0..100 {
+            let v = sample_categorical_from_energies(&mut rng, &[0.0, 200.0, 0.0]);
+            assert_eq!(v, 1);
+        }
+    }
+
+    #[test]
+    fn uniform_when_equal() {
+        let mut rng = Pcg64::seeded(33);
+        let n = 300_000;
+        let mut counts = [0u64; 5];
+        for _ in 0..n {
+            counts[sample_categorical_from_energies(&mut rng, &[7.0; 5])] += 1;
+        }
+        for &c in &counts {
+            let f = c as f64 / n as f64;
+            assert!((f - 0.2).abs() < 0.005);
+        }
+    }
+
+    #[test]
+    fn single_value() {
+        let mut rng = Pcg64::seeded(34);
+        assert_eq!(sample_categorical_from_energies(&mut rng, &[3.0]), 0);
+    }
+}

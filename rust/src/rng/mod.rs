@@ -1,0 +1,122 @@
+//! Deterministic random-number stack for the samplers.
+//!
+//! Everything the samplers draw — uniforms, categoricals, Poissons, and the
+//! paper's O(λ) sparse Poisson-vector trick (§3, footnote 7) — lives here,
+//! built on a splittable PCG64 generator so that every chain in the
+//! coordinator gets an independent, reproducible stream.
+
+pub mod alias;
+pub mod categorical;
+pub mod pcg;
+pub mod poisson;
+pub mod sparse_poisson;
+pub mod special;
+
+pub use alias::AliasTable;
+pub use categorical::{sample_categorical_from_energies, softmax_from_energies};
+pub use pcg::Pcg64;
+pub use poisson::sample_poisson;
+pub use sparse_poisson::SparsePoissonSampler;
+
+/// Minimal RNG interface used throughout the crate.
+///
+/// Implemented by [`Pcg64`]; kept as a trait so tests can substitute
+/// counting/recording generators.
+pub trait Rng {
+    /// Next 64 uniformly random bits.
+    fn next_u64(&mut self) -> u64;
+
+    /// Uniform in `[0, 1)` with 53 bits of precision.
+    #[inline]
+    fn f64(&mut self) -> f64 {
+        // 53 high bits -> [0, 1) on the dyadic grid.
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in `(0, 1]` — safe as a `ln()` argument.
+    #[inline]
+    fn f64_open(&mut self) -> f64 {
+        ((self.next_u64() >> 11) + 1) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in `[0, bound)` via Lemire's multiply-shift with
+    /// rejection (unbiased).
+    #[inline]
+    fn below(&mut self, bound: u64) -> u64 {
+        debug_assert!(bound > 0);
+        loop {
+            let x = self.next_u64();
+            let m = (x as u128) * (bound as u128);
+            let lo = m as u64;
+            if lo >= bound || lo >= (u64::MAX - bound + 1) % bound {
+                return (m >> 64) as u64;
+            }
+        }
+    }
+
+    /// Uniform index in `[0, n)`.
+    #[inline]
+    fn index(&mut self, n: usize) -> usize {
+        self.below(n as u64) as usize
+    }
+
+    /// Bernoulli(p).
+    #[inline]
+    fn bernoulli(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut rng = Pcg64::seeded(1);
+        for _ in 0..10_000 {
+            let v = rng.f64();
+            assert!((0.0..1.0).contains(&v));
+            let w = rng.f64_open();
+            assert!(w > 0.0 && w <= 1.0);
+        }
+    }
+
+    #[test]
+    fn below_is_in_range_and_covers() {
+        let mut rng = Pcg64::seeded(2);
+        let mut seen = [false; 7];
+        for _ in 0..10_000 {
+            let v = rng.below(7) as usize;
+            assert!(v < 7);
+            seen[v] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn below_uniformity_chi2() {
+        // chi^2 over 16 buckets, 160k draws; crit value for df=15 at
+        // alpha=1e-4 is ~44.3. Generous threshold to avoid flakes.
+        let mut rng = Pcg64::seeded(3);
+        let mut counts = [0u32; 16];
+        let n = 160_000;
+        for _ in 0..n {
+            counts[rng.below(16) as usize] += 1;
+        }
+        let expect = n as f64 / 16.0;
+        let chi2: f64 = counts
+            .iter()
+            .map(|&c| (c as f64 - expect).powi(2) / expect)
+            .sum();
+        assert!(chi2 < 60.0, "chi2 = {chi2}");
+    }
+
+    #[test]
+    fn bernoulli_mean() {
+        let mut rng = Pcg64::seeded(4);
+        let hits = (0..100_000).filter(|_| rng.bernoulli(0.3)).count();
+        let mean = hits as f64 / 100_000.0;
+        assert!((mean - 0.3).abs() < 0.01, "mean = {mean}");
+    }
+}

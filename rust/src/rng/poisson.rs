@@ -1,0 +1,188 @@
+//! Exact Poisson sampling.
+//!
+//! Two regimes, matching what NumPy does:
+//!   * λ < 10:  multiplicative chop-down (Knuth) — O(λ) expected, exact.
+//!   * λ ≥ 10:  Hörmann's PTRS transformed-rejection — O(1) expected, exact.
+//!
+//! The samplers draw `s_φ ~ Poisson(λ M_φ / Ψ)` (Eq. 2) and the sparse
+//! vector sampler draws the total `B ~ Poisson(Λ)`; both paths land here.
+
+use super::special::ln_factorial;
+use super::Rng;
+
+/// Draw one Poisson(λ) variate. λ must be finite and ≥ 0.
+pub fn sample_poisson<R: Rng + ?Sized>(rng: &mut R, lambda: f64) -> u64 {
+    debug_assert!(lambda >= 0.0 && lambda.is_finite());
+    if lambda == 0.0 {
+        0
+    } else if lambda < 10.0 {
+        poisson_knuth(rng, lambda)
+    } else {
+        poisson_ptrs(rng, lambda)
+    }
+}
+
+/// Knuth's product-of-uniforms method (exact for small λ).
+fn poisson_knuth<R: Rng + ?Sized>(rng: &mut R, lambda: f64) -> u64 {
+    let l = (-lambda).exp();
+    let mut k = 0u64;
+    let mut p = 1.0f64;
+    loop {
+        p *= rng.f64_open();
+        if p <= l {
+            return k;
+        }
+        k += 1;
+    }
+}
+
+/// Hörmann's PTRS (transformed rejection with squeeze), exact for λ ≥ 10.
+/// Constants follow Hörmann (1993) as used in NumPy's `random_poisson_ptrs`.
+fn poisson_ptrs<R: Rng + ?Sized>(rng: &mut R, lambda: f64) -> u64 {
+    let slam = lambda.sqrt();
+    let loglam = lambda.ln();
+    let b = 0.931 + 2.53 * slam;
+    let a = -0.059 + 0.024_83 * b;
+    let invalpha = 1.1239 + 1.1328 / (b - 3.4);
+    let vr = 0.9277 - 3.6224 / (b - 2.0);
+
+    loop {
+        let u = rng.f64() - 0.5;
+        let v = rng.f64_open();
+        let us = 0.5 - u.abs();
+        let k = ((2.0 * a / us + b) * u + lambda + 0.43).floor();
+        if us >= 0.07 && v <= vr {
+            return k as u64;
+        }
+        if k < 0.0 || (us < 0.013 && v > us) {
+            continue;
+        }
+        let lhs = v.ln() + invalpha.ln() - (a / (us * us) + b).ln();
+        let rhs = k * loglam - lambda - ln_factorial(k as u64);
+        if lhs <= rhs {
+            return k as u64;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    fn moments(lambda: f64, n: usize, seed: u64) -> (f64, f64) {
+        let mut rng = Pcg64::seeded(seed);
+        let mut sum = 0.0;
+        let mut sumsq = 0.0;
+        for _ in 0..n {
+            let k = sample_poisson(&mut rng, lambda) as f64;
+            sum += k;
+            sumsq += k * k;
+        }
+        let mean = sum / n as f64;
+        (mean, sumsq / n as f64 - mean * mean)
+    }
+
+    #[test]
+    fn zero_lambda() {
+        let mut rng = Pcg64::seeded(0);
+        for _ in 0..100 {
+            assert_eq!(sample_poisson(&mut rng, 0.0), 0);
+        }
+    }
+
+    #[test]
+    fn small_lambda_mean_var() {
+        for &lam in &[0.01, 0.3, 1.0, 4.5, 9.9] {
+            let (mean, var) = moments(lam, 200_000, 11);
+            let tol = 4.0 * (lam / 200_000f64).sqrt() + 0.01;
+            assert!((mean - lam).abs() < tol, "λ={lam}: mean={mean}");
+            assert!((var - lam).abs() < 12.0 * tol, "λ={lam}: var={var}");
+        }
+    }
+
+    #[test]
+    fn large_lambda_mean_var() {
+        for &lam in &[10.0, 35.0, 173.0, 1000.0] {
+            let (mean, var) = moments(lam, 200_000, 13);
+            let setol = 5.0 * (lam / 200_000f64).sqrt();
+            assert!((mean - lam).abs() < setol, "λ={lam}: mean={mean}");
+            assert!((var / lam - 1.0).abs() < 0.05, "λ={lam}: var={var}");
+        }
+    }
+
+    #[test]
+    fn small_lambda_pmf_chi2() {
+        // Compare the empirical distribution at λ=3 against the exact pmf
+        // over k=0..=10 (+ tail bucket) with a chi-squared test.
+        let lam = 3.0;
+        let n = 300_000usize;
+        let mut rng = Pcg64::seeded(17);
+        let mut counts = [0u64; 12];
+        for _ in 0..n {
+            let k = sample_poisson(&mut rng, lam) as usize;
+            counts[k.min(11)] += 1;
+        }
+        let mut pmf = [0.0f64; 12];
+        let mut acc = (-lam).exp();
+        let mut total = 0.0;
+        for (k, p) in pmf.iter_mut().enumerate().take(11) {
+            *p = acc;
+            total += acc;
+            acc *= lam / (k as f64 + 1.0);
+        }
+        pmf[11] = 1.0 - total;
+        let chi2: f64 = counts
+            .iter()
+            .zip(pmf.iter())
+            .map(|(&c, &p)| {
+                let e = p * n as f64;
+                (c as f64 - e).powi(2) / e
+            })
+            .sum();
+        // df = 11, crit at alpha=1e-4 ≈ 39.9; generous bound.
+        assert!(chi2 < 55.0, "chi2 = {chi2}");
+    }
+
+    #[test]
+    fn ptrs_pmf_chi2_lambda_20() {
+        // Exact-distribution check in the PTRS regime: bucket k into
+        // [0,12), [12,16), [16,20), [20,24), [24,28), [28,..).
+        let lam = 20.0;
+        let n = 300_000usize;
+        let mut rng = Pcg64::seeded(19);
+        let edges = [12u64, 16, 20, 24, 28];
+        let mut counts = [0u64; 6];
+        for _ in 0..n {
+            let k = sample_poisson(&mut rng, lam);
+            let b = edges.iter().position(|&e| k < e).unwrap_or(5);
+            counts[b] += 1;
+        }
+        // Exact bucket probabilities.
+        let mut pmf_k = vec![0.0f64; 200];
+        let mut acc = (-lam).exp();
+        for (k, slot) in pmf_k.iter_mut().enumerate() {
+            *slot = acc;
+            acc *= lam / (k as f64 + 1.0);
+        }
+        let bucket = |lo: usize, hi: usize| pmf_k[lo..hi].iter().sum::<f64>();
+        let probs = [
+            bucket(0, 12),
+            bucket(12, 16),
+            bucket(16, 20),
+            bucket(20, 24),
+            bucket(24, 28),
+            1.0 - bucket(0, 28),
+        ];
+        let chi2: f64 = counts
+            .iter()
+            .zip(probs.iter())
+            .map(|(&c, &p)| {
+                let e = p * n as f64;
+                (c as f64 - e).powi(2) / e
+            })
+            .sum();
+        // df = 5, crit at alpha=1e-4 ≈ 25.7; generous bound.
+        assert!(chi2 < 40.0, "chi2 = {chi2}");
+    }
+}

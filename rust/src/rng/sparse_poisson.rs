@@ -1,0 +1,311 @@
+//! The paper's O(λ) sparse Poisson-vector sampler (§3, footnote 7).
+//!
+//! To draw `s_φ ~ Poisson(λ_φ)` independently for up to Δ (or |Φ|) factors
+//! without paying O(Δ) per iteration, use the decomposition
+//!
+//! ```text
+//! B = Σ_φ s_φ  ~  Poisson(Λ),   Λ = Σ_φ λ_φ
+//! (s_φ | B)    ~  Multinomial(B, (λ_φ / Λ)_φ)
+//! ```
+//!
+//! Sample `B` once, then make `B` O(1) alias-table picks. Expected time
+//! O(Λ) = O(λ) after an O(m) one-time setup per factor set — this is what
+//! lets MGPMH/DoubleMIN-Gibbs hit their Table-1 complexity.
+//!
+//! The output is sparse: a list of (index, count) pairs touching only the
+//! factors that were actually hit. A dense scratch array + touched list
+//! keeps accumulation O(B) with no hashing.
+
+use super::{sample_poisson, AliasTable, Rng};
+
+/// Reusable sampler for a fixed vector of Poisson rates.
+///
+/// Two regimes, picked automatically:
+/// * Λ ≲ m: the O(Λ) decomposition above (alias-table multinomial split).
+/// * Λ ≳ m: per-outcome direct Poisson draws — O(m) beats O(Λ) once the
+///   expected trial count exceeds the outcome count. `exp(−λ_φ)` is
+///   precomputed per outcome so the small-rate draws are branch-cheap.
+#[derive(Clone, Debug)]
+pub struct SparsePoissonSampler {
+    table: AliasTable,
+    lambda_total: f64,
+    rates: Vec<f64>,
+    exp_neg_rates: Vec<f64>, // exp(−λ_φ), used by the direct path
+    counts: Vec<u32>,        // dense scratch, zeroed between draws
+    touched: Vec<u32>,       // indices with counts > 0 this draw
+}
+
+impl SparsePoissonSampler {
+    /// Build from per-outcome rates λ_φ (must not all be zero).
+    pub fn new(rates: &[f64]) -> Self {
+        let table = AliasTable::new(rates);
+        let lambda_total = table.total_weight();
+        let exp_neg_rates = rates.iter().map(|&r| (-r).exp()).collect();
+        Self {
+            table,
+            lambda_total,
+            rates: rates.to_vec(),
+            exp_neg_rates,
+            counts: vec![0; rates.len()],
+            touched: Vec::new(),
+        }
+    }
+
+    /// Total rate Λ = Σ λ_φ (the expected number of trials per draw).
+    pub fn lambda_total(&self) -> f64 {
+        self.lambda_total
+    }
+
+    /// Number of outcomes m.
+    pub fn len(&self) -> usize {
+        self.counts.len()
+    }
+
+    /// True if there are no outcomes (never: construction asserts).
+    pub fn is_empty(&self) -> bool {
+        self.counts.is_empty()
+    }
+
+    /// Draw the sparse vector; `f(index, count)` is called once per
+    /// outcome with count > 0. Expected cost O(min(Λ, m)).
+    pub fn sample_into<R: Rng + ?Sized, F: FnMut(usize, u32)>(
+        &mut self,
+        rng: &mut R,
+        mut f: F,
+    ) -> u64 {
+        if self.lambda_total > 0.75 * self.counts.len() as f64 {
+            return self.sample_direct(rng, f);
+        }
+        let b = sample_poisson(rng, self.lambda_total);
+        for _ in 0..b {
+            let idx = self.table.sample(rng);
+            if self.counts[idx] == 0 {
+                self.touched.push(idx as u32);
+            }
+            self.counts[idx] += 1;
+        }
+        for &idx in &self.touched {
+            f(idx as usize, self.counts[idx as usize]);
+            self.counts[idx as usize] = 0;
+        }
+        self.touched.clear();
+        b
+    }
+
+    /// Direct path for Λ ≳ m: draw each s_φ independently in O(m). Uses
+    /// the precomputed exp(−λ_φ) for an allocation- and exp-free inner
+    /// loop in the (dominant) small-rate case.
+    fn sample_direct<R: Rng + ?Sized, F: FnMut(usize, u32)>(
+        &mut self,
+        rng: &mut R,
+        mut f: F,
+    ) -> u64 {
+        let mut total = 0u64;
+        for idx in 0..self.rates.len() {
+            let rate = self.rates[idx];
+            if rate == 0.0 {
+                continue;
+            }
+            let s = if rate < 10.0 {
+                // inlined Knuth chop-down with cached exp(−rate)
+                let l = self.exp_neg_rates[idx];
+                let mut k = 0u32;
+                let mut p = rng.f64_open();
+                while p > l {
+                    p *= rng.f64_open();
+                    k += 1;
+                }
+                k
+            } else {
+                sample_poisson(rng, rate) as u32
+            };
+            if s > 0 {
+                f(idx, s);
+                total += s as u64;
+            }
+        }
+        total
+    }
+
+    /// Convenience: collect the sparse draw into a vector of (idx, count).
+    pub fn sample_vec<R: Rng + ?Sized>(&mut self, rng: &mut R) -> Vec<(usize, u32)> {
+        let mut out = Vec::new();
+        self.sample_into(rng, |i, c| out.push((i, c)));
+        out
+    }
+
+    /// Trial-level draw: `f(index)` is called once per *trial* (an index
+    /// hit k times gets k calls) instead of once per distinct index.
+    ///
+    /// For linear consumers — anything of the form Σ_φ s_φ·g(φ), like the
+    /// Eq. (2) estimator — this is equivalent to [`Self::sample_into`]
+    /// but skips the dedup scratch entirely, avoiding two random-access
+    /// arrays per trial (a measurable cache win on large factor sets; see
+    /// EXPERIMENTS.md §Perf). Falls back to the O(m) direct path when
+    /// Λ ≳ m, where dedup is free.
+    pub fn sample_trials<R: Rng + ?Sized, F: FnMut(usize, u32)>(
+        &mut self,
+        rng: &mut R,
+        mut f: F,
+    ) -> u64 {
+        if self.lambda_total > 0.75 * self.counts.len() as f64 {
+            return self.sample_direct(rng, f);
+        }
+        let b = sample_poisson(rng, self.lambda_total);
+        for _ in 0..b {
+            f(self.table.sample(rng), 1);
+        }
+        b
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn marginals_match_independent_poissons() {
+        // Each s_φ must be marginally Poisson(λ_φ): check mean and variance.
+        let rates = [0.05, 0.3, 1.2, 0.0, 2.5];
+        let mut s = SparsePoissonSampler::new(&rates);
+        let mut rng = Pcg64::seeded(41);
+        let n = 200_000;
+        let mut sums = [0.0f64; 5];
+        let mut sumsq = [0.0f64; 5];
+        for _ in 0..n {
+            let mut draw = [0.0f64; 5];
+            s.sample_into(&mut rng, |i, c| draw[i] = c as f64);
+            for i in 0..5 {
+                sums[i] += draw[i];
+                sumsq[i] += draw[i] * draw[i];
+            }
+        }
+        for i in 0..5 {
+            let mean = sums[i] / n as f64;
+            let var = sumsq[i] / n as f64 - mean * mean;
+            let tol = 4.0 * (rates[i].max(0.01) / n as f64).sqrt() + 0.005;
+            assert!((mean - rates[i]).abs() < tol, "i={i} mean={mean}");
+            assert!((var - rates[i]).abs() < 20.0 * tol, "i={i} var={var}");
+        }
+    }
+
+    #[test]
+    fn zero_rate_never_drawn() {
+        let mut s = SparsePoissonSampler::new(&[1.0, 0.0, 1.0]);
+        let mut rng = Pcg64::seeded(42);
+        for _ in 0..20_000 {
+            s.sample_into(&mut rng, |i, _| assert_ne!(i, 1));
+        }
+    }
+
+    #[test]
+    fn total_is_poisson_lambda_total() {
+        let rates = [0.5, 0.25, 0.25];
+        let mut s = SparsePoissonSampler::new(&rates);
+        assert!((s.lambda_total() - 1.0).abs() < 1e-12);
+        let mut rng = Pcg64::seeded(43);
+        let n = 200_000;
+        let mut total = 0u64;
+        for _ in 0..n {
+            total += s.sample_into(&mut rng, |_, _| {});
+        }
+        let mean = total as f64 / n as f64;
+        assert!((mean - 1.0).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn scratch_is_clean_between_draws() {
+        // Internal counts must be reset: two consecutive draws with the
+        // same RNG state would otherwise leak counts.
+        let mut s = SparsePoissonSampler::new(&[3.0, 3.0]);
+        let mut rng = Pcg64::seeded(44);
+        for _ in 0..1000 {
+            let v = s.sample_vec(&mut rng);
+            let total: u32 = v.iter().map(|&(_, c)| c).sum();
+            let b: u64 = total as u64;
+            // Re-derive: sample_into returned b == sum of counts.
+            assert!(v.iter().all(|&(_, c)| c > 0));
+            let _ = b;
+        }
+        assert!(s.counts.iter().all(|&c| c == 0));
+        assert!(s.touched.is_empty());
+    }
+
+    #[test]
+    fn direct_path_marginals() {
+        // Λ = 27 ≫ m = 3 forces the O(m) direct path; marginals must be
+        // the same independent Poissons.
+        let rates = [20.0, 7.0, 0.0];
+        let mut s = SparsePoissonSampler::new(&rates);
+        let mut rng = Pcg64::seeded(46);
+        let n = 100_000;
+        let mut sums = [0.0f64; 3];
+        let mut sumsq = [0.0f64; 3];
+        for _ in 0..n {
+            let mut d = [0.0f64; 3];
+            let total = s.sample_into(&mut rng, |i, c| d[i] = c as f64);
+            assert_eq!(total, (d[0] + d[1] + d[2]) as u64);
+            for i in 0..3 {
+                sums[i] += d[i];
+                sumsq[i] += d[i] * d[i];
+            }
+        }
+        for i in 0..3 {
+            let mean = sums[i] / n as f64;
+            let var = sumsq[i] / n as f64 - mean * mean;
+            let tol = 5.0 * (rates[i].max(0.01) / n as f64).sqrt() + 0.01;
+            assert!((mean - rates[i]).abs() < tol, "i={i} mean={mean}");
+            assert!((var - rates[i]).abs() < 30.0 * tol, "i={i} var={var}");
+        }
+    }
+
+    #[test]
+    fn both_paths_same_distribution() {
+        // Same rates, forced through both paths (by scaling m with zero-
+        // rate padding), must produce matching moments.
+        let base = vec![1.5, 0.5, 2.0];
+        let mut padded = base.clone();
+        padded.extend(std::iter::repeat(0.0).take(50)); // Λ=4 < 0.75·53 -> alias path
+        let mut s_direct = SparsePoissonSampler::new(&base); // Λ=4 > 2.25 -> direct
+        let mut s_alias = SparsePoissonSampler::new(&padded);
+        let mut rng1 = Pcg64::seeded(47);
+        let mut rng2 = Pcg64::seeded(48);
+        let n = 150_000;
+        let (mut m1, mut m2) = ([0.0f64; 3], [0.0f64; 3]);
+        for _ in 0..n {
+            s_direct.sample_into(&mut rng1, |i, c| m1[i] += c as f64);
+            s_alias.sample_into(&mut rng2, |i, c| {
+                if i < 3 {
+                    m2[i] += c as f64;
+                }
+            });
+        }
+        for i in 0..3 {
+            let a = m1[i] / n as f64;
+            let b = m2[i] / n as f64;
+            assert!((a - b).abs() < 0.03, "i={i}: {a} vs {b}");
+            assert!((a - base[i]).abs() < 0.03, "i={i}: {a} vs rate");
+        }
+    }
+
+    #[test]
+    fn pairwise_independence_covariance() {
+        // Independent Poissons have zero covariance; the multinomial split
+        // conditioned on B reproduces that marginally.
+        let rates = [1.0, 2.0];
+        let mut s = SparsePoissonSampler::new(&rates);
+        let mut rng = Pcg64::seeded(45);
+        let n = 300_000;
+        let (mut sx, mut sy, mut sxy) = (0.0, 0.0, 0.0);
+        for _ in 0..n {
+            let mut d = [0.0f64; 2];
+            s.sample_into(&mut rng, |i, c| d[i] = c as f64);
+            sx += d[0];
+            sy += d[1];
+            sxy += d[0] * d[1];
+        }
+        let cov = sxy / n as f64 - (sx / n as f64) * (sy / n as f64);
+        assert!(cov.abs() < 0.02, "cov={cov}");
+    }
+}

@@ -1,0 +1,113 @@
+//! Special functions needed by the exact samplers: ln Γ and ln k!.
+//!
+//! `ln_gamma` uses the Lanczos approximation (g = 7, n = 9 coefficients),
+//! accurate to ~1e-13 relative over the positive reals — more than enough
+//! for the PTRS Poisson acceptance test. `ln_factorial` additionally caches
+//! small values exactly.
+
+/// Lanczos coefficients for g = 7.
+const LANCZOS_G: f64 = 7.0;
+const LANCZOS: [f64; 9] = [
+    0.999_999_999_999_809_93,
+    676.520_368_121_885_1,
+    -1_259.139_216_722_402_8,
+    771.323_428_777_653_13,
+    -176.615_029_162_140_6,
+    12.507_343_278_686_905,
+    -0.138_571_095_265_720_12,
+    9.984_369_578_019_572e-6,
+    1.505_632_735_149_311_6e-7,
+];
+
+/// Natural log of the Gamma function for x > 0.
+pub fn ln_gamma(x: f64) -> f64 {
+    debug_assert!(x > 0.0, "ln_gamma requires x > 0, got {x}");
+    if x < 0.5 {
+        // Reflection: Γ(x)Γ(1-x) = π / sin(πx)
+        let pi = std::f64::consts::PI;
+        return (pi / (pi * x).sin()).ln() - ln_gamma(1.0 - x);
+    }
+    let x = x - 1.0;
+    let mut acc = LANCZOS[0];
+    for (i, &c) in LANCZOS.iter().enumerate().skip(1) {
+        acc += c / (x + i as f64);
+    }
+    let t = x + LANCZOS_G + 0.5;
+    0.5 * (2.0 * std::f64::consts::PI).ln() + (x + 0.5) * t.ln() - t + acc.ln()
+}
+
+const FACT_TABLE_LEN: usize = 128;
+
+fn fact_table() -> &'static [f64; FACT_TABLE_LEN] {
+    use std::sync::OnceLock;
+    static TABLE: OnceLock<[f64; FACT_TABLE_LEN]> = OnceLock::new();
+    TABLE.get_or_init(|| {
+        let mut t = [0.0; FACT_TABLE_LEN];
+        let mut acc = 0.0f64;
+        for (k, slot) in t.iter_mut().enumerate() {
+            if k > 0 {
+                acc += (k as f64).ln();
+            }
+            *slot = acc;
+        }
+        t
+    })
+}
+
+/// ln(k!) — table-exact for k < 128, Lanczos ln Γ(k+1) beyond.
+pub fn ln_factorial(k: u64) -> f64 {
+    if (k as usize) < FACT_TABLE_LEN {
+        fact_table()[k as usize]
+    } else {
+        ln_gamma(k as f64 + 1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gamma_integers() {
+        // Γ(n) = (n-1)!
+        let mut fact = 1.0f64;
+        for n in 1..20u64 {
+            if n > 1 {
+                fact *= (n - 1) as f64;
+            }
+            let got = ln_gamma(n as f64);
+            assert!(
+                (got - fact.ln()).abs() < 1e-10,
+                "n={n} got={got} want={}",
+                fact.ln()
+            );
+        }
+    }
+
+    #[test]
+    fn gamma_half() {
+        // Γ(1/2) = sqrt(π)
+        let want = std::f64::consts::PI.sqrt().ln();
+        assert!((ln_gamma(0.5) - want).abs() < 1e-12);
+        // Γ(3/2) = sqrt(π)/2
+        let want = (std::f64::consts::PI.sqrt() / 2.0).ln();
+        assert!((ln_gamma(1.5) - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn factorial_consistency() {
+        for k in 0..300u64 {
+            let got = ln_factorial(k);
+            let want = ln_gamma(k as f64 + 1.0);
+            assert!((got - want).abs() < 1e-9, "k={k}: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn factorial_small_exact() {
+        assert_eq!(ln_factorial(0), 0.0);
+        assert_eq!(ln_factorial(1), 0.0);
+        assert!((ln_factorial(5) - 120f64.ln()).abs() < 1e-12);
+        assert!((ln_factorial(10) - 3_628_800f64.ln()).abs() < 1e-11);
+    }
+}

@@ -1,0 +1,236 @@
+//! Dense-model energy backend over the AOT kernels.
+//!
+//! [`XlaDenseBackend`] serves conditional-energy and total-energy queries
+//! for the paper's dense RBF models by executing the Pallas/JAX artifacts
+//! on the PJRT client. The interaction matrix is uploaded to the device
+//! once at construction; per query only the one-hot state (n×D f32) moves.
+//!
+//! The invariant that makes this backend interchangeable with the native
+//! factor-graph path — identical conditional energies to float32
+//! tolerance — is enforced by [`parity_report`] and the integration tests.
+
+use anyhow::{bail, Result};
+
+use crate::graph::models::DenseModel;
+
+use super::executor::{ArtifactStore, LoadedKernel, XlaExecutor};
+
+/// Energy queries served by the compiled XLA kernels.
+pub struct XlaDenseBackend {
+    exec: XlaExecutor,
+    cond_all: LoadedKernel,
+    total: LoadedKernel,
+    w_buf: xla::PjRtBuffer,
+    beta_buf: xla::PjRtBuffer,
+    n: usize,
+    d: usize,
+}
+
+/// Which compiled lowering the backend executes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelVariant {
+    /// The Pallas kernels (interpret-mode HLO while-loop on CPU-PJRT;
+    /// the Mosaic fast path on a real TPU). Validation target.
+    Pallas,
+    /// The fused-XLA-dot lowering of the same math — the CPU production
+    /// path (see EXPERIMENTS.md §Perf for the measured gap).
+    Dot,
+}
+
+impl XlaDenseBackend {
+    /// Build with the CPU-appropriate default variant ([`KernelVariant::Dot`]).
+    pub fn new(store: &ArtifactStore, model: &DenseModel) -> Result<Self> {
+        Self::with_variant(store, model, KernelVariant::Dot)
+    }
+
+    /// Build executing the Pallas lowerings (validation / TPU parity).
+    pub fn new_pallas(store: &ArtifactStore, model: &DenseModel) -> Result<Self> {
+        Self::with_variant(store, model, KernelVariant::Pallas)
+    }
+
+    /// Build for a dense model; `store` must contain the artifacts for the
+    /// model's domain size (D = 10 → potts_*, D = 2 → ising_*).
+    pub fn with_variant(
+        store: &ArtifactStore,
+        model: &DenseModel,
+        variant: KernelVariant,
+    ) -> Result<Self> {
+        let n = model.graph.n();
+        let d = model.graph.domain_size() as usize;
+        if n != store.n_vars() {
+            bail!(
+                "model has n = {n} but artifacts were lowered for n = {} — \
+                 re-run `make artifacts` with matching GRID_N",
+                store.n_vars()
+            );
+        }
+        let (cond_name, total_name) = match (d, variant) {
+            (2, KernelVariant::Pallas) => ("ising_cond_energies", "ising_total_energy"),
+            (10, KernelVariant::Pallas) => ("potts_cond_energies", "potts_total_energy"),
+            (2, KernelVariant::Dot) => ("ising_cond_energies_dot", "ising_total_energy_dot"),
+            (10, KernelVariant::Dot) => ("potts_cond_energies_dot", "potts_total_energy_dot"),
+            (other, _) => bail!("no artifacts lowered for D = {other}"),
+        };
+        let exec = XlaExecutor::new()?;
+        let cond_all = exec.load(store, cond_name)?;
+        let total = exec.load(store, total_name)?;
+        let w_f32: Vec<f32> = model.kernel_weights.iter().map(|&v| v as f32).collect();
+        let w_buf = exec.upload(&w_f32, &[n, n])?;
+        let beta_buf = exec.upload(&[model.beta as f32], &[])?;
+        Ok(Self {
+            exec,
+            cond_all,
+            total,
+            w_buf,
+            beta_buf,
+            n,
+            d,
+        })
+    }
+
+    /// Variables n.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Domain size D.
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    /// One-hot encode a state (row-major n×D f32).
+    pub fn one_hot(&self, state: &[u16]) -> Vec<f32> {
+        debug_assert_eq!(state.len(), self.n);
+        let mut x = vec![0.0f32; self.n * self.d];
+        for (i, &v) in state.iter().enumerate() {
+            x[i * self.d + v as usize] = 1.0;
+        }
+        x
+    }
+
+    /// Conditional energies for ALL variables and values: returns the
+    /// row-major n×D table ε_u(i) computed by the Pallas matmul kernel.
+    pub fn cond_energies_all(&self, state: &[u16]) -> Result<Vec<f32>> {
+        let x = self.one_hot(state);
+        let xb = self.exec.upload(&x, &[self.n, self.d])?;
+        self.cond_all.run_f32(&[&self.w_buf, &xb, &self.beta_buf])
+    }
+
+    /// Total energy ζ(x) via the compiled kernel.
+    pub fn total_energy(&self, state: &[u16]) -> Result<f64> {
+        let x = self.one_hot(state);
+        let xb = self.exec.upload(&x, &[self.n, self.d])?;
+        let out = self.total.run_f32(&[&self.w_buf, &xb, &self.beta_buf])?;
+        Ok(out[0] as f64)
+    }
+}
+
+/// Compare XLA and native energies on random states; returns the max
+/// |xla − native| over conditional-energy tables and total energies.
+/// This is the L1/L2↔L3 integration check run by `mbgibbs check-artifacts`.
+pub fn parity_report(
+    backend: &XlaDenseBackend,
+    model: &DenseModel,
+    states: usize,
+    seed: u64,
+) -> Result<f64> {
+    use crate::rng::{Pcg64, Rng};
+    let g = &model.graph;
+    let n = g.n();
+    let d = g.domain_size() as usize;
+    let mut rng = Pcg64::seeded(seed);
+    let mut worst = 0.0f64;
+    let mut native = vec![0.0f64; d];
+    for _ in 0..states {
+        let mut state: Vec<u16> = (0..n).map(|_| rng.index(d) as u16).collect();
+        let table = backend.cond_energies_all(&state)?;
+        for i in 0..n {
+            g.cond_energies_fast(&mut state, i, &mut native);
+            for u in 0..d {
+                let diff = (table[i * d + u] as f64 - native[u]).abs();
+                worst = worst.max(diff);
+            }
+        }
+        let zx = backend.total_energy(&state)?;
+        let zn = g.total_energy(&state);
+        // total energies are O(10³); compare with relative tolerance
+        worst = worst.max((zx - zn).abs() / zn.abs().max(1.0));
+    }
+    Ok(worst)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::models;
+    use std::path::PathBuf;
+
+    fn store() -> Option<ArtifactStore> {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("manifest.json").exists().then(|| {
+            ArtifactStore::open(&dir).expect("manifest parse")
+        })
+    }
+
+    #[test]
+    fn potts_parity_with_native() {
+        let Some(store) = store() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let model = models::paper_potts();
+        let backend = XlaDenseBackend::new(&store, &model).unwrap();
+        let worst = parity_report(&backend, &model, 2, 7).unwrap();
+        assert!(worst < 2e-3, "XLA vs native deviation {worst}");
+    }
+
+    /// The Pallas and fused-dot lowerings of the same math must agree to
+    /// f32 tolerance — the L1-kernel-vs-XLA-dot equivalence, checked
+    /// through the full artifact + PJRT path.
+    #[test]
+    fn pallas_and_dot_variants_agree() {
+        let Some(store) = store() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let model = models::paper_potts();
+        let pallas = XlaDenseBackend::new_pallas(&store, &model).unwrap();
+        let dot = XlaDenseBackend::new(&store, &model).unwrap();
+        use crate::rng::{Pcg64, Rng};
+        let mut rng = Pcg64::seeded(21);
+        let state: Vec<u16> = (0..400).map(|_| rng.index(10) as u16).collect();
+        let a = pallas.cond_energies_all(&state).unwrap();
+        let b = dot.cond_energies_all(&state).unwrap();
+        let worst = a
+            .iter()
+            .zip(b.iter())
+            .map(|(x, y)| (x - y).abs())
+            .fold(0.0f32, f32::max);
+        assert!(worst < 1e-3, "pallas vs dot deviation {worst}");
+        let za = pallas.total_energy(&state).unwrap();
+        let zb = dot.total_energy(&state).unwrap();
+        assert!((za - zb).abs() / zb.abs().max(1.0) < 1e-5, "{za} vs {zb}");
+    }
+
+    #[test]
+    fn ising_parity_with_native() {
+        let Some(store) = store() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let model = models::paper_ising();
+        let backend = XlaDenseBackend::new(&store, &model).unwrap();
+        let worst = parity_report(&backend, &model, 2, 8).unwrap();
+        assert!(worst < 2e-3, "XLA vs native deviation {worst}");
+    }
+
+    #[test]
+    fn rejects_mismatched_model() {
+        let Some(store) = store() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let model = models::potts_rbf(3, 10, 1.0, 1.5); // n = 9 != 400
+        assert!(XlaDenseBackend::new(&store, &model).is_err());
+    }
+}

@@ -1,0 +1,235 @@
+//! Artifact loading and execution over the PJRT CPU client.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::config::json::JsonValue;
+
+/// The `artifacts/` directory and its parsed manifest.
+#[derive(Debug)]
+pub struct ArtifactStore {
+    dir: PathBuf,
+    manifest: JsonValue,
+}
+
+impl ArtifactStore {
+    /// Open a directory produced by `make artifacts`.
+    pub fn open(dir: &Path) -> Result<Self> {
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path).with_context(|| {
+            format!(
+                "reading {} — run `make artifacts` first",
+                manifest_path.display()
+            )
+        })?;
+        let manifest = JsonValue::parse(&text)
+            .map_err(|e| anyhow!("parsing {}: {e}", manifest_path.display()))?;
+        Ok(Self {
+            dir: dir.to_path_buf(),
+            manifest,
+        })
+    }
+
+    /// Artifact names in the manifest.
+    pub fn names(&self) -> Vec<String> {
+        self.manifest
+            .get("artifacts")
+            .and_then(|a| a.as_object())
+            .map(|m| m.keys().cloned().collect())
+            .unwrap_or_default()
+    }
+
+    /// Number of model variables recorded at AOT time.
+    pub fn n_vars(&self) -> usize {
+        self.manifest
+            .get("n_vars")
+            .and_then(|v| v.as_f64())
+            .unwrap_or(0.0) as usize
+    }
+
+    /// Argument shapes for an artifact, as recorded at lowering time.
+    pub fn arg_shapes(&self, name: &str) -> Result<Vec<Vec<usize>>> {
+        let art = self
+            .manifest
+            .get("artifacts")
+            .and_then(|a| a.get(name))
+            .ok_or_else(|| anyhow!("artifact {name:?} not in manifest"))?;
+        let args = art
+            .get("args")
+            .and_then(|a| a.as_array())
+            .ok_or_else(|| anyhow!("artifact {name:?} missing args"))?;
+        args.iter()
+            .map(|arg| {
+                arg.get("shape")
+                    .and_then(|s| s.as_array())
+                    .map(|dims| {
+                        dims.iter()
+                            .map(|d| d.as_f64().unwrap_or(0.0) as usize)
+                            .collect()
+                    })
+                    .ok_or_else(|| anyhow!("artifact {name:?} bad shape"))
+            })
+            .collect()
+    }
+
+    /// Path of the HLO text file for an artifact.
+    pub fn hlo_path(&self, name: &str) -> PathBuf {
+        self.dir.join(format!("{name}.hlo.txt"))
+    }
+}
+
+/// A PJRT CPU client plus compiled-kernel cache.
+pub struct XlaExecutor {
+    client: xla::PjRtClient,
+}
+
+impl XlaExecutor {
+    /// Create a CPU PJRT client.
+    pub fn new() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e}"))?;
+        Ok(Self { client })
+    }
+
+    /// PJRT platform name (e.g. "cpu").
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile one artifact.
+    pub fn load(&self, store: &ArtifactStore, name: &str) -> Result<LoadedKernel> {
+        let path = store.hlo_path(name);
+        if !path.exists() {
+            bail!("missing artifact file {}", path.display());
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .map_err(|e| anyhow!("parsing {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {name}: {e}"))?;
+        Ok(LoadedKernel {
+            name: name.to_string(),
+            arg_shapes: store.arg_shapes(name)?,
+            exe,
+        })
+    }
+
+    /// Upload an f32 tensor to the device.
+    pub fn upload(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .map_err(|e| anyhow!("uploading buffer: {e}"))
+    }
+}
+
+/// One compiled executable with its expected argument shapes.
+pub struct LoadedKernel {
+    /// Artifact name.
+    pub name: String,
+    /// Expected argument shapes (from the manifest).
+    pub arg_shapes: Vec<Vec<usize>>,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl LoadedKernel {
+    /// Execute with device-resident buffers; returns the first element of
+    /// the output tuple as a host literal (artifacts are lowered with
+    /// `return_tuple=True`).
+    pub fn run_buffers(&self, args: &[&xla::PjRtBuffer]) -> Result<xla::Literal> {
+        if args.len() != self.arg_shapes.len() {
+            bail!(
+                "{}: expected {} args, got {}",
+                self.name,
+                self.arg_shapes.len(),
+                args.len()
+            );
+        }
+        let out = self
+            .exe
+            .execute_b(args)
+            .map_err(|e| anyhow!("executing {}: {e}", self.name))?;
+        let lit = out[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching {} output: {e}", self.name))?;
+        lit.to_tuple1()
+            .map_err(|e| anyhow!("untupling {} output: {e}", self.name))
+    }
+
+    /// Execute and fetch the result as an f32 vector.
+    pub fn run_f32(&self, args: &[&xla::PjRtBuffer]) -> Result<Vec<f32>> {
+        self.run_buffers(args)?
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("converting {} output: {e}", self.name))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> Option<PathBuf> {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("manifest.json").exists().then_some(dir)
+    }
+
+    #[test]
+    fn manifest_loads() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let store = ArtifactStore::open(&dir).unwrap();
+        assert_eq!(store.n_vars(), 400);
+        let names = store.names();
+        assert!(names.iter().any(|n| n == "potts_cond_energies"), "{names:?}");
+        let shapes = store.arg_shapes("potts_cond_energies").unwrap();
+        assert_eq!(shapes[0], vec![400, 400]);
+        assert_eq!(shapes[1], vec![400, 10]);
+        assert_eq!(shapes[2], Vec::<usize>::new());
+    }
+
+    #[test]
+    fn load_and_execute_total_energy() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let store = ArtifactStore::open(&dir).unwrap();
+        let exec = XlaExecutor::new().unwrap();
+        let kernel = exec.load(&store, "potts_total_energy").unwrap();
+
+        // Two agreeing variables with weight 1: ζ = β·1·δ = 2.0 at β=2.
+        let n = 400;
+        let mut w = vec![0.0f32; n * n];
+        w[1] = 1.0; // w[0][1]
+        w[n] = 1.0; // w[1][0]
+        let mut x = vec![0.0f32; n * 10];
+        for i in 0..n {
+            x[i * 10] = 1.0; // everyone at value 0
+        }
+        let wb = exec.upload(&w, &[n, n]).unwrap();
+        let xb = exec.upload(&x, &[n, 10]).unwrap();
+        let beta = exec.upload(&[2.0f32], &[]).unwrap();
+        let out = kernel.run_f32(&[&wb, &xb, &beta]).unwrap();
+        assert_eq!(out.len(), 1);
+        // ζ = 0.5 · β · Σ_ij W_ij δ = 0.5 · 2 · 2 = 2
+        assert!((out[0] - 2.0).abs() < 1e-4, "got {}", out[0]);
+    }
+
+    #[test]
+    fn wrong_arity_rejected() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let store = ArtifactStore::open(&dir).unwrap();
+        let exec = XlaExecutor::new().unwrap();
+        let kernel = exec.load(&store, "potts_total_energy").unwrap();
+        let b = exec.upload(&[0.0f32], &[]).unwrap();
+        assert!(kernel.run_f32(&[&b]).is_err());
+    }
+}

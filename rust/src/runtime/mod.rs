@@ -1,0 +1,20 @@
+//! PJRT runtime: loads the AOT-compiled HLO artifacts produced by
+//! `make artifacts` and executes them from the Rust request path.
+//!
+//! * [`executor`] — the generic loader: artifact manifest, HLO-text →
+//!   `XlaComputation` → compiled `PjRtLoadedExecutable`, typed run calls.
+//! * [`backend`] — the dense-model energy backend built on top: one-hot
+//!   encoding, device-resident interaction matrices, and the
+//!   native-vs-XLA parity checks.
+//!
+//! Interchange is HLO *text*: jax ≥ 0.5 serializes protos with 64-bit
+//! instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see /opt/xla-example/README.md and python/compile/aot.py).
+
+pub mod backend;
+pub mod executor;
+pub mod sampler;
+
+pub use backend::XlaDenseBackend;
+pub use executor::{ArtifactStore, LoadedKernel, XlaExecutor};
+pub use sampler::XlaGibbsSampler;

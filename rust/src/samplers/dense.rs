@@ -1,0 +1,110 @@
+//! Dense-model Gibbs sampler: the production fast path for fully
+//! connected pairwise models (the paper's §B workloads).
+//!
+//! Statistically identical to [`super::GibbsSampler`]; the only change is
+//! where the conditional energies come from — one contiguous row of the
+//! dense weight matrix ([`DenseModel::cond_energies_row`]) instead of a
+//! walk over Δ factor objects. See EXPERIMENTS.md §Perf for the measured
+//! speedup.
+
+use crate::graph::models::DenseModel;
+use crate::rng::{sample_categorical_from_energies, Rng};
+
+use super::{Sampler, StepStats};
+
+/// Gibbs sampling specialized to a [`DenseModel`].
+pub struct DenseGibbsSampler<'m> {
+    model: &'m DenseModel,
+    eps: Vec<f64>,
+}
+
+impl<'m> DenseGibbsSampler<'m> {
+    /// Create for a dense model.
+    pub fn new(model: &'m DenseModel) -> Self {
+        Self {
+            model,
+            eps: vec![0.0; model.graph.domain_size() as usize],
+        }
+    }
+}
+
+impl Sampler for DenseGibbsSampler<'_> {
+    fn step(&mut self, state: &mut [u16], rng: &mut dyn Rng) -> StepStats {
+        let n = self.model.graph.n();
+        let i = rng.index(n);
+        self.model.cond_energies_row(state, i, &mut self.eps);
+        let v = sample_categorical_from_energies(rng, &self.eps);
+        state[i] = v as u16;
+        StepStats {
+            variable: i,
+            factor_evals: (n - 1) as u64,
+            accepted: true,
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "dense-gibbs"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::models;
+    use crate::rng::Pcg64;
+    use crate::samplers::{EnergyPath, GibbsSampler};
+
+    /// Row-based and factor-based conditional energies must agree exactly
+    /// enough that same-seed chains follow identical trajectories.
+    #[test]
+    fn identical_trajectory_to_factor_gibbs() {
+        let m = models::potts_rbf(4, 6, 2.2, 1.5);
+        let run = |dense: bool| -> Vec<u16> {
+            let mut rng = Pcg64::seeded(77);
+            let mut state = vec![0u16; m.graph.n()];
+            if dense {
+                let mut s = DenseGibbsSampler::new(&m);
+                for _ in 0..30_000 {
+                    s.step(&mut state, &mut rng);
+                }
+            } else {
+                let mut s = GibbsSampler::new(&m.graph, EnergyPath::Specialized);
+                for _ in 0..30_000 {
+                    s.step(&mut state, &mut rng);
+                }
+            }
+            state
+        };
+        assert_eq!(run(true), run(false));
+    }
+
+    #[test]
+    fn cond_row_matches_graph() {
+        let m = models::paper_potts();
+        let mut rng = Pcg64::seeded(3);
+        let d = 10usize;
+        let mut state: Vec<u16> = (0..m.graph.n()).map(|_| rng.index(d) as u16).collect();
+        let mut a = vec![0.0; d];
+        let mut b = vec![0.0; d];
+        for &i in &[0usize, 123, 399] {
+            m.cond_energies_row(&state, i, &mut a);
+            m.graph.cond_energies_fast(&mut state, i, &mut b);
+            for u in 0..d {
+                assert!((a[u] - b[u]).abs() < 1e-9, "i={i} u={u}: {a:?} vs {b:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn works_on_ising_weights() {
+        let m = models::ising_rbf(5, 1.3, 1.5);
+        let mut rng = Pcg64::seeded(9);
+        let mut state = vec![0u16; 25];
+        let mut s = DenseGibbsSampler::new(&m);
+        for _ in 0..5_000 {
+            let st = s.step(&mut state, &mut rng);
+            assert_eq!(st.factor_evals, 24);
+        }
+        assert!(state.iter().all(|&v| v < 2));
+    }
+}

@@ -1,0 +1,260 @@
+//! Algorithm 5: DoubleMIN-Gibbs — doubly minibatched Gibbs.
+//!
+//! MGPMH's proposal (first minibatch, local, λ₁ = Θ(L²)) combined with a
+//! *second* global Eq. (2) minibatch estimate (λ₂ = Θ(Ψ²)) replacing the
+//! exact local energies in the acceptance test. The chain lives on the
+//! augmented space Ω × ℝ, caching the current state's estimate ξ_x.
+//! Same stationary distribution as MIN-Gibbs — exactly π in the x-marginal
+//! with the bias-adjusted estimator (Theorem 5) — and spectral gap within
+//! exp(−4δ) of MGPMH (Theorem 6). Total cost O(DL² + Ψ²): independent of
+//! both the degree Δ (acceptance) and D·Δ (proposal).
+
+use crate::graph::FactorGraph;
+use crate::rng::{sample_categorical_from_energies, Rng, SparsePoissonSampler};
+
+use super::{estimator::PoissonEnergyEstimator, Sampler, StepStats};
+
+/// DoubleMIN-Gibbs sampler (paper Algorithm 5).
+pub struct DoubleMinGibbsSampler<'g> {
+    graph: &'g FactorGraph,
+    lambda1: f64,
+    /// First (local, MGPMH) minibatch machinery.
+    per_var: Vec<SparsePoissonSampler>,
+    weights: Vec<Vec<f64>>,
+    batch: Vec<(u32, f64)>,
+    eps: Vec<f64>,
+    /// Second (global, Eq. 2) minibatch estimator and the cached ξ_x.
+    estimator: PoissonEnergyEstimator,
+    cached_xi: Option<f64>,
+    accepted: u64,
+    proposed: u64,
+}
+
+impl<'g> DoubleMinGibbsSampler<'g> {
+    /// Create with first-batch size λ₁ (paper: Θ(L²)) and second-batch
+    /// size λ₂ (paper: Θ(Ψ²)).
+    pub fn new(graph: &'g FactorGraph, lambda1: f64, lambda2: f64) -> Self {
+        assert!(lambda1 > 0.0 && lambda2 > 0.0, "batch sizes must be positive");
+        let l = graph.stats().l;
+        assert!(l > 0.0, "graph has zero local energy");
+        let n = graph.n();
+        let mut per_var = Vec::with_capacity(n);
+        let mut weights = Vec::with_capacity(n);
+        for i in 0..n {
+            let rates: Vec<f64> = graph
+                .factors_of(i)
+                .iter()
+                .map(|&fid| lambda1 * graph.max_energy(fid as usize) / l)
+                .collect();
+            let w: Vec<f64> = graph
+                .factors_of(i)
+                .iter()
+                .map(|&fid| {
+                    let m = graph.max_energy(fid as usize);
+                    if m > 0.0 {
+                        l / (lambda1 * m)
+                    } else {
+                        0.0
+                    }
+                })
+                .collect();
+            per_var.push(SparsePoissonSampler::new(&rates));
+            weights.push(w);
+        }
+        Self {
+            graph,
+            lambda1,
+            per_var,
+            weights,
+            batch: Vec::new(),
+            eps: vec![0.0; graph.domain_size() as usize],
+            estimator: PoissonEnergyEstimator::new(graph, lambda2),
+            cached_xi: None,
+            accepted: 0,
+            proposed: 0,
+        }
+    }
+
+    /// First-minibatch expected size λ₁.
+    pub fn lambda1(&self) -> f64 {
+        self.lambda1
+    }
+
+    /// Second-minibatch expected size λ₂.
+    pub fn lambda2(&self) -> f64 {
+        self.estimator.lambda()
+    }
+
+    /// Empirical acceptance rate so far.
+    pub fn acceptance_rate(&self) -> f64 {
+        if self.proposed == 0 {
+            1.0
+        } else {
+            self.accepted as f64 / self.proposed as f64
+        }
+    }
+}
+
+impl Sampler for DoubleMinGibbsSampler<'_> {
+    fn step(&mut self, state: &mut [u16], rng: &mut dyn Rng) -> StepStats {
+        let g = self.graph;
+        let d = g.domain_size() as usize;
+        let i = rng.index(g.n());
+        let cur = state[i] as usize;
+        let factors = g.factors_of(i);
+        let mut evals = 0u64;
+
+        // Initialize the cached global estimate ξ_x lazily.
+        let xi_x = match self.cached_xi {
+            Some(x) => x,
+            None => {
+                let (x, ev) = self.estimator.estimate(g, state, rng);
+                evals += ev;
+                x
+            }
+        };
+
+        // First minibatch: sparse Poisson draw over A[i], O(λ₁).
+        let batch = &mut self.batch;
+        batch.clear();
+        let wts = &self.weights[i];
+        self.per_var[i].sample_into(rng, |pos, s| {
+            batch.push((factors[pos], s as f64 * wts[pos]));
+        });
+
+        // Proposal energies ε_u: O(D·|S|).
+        let saved = state[i];
+        for u in 0..d {
+            state[i] = u as u16;
+            let mut sum = 0.0;
+            for &(fid, w) in batch.iter() {
+                sum += w * g.value(fid as usize, state);
+            }
+            self.eps[u] = sum;
+        }
+        state[i] = saved;
+        evals += (d * batch.len()) as u64;
+
+        let v = sample_categorical_from_energies(rng, &self.eps);
+        self.proposed += 1;
+
+        // Second minibatch: fresh global estimate at the candidate y.
+        state[i] = v as u16;
+        let (xi_y, ev) = self.estimator.estimate(g, state, rng);
+        evals += ev;
+        state[i] = cur as u16;
+
+        // a = exp(ξ_y − ξ_x + ε_{x(i)} − ε_{y(i)})
+        let log_a = (xi_y - xi_x) + (self.eps[cur] - self.eps[v]);
+        let accept = log_a >= 0.0 || rng.f64() < log_a.exp();
+        if accept {
+            state[i] = v as u16;
+            self.cached_xi = Some(xi_y);
+            self.accepted += 1;
+        } else {
+            self.cached_xi = Some(xi_x);
+        }
+        StepStats {
+            variable: i,
+            factor_evals: evals,
+            accepted: accept,
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "doublemin-gibbs"
+    }
+
+    fn reset(&mut self, _state: &[u16], _rng: &mut dyn Rng) {
+        self.cached_xi = None;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::models;
+    use crate::rng::Pcg64;
+    use crate::samplers::test_support::{empirical_marginals, marginal_error_vs_exact};
+
+    /// Theorem 5: the x-marginal of the stationary distribution is π.
+    #[test]
+    fn stationary_is_pi() {
+        let g = models::tiny_random(3, 3, 0.5, 71);
+        let s = g.stats().clone();
+        let mut smp =
+            DoubleMinGibbsSampler::new(&g, (s.l * s.l).max(2.0), (s.psi * s.psi).max(8.0));
+        let m = empirical_marginals(&g, &mut smp, 500_000, 50_000, 72);
+        let err = marginal_error_vs_exact(&g, &m);
+        assert!(err < 0.02, "err = {err}");
+    }
+
+    /// Unbiased even when both batches are small (slow but correct).
+    #[test]
+    fn unbiased_with_small_batches() {
+        let g = models::tiny_random(3, 2, 0.4, 73);
+        let mut smp = DoubleMinGibbsSampler::new(&g, 1.0, 4.0);
+        let m = empirical_marginals(&g, &mut smp, 800_000, 80_000, 74);
+        let err = marginal_error_vs_exact(&g, &m);
+        assert!(err < 0.03, "err = {err}");
+    }
+
+    /// The ξ cache must persist across rejections and refresh on accepts.
+    #[test]
+    fn xi_cache_lifecycle() {
+        let g = models::tiny_random(4, 2, 0.5, 75);
+        let mut smp = DoubleMinGibbsSampler::new(&g, 2.0, 10.0);
+        let mut rng = Pcg64::seeded(76);
+        let mut state = vec![0u16; 4];
+        assert!(smp.cached_xi.is_none());
+        smp.step(&mut state, &mut rng);
+        assert!(smp.cached_xi.is_some());
+        smp.reset(&state, &mut rng);
+        assert!(smp.cached_xi.is_none());
+    }
+
+    /// With both λs large, DoubleMIN behaves like MGPMH with high
+    /// acceptance.
+    #[test]
+    fn high_acceptance_with_large_batches() {
+        let g = models::tiny_random(4, 3, 0.4, 77);
+        let mut smp = DoubleMinGibbsSampler::new(&g, 300.0, 2000.0);
+        let mut rng = Pcg64::seeded(78);
+        let mut state = vec![0u16; 4];
+        for _ in 0..10_000 {
+            smp.step(&mut state, &mut rng);
+        }
+        assert!(
+            smp.acceptance_rate() > 0.9,
+            "acceptance = {}",
+            smp.acceptance_rate()
+        );
+    }
+
+    /// Per-step cost is O(Dλ₁ + λ₂), independent of Δ: check the count on
+    /// a wide graph.
+    #[test]
+    fn cost_independent_of_delta() {
+        let d = 4usize;
+        let (l1, l2) = (3.0f64, 10.0f64);
+        let mut means = Vec::new();
+        for &n in &[20usize, 80] {
+            let g = models::table1_workload(n, d as u16, 2.0);
+            let mut smp = DoubleMinGibbsSampler::new(&g, l1, l2);
+            let mut rng = Pcg64::seeded(79);
+            let mut state = vec![0u16; n];
+            smp.step(&mut state, &mut rng);
+            let trials = 20_000;
+            let total: u64 = (0..trials)
+                .map(|_| smp.step(&mut state, &mut rng).factor_evals)
+                .sum();
+            means.push(total as f64 / trials as f64);
+        }
+        // Δ quadruples; the cost must stay within noise (< 15% change).
+        let ratio = means[1] / means[0];
+        assert!(
+            (ratio - 1.0).abs() < 0.15,
+            "cost grew with Δ: {means:?} ratio {ratio}"
+        );
+    }
+}

@@ -1,0 +1,251 @@
+//! Energy estimators μ_x for the minibatched samplers.
+//!
+//! [`PoissonEnergyEstimator`] is the paper's Eq. (2): draw s_φ ~
+//! Poisson(λ M_φ / Ψ) via the sparse O(λ) sampler and return
+//!
+//! ```text
+//! ε_x = Σ_{φ: s_φ>0} s_φ · log(1 + Ψ φ(x) / (λ M_φ))
+//! ```
+//!
+//! Lemma 1: E[exp(ε_x)] = exp(ζ(x)) — the *bias-adjusted* estimator that
+//! makes MIN-Gibbs and DoubleMIN-Gibbs exactly unbiased (Theorem 1/5).
+//!
+//! [`FixedBatchEstimator`] is the naive Horvitz–Thompson scheme
+//! ε_x = (|Φ|/B) Σ_{φ∈S} φ(x): simpler, but E[exp(ε_x)] ≠ exp(ζ(x)), so
+//! chains built on it are biased (tempered); it exists as the ablation
+//! baseline the paper's §2 discussion contrasts against.
+
+use crate::graph::FactorGraph;
+use crate::rng::{Rng, SparsePoissonSampler};
+
+/// The Eq. (2) bias-adjusted Poisson minibatch estimator.
+pub struct PoissonEnergyEstimator {
+    sparse: SparsePoissonSampler,
+    /// Per-factor log-argument coefficient Ψ / (λ M_φ).
+    coef: Vec<f64>,
+    /// Precomputed log(1 + Ψ/λ) contribution for φ(x) = M_φ — since
+    /// coef·M_φ = Ψ/λ for every factor, two-valued factors (Potts/Ising
+    /// pairs take only 0 or M_φ) skip the `ln_1p` in the hot loop.
+    log1p_at_max: f64,
+    max_energies: Vec<f64>,
+    lambda: f64,
+    psi: f64,
+}
+
+impl PoissonEnergyEstimator {
+    /// Build for `graph` with expected batch size λ (paper: λ = Θ(Ψ²)
+    /// for an O(1) spectral-gap penalty, Lemma 2).
+    pub fn new(graph: &FactorGraph, lambda: f64) -> Self {
+        assert!(lambda > 0.0, "λ must be positive");
+        let psi = graph.stats().psi;
+        let rates: Vec<f64> = graph
+            .max_energies()
+            .iter()
+            .map(|&m| lambda * m / psi)
+            .collect();
+        let coef: Vec<f64> = graph
+            .max_energies()
+            .iter()
+            .map(|&m| if m > 0.0 { psi / (lambda * m) } else { 0.0 })
+            .collect();
+        Self {
+            sparse: SparsePoissonSampler::new(&rates),
+            coef,
+            log1p_at_max: (psi / lambda).ln_1p(),
+            max_energies: graph.max_energies().to_vec(),
+            lambda,
+            psi,
+        }
+    }
+
+    /// Expected minibatch size λ.
+    pub fn lambda(&self) -> f64 {
+        self.lambda
+    }
+
+    /// Total maximum energy Ψ of the graph this estimator was built for.
+    pub fn psi(&self) -> f64 {
+        self.psi
+    }
+
+    /// Draw ε_x ~ μ_x. Returns `(estimate, factor_evals)`; cost is O(λ)
+    /// expected (the sparse Poisson-vector trick, §3 footnote 7).
+    pub fn estimate(
+        &mut self,
+        graph: &FactorGraph,
+        state: &[u16],
+        rng: &mut dyn Rng,
+    ) -> (f64, u64) {
+        let coef = &self.coef;
+        let log1p_at_max = self.log1p_at_max;
+        let max_energies = &self.max_energies;
+        let mut eps = 0.0f64;
+        let mut evals = 0u64;
+        // Trial-level iteration: Eq. (2) is linear in s_φ, so per-trial
+        // accumulation is exact and skips the dedup scratch (§Perf).
+        self.sparse.sample_trials(rng, |fid, s| {
+            let phi = graph.value(fid, state);
+            evals += s as u64;
+            // Fast paths: φ = 0 contributes nothing; φ = M_φ has the
+            // factor-independent precomputed log (covers Potts/Ising).
+            if phi == 0.0 {
+                return;
+            }
+            eps += if phi == max_energies[fid] {
+                s as f64 * log1p_at_max
+            } else {
+                s as f64 * (coef[fid] * phi).ln_1p()
+            };
+        });
+        (eps, evals)
+    }
+}
+
+/// Naive fixed-size minibatch estimator (uniform with replacement):
+/// ε_x = (|Φ|/B) Σ_{φ∈S} φ(x). Biased in exp — ablation baseline only.
+pub struct FixedBatchEstimator {
+    batch: usize,
+}
+
+impl FixedBatchEstimator {
+    /// Estimator drawing `batch` factors uniformly with replacement.
+    pub fn new(batch: usize) -> Self {
+        assert!(batch > 0);
+        Self { batch }
+    }
+
+    /// Draw ε_x. Returns `(estimate, factor_evals)`.
+    pub fn estimate(
+        &self,
+        graph: &FactorGraph,
+        state: &[u16],
+        rng: &mut dyn Rng,
+    ) -> (f64, u64) {
+        let m = graph.num_factors();
+        let scale = m as f64 / self.batch as f64;
+        let mut sum = 0.0;
+        for _ in 0..self.batch {
+            let fid = rng.index(m);
+            sum += graph.value(fid, state);
+        }
+        (scale * sum, self.batch as u64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::models;
+    use crate::rng::Pcg64;
+
+    /// Lemma 1, tested by Monte Carlo: E[exp(ε_x)] = exp(ζ(x)).
+    #[test]
+    fn eq2_unbiased_in_exp() {
+        let g = models::tiny_random(4, 3, 0.4, 9);
+        let mut est = PoissonEnergyEstimator::new(&g, 25.0);
+        let mut rng = Pcg64::seeded(50);
+        let state: Vec<u16> = vec![0, 1, 2, 1];
+        let zeta = g.total_energy(&state);
+        let trials = 400_000;
+        let mut acc = 0.0f64;
+        for _ in 0..trials {
+            let (eps, _) = est.estimate(&g, &state, &mut rng);
+            acc += eps.exp();
+        }
+        let mean = acc / trials as f64;
+        let want = zeta.exp();
+        assert!(
+            (mean - want).abs() / want < 0.02,
+            "E[exp ε] = {mean}, exp(ζ) = {want}"
+        );
+    }
+
+    /// Jensen: the raw estimate underestimates ζ(x) in expectation
+    /// (proof of Lemma 2), and E[ε_x] ≥ ζ(x) − Ψ²/λ.
+    #[test]
+    fn eq2_mean_bounds() {
+        let g = models::tiny_random(4, 2, 0.5, 10);
+        let psi = g.stats().psi;
+        let lambda = 40.0;
+        let mut est = PoissonEnergyEstimator::new(&g, lambda);
+        let mut rng = Pcg64::seeded(51);
+        let state: Vec<u16> = vec![1, 0, 1, 0];
+        let zeta = g.total_energy(&state);
+        let trials = 200_000;
+        let mean: f64 = (0..trials)
+            .map(|_| est.estimate(&g, &state, &mut rng).0)
+            .sum::<f64>()
+            / trials as f64;
+        assert!(mean <= zeta + 0.01, "mean {mean} > ζ {zeta}");
+        assert!(
+            mean >= zeta - psi * psi / lambda - 0.01,
+            "mean {mean} below Lemma-2 lower bound"
+        );
+    }
+
+    /// Lemma 2 concentration: with λ ≥ max(8Ψ²/δ² log(2/a), 2Ψ²/δ),
+    /// P(|ε_x − ζ(x)| ≥ δ) ≤ a.
+    #[test]
+    fn eq2_concentration_lemma2() {
+        let g = models::tiny_random(5, 2, 0.3, 11);
+        let psi = g.stats().psi;
+        let delta = 0.5f64;
+        let a = 0.05f64;
+        let lambda = (8.0 * psi * psi / (delta * delta) * (2.0 / a).ln())
+            .max(2.0 * psi * psi / delta);
+        let mut est = PoissonEnergyEstimator::new(&g, lambda);
+        let mut rng = Pcg64::seeded(52);
+        let state: Vec<u16> = vec![0, 0, 1, 1, 0];
+        let zeta = g.total_energy(&state);
+        let trials = 20_000;
+        let bad = (0..trials)
+            .filter(|_| {
+                let (eps, _) = est.estimate(&g, &state, &mut rng);
+                (eps - zeta).abs() >= delta
+            })
+            .count();
+        let frac = bad as f64 / trials as f64;
+        assert!(frac <= a, "violation rate {frac} > {a}");
+    }
+
+    /// Expected work is λ factor evaluations per draw.
+    #[test]
+    fn expected_cost_is_lambda() {
+        let g = models::tiny_random(6, 2, 0.5, 12);
+        let lambda = 15.0;
+        let mut est = PoissonEnergyEstimator::new(&g, lambda);
+        let mut rng = Pcg64::seeded(53);
+        let state: Vec<u16> = vec![0; 6];
+        let trials = 50_000;
+        let total: u64 = (0..trials)
+            .map(|_| est.estimate(&g, &state, &mut rng).1)
+            .sum();
+        let mean = total as f64 / trials as f64;
+        // Touched factors ≤ B (collisions merge), so mean ≤ λ and near it.
+        assert!(mean <= lambda + 0.5, "mean evals {mean}");
+        assert!(mean > lambda * 0.5, "mean evals {mean} suspiciously low");
+    }
+
+    /// The fixed-batch estimator is unbiased in ε but NOT in exp(ε):
+    /// E[exp(ε)] > exp(ζ) by Jensen — the bias MIN-Gibbs would inherit.
+    #[test]
+    fn fixed_batch_biased_in_exp() {
+        let g = models::tiny_random(4, 2, 0.8, 13);
+        let est = FixedBatchEstimator::new(2);
+        let mut rng = Pcg64::seeded(54);
+        let state: Vec<u16> = vec![0, 1, 0, 1];
+        let zeta = g.total_energy(&state);
+        let trials = 300_000;
+        let (mut mean_eps, mut mean_exp) = (0.0, 0.0);
+        for _ in 0..trials {
+            let (e, _) = est.estimate(&g, &state, &mut rng);
+            mean_eps += e;
+            mean_exp += e.exp();
+        }
+        mean_eps /= trials as f64;
+        mean_exp /= trials as f64;
+        assert!((mean_eps - zeta).abs() < 0.02, "ε mean {mean_eps} vs ζ {zeta}");
+        // strictly biased upward in exp (Jensen gap visible at B=2)
+        assert!(mean_exp > zeta.exp() * 1.01, "exp mean {mean_exp}");
+    }
+}

@@ -1,0 +1,181 @@
+//! Algorithm 3: Local Minibatch Gibbs.
+//!
+//! One minibatch S ⊂ A[i] of size B per iteration, shared by all D
+//! conditional energies: ε_u = (|A[i]|/B) Σ_{φ∈S} φ(x_{i→u}). Runs in
+//! O(BD) — but there is no reversibility argument, so (as the paper
+//! stresses) there are *no guarantees* on what it converges to. It is the
+//! proposal inside MGPMH and the empirical subject of Figure 2(a).
+
+use crate::graph::FactorGraph;
+use crate::rng::{sample_categorical_from_energies, Rng};
+
+use super::{Sampler, StepStats};
+
+/// Local Minibatch Gibbs sampler (paper Algorithm 3).
+pub struct LocalMinibatchSampler<'g> {
+    graph: &'g FactorGraph,
+    batch: usize,
+    eps: Vec<f64>,
+    picked: Vec<u32>,
+}
+
+impl<'g> LocalMinibatchSampler<'g> {
+    /// Create with per-iteration minibatch size `batch` (B in the paper).
+    /// B is clamped to |A[i]| per variable at sampling time.
+    pub fn new(graph: &'g FactorGraph, batch: usize) -> Self {
+        assert!(batch > 0, "batch size must be positive");
+        Self {
+            graph,
+            batch,
+            eps: vec![0.0; graph.domain_size() as usize],
+            picked: Vec::with_capacity(batch),
+        }
+    }
+
+    /// Configured minibatch size B.
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    /// Uniform sample of `b` distinct positions in [0, m) into `self.picked`.
+    /// O(b) expected via rejection while b ≤ m/2, else Floyd's algorithm.
+    fn sample_positions(&mut self, m: usize, b: usize, rng: &mut dyn Rng) {
+        self.picked.clear();
+        if b >= m {
+            self.picked.extend(0..m as u32);
+            return;
+        }
+        // Floyd's algorithm: exactly b distinct values, O(b) draws.
+        for j in (m - b)..m {
+            let t = rng.index(j + 1) as u32;
+            if self.picked.contains(&t) {
+                self.picked.push(j as u32);
+            } else {
+                self.picked.push(t);
+            }
+        }
+    }
+}
+
+impl Sampler for LocalMinibatchSampler<'_> {
+    fn step(&mut self, state: &mut [u16], rng: &mut dyn Rng) -> StepStats {
+        let g = self.graph;
+        let d = g.domain_size() as usize;
+        let i = rng.index(g.n());
+        let deg = g.degree(i);
+        let b = self.batch.min(deg);
+        self.sample_positions(deg, b, rng);
+
+        let scale = deg as f64 / b as f64;
+        let saved = state[i];
+        let factors = g.factors_of(i);
+        for u in 0..d {
+            state[i] = u as u16;
+            let mut sum = 0.0;
+            for &pos in &self.picked {
+                sum += g.value(factors[pos as usize] as usize, state);
+            }
+            self.eps[u] = scale * sum;
+        }
+        state[i] = saved;
+
+        let v = sample_categorical_from_energies(rng, &self.eps);
+        state[i] = v as u16;
+        StepStats {
+            variable: i,
+            factor_evals: (b * d) as u64,
+            accepted: true,
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "local-minibatch"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::models;
+    use crate::rng::Pcg64;
+    use crate::samplers::test_support::{empirical_marginals, marginal_error_vs_exact};
+    use crate::samplers::{EnergyPath, GibbsSampler};
+
+    /// With B = Δ the sampler IS vanilla Gibbs (scale = 1, full batch).
+    #[test]
+    fn full_batch_equals_gibbs() {
+        let g = models::tiny_random(3, 3, 0.8, 31);
+        let delta = g.stats().delta;
+        let mut a = LocalMinibatchSampler::new(&g, delta);
+        let mut b = GibbsSampler::new(&g, EnergyPath::Generic);
+        let ma = empirical_marginals(&g, &mut a, 200_000, 20_000, 32);
+        let mb = empirical_marginals(&g, &mut b, 200_000, 20_000, 33);
+        for (ra, rb) in ma.iter().zip(mb.iter()) {
+            for (x, y) in ra.iter().zip(rb.iter()) {
+                assert!((x - y).abs() < 0.02, "{x} vs {y}");
+            }
+        }
+    }
+
+    /// Figure 2(a) behavior: small batches still track Gibbs closely on
+    /// the paper-style models (empirically near-unbiased).
+    #[test]
+    fn small_batch_close_to_exact() {
+        let g = models::tiny_random(3, 2, 0.5, 34);
+        let mut s = LocalMinibatchSampler::new(&g, 1);
+        let m = empirical_marginals(&g, &mut s, 400_000, 40_000, 35);
+        let err = marginal_error_vs_exact(&g, &m);
+        assert!(err < 0.1, "err = {err}");
+    }
+
+    /// Distinct-position sampling: all picked positions valid + distinct.
+    #[test]
+    fn positions_distinct_and_in_range() {
+        let g = models::tiny_random(4, 2, 0.5, 36);
+        let mut s = LocalMinibatchSampler::new(&g, 2);
+        let mut rng = Pcg64::seeded(37);
+        for _ in 0..2000 {
+            s.sample_positions(5, 3, &mut rng);
+            assert_eq!(s.picked.len(), 3);
+            let mut seen = std::collections::HashSet::new();
+            for &p in &s.picked {
+                assert!(p < 5);
+                assert!(seen.insert(p), "duplicate position {p}");
+            }
+        }
+    }
+
+    /// Floyd sampling must be uniform over subsets: each position appears
+    /// with probability b/m.
+    #[test]
+    fn positions_uniform() {
+        let g = models::tiny_random(4, 2, 0.5, 38);
+        let mut s = LocalMinibatchSampler::new(&g, 2);
+        let mut rng = Pcg64::seeded(39);
+        let (m, b) = (6usize, 2usize);
+        let mut counts = vec![0u64; m];
+        let trials = 120_000;
+        for _ in 0..trials {
+            s.sample_positions(m, b, &mut rng);
+            for &p in &s.picked {
+                counts[p as usize] += 1;
+            }
+        }
+        let want = b as f64 / m as f64;
+        for (p, &c) in counts.iter().enumerate() {
+            let f = c as f64 / trials as f64;
+            assert!((f - want).abs() < 0.01, "pos {p}: {f} vs {want}");
+        }
+    }
+
+    /// Cost accounting: B·D factor evaluations per step.
+    #[test]
+    fn cost_is_bd() {
+        let g = models::table1_workload(30, 5, 2.0);
+        let mut s = LocalMinibatchSampler::new(&g, 8);
+        let mut rng = Pcg64::seeded(40);
+        let mut state = vec![0u16; 30];
+        let st = s.step(&mut state, &mut rng);
+        assert_eq!(st.factor_evals, 8 * 5);
+    }
+}

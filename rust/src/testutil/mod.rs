@@ -1,0 +1,150 @@
+//! Seeded property-testing helpers (stand-in for `proptest`, which is not
+//! available in the offline dependency set).
+//!
+//! The pattern: generate many random instances from a seeded [`Pcg64`],
+//! run an invariant over each, and report the failing seed so the case is
+//! replayable. Used across the rng/graph/sampler test suites.
+
+use crate::graph::{FactorGraph, FactorGraphBuilder};
+use crate::rng::{Pcg64, Rng};
+
+/// Configuration for random factor-graph generation.
+#[derive(Clone, Copy, Debug)]
+pub struct GraphGenConfig {
+    /// Inclusive variable-count range.
+    pub n: (usize, usize),
+    /// Inclusive domain-size range.
+    pub d: (u16, u16),
+    /// Maximum pair weight.
+    pub max_w: f64,
+    /// Probability of adding a table factor instead of a pair factor.
+    pub table_prob: f64,
+}
+
+impl Default for GraphGenConfig {
+    fn default() -> Self {
+        Self {
+            n: (2, 6),
+            d: (2, 4),
+            max_w: 1.0,
+            table_prob: 0.2,
+        }
+    }
+}
+
+/// Generate one random mixed factor graph.
+pub fn random_graph(rng: &mut Pcg64, cfg: &GraphGenConfig) -> FactorGraph {
+    let n = cfg.n.0 + rng.index(cfg.n.1 - cfg.n.0 + 1);
+    let d = cfg.d.0 + rng.index((cfg.d.1 - cfg.d.0 + 1) as usize) as u16;
+    let mut b = FactorGraphBuilder::new(n, d);
+    let num_factors = 1 + rng.index(2 * n);
+    for _ in 0..num_factors {
+        if n >= 2 && !rng.bernoulli(cfg.table_prob) {
+            let i = rng.index(n) as u32;
+            let mut j = rng.index(n) as u32;
+            while j == i {
+                j = rng.index(n) as u32;
+            }
+            b.add_potts_pair(i.min(j), i.max(j), rng.f64() * cfg.max_w);
+        } else {
+            let arity = 1 + rng.index(2.min(n));
+            let mut vars: Vec<u32> = Vec::new();
+            while vars.len() < arity {
+                let v = rng.index(n) as u32;
+                if !vars.contains(&v) {
+                    vars.push(v);
+                }
+            }
+            let len = (d as usize).pow(vars.len() as u32);
+            let table: Vec<f64> = (0..len).map(|_| rng.f64() * cfg.max_w).collect();
+            b.add_table(vars, table);
+        }
+    }
+    b.build()
+}
+
+/// Run `check` over `count` random graphs; panics with the failing seed.
+pub fn for_random_graphs<F>(seed: u64, count: usize, cfg: GraphGenConfig, mut check: F)
+where
+    F: FnMut(u64, &FactorGraph),
+{
+    for trial in 0..count {
+        let case_seed = seed.wrapping_mul(1_000_003).wrapping_add(trial as u64);
+        let mut rng = Pcg64::seeded(case_seed);
+        let g = random_graph(&mut rng, &cfg);
+        check(case_seed, &g);
+    }
+}
+
+/// Generate a random valid state for a graph.
+pub fn random_state(rng: &mut Pcg64, g: &FactorGraph) -> Vec<u16> {
+    (0..g.n())
+        .map(|_| rng.index(g.domain_size() as usize) as u16)
+        .collect()
+}
+
+/// Assert two floats are within `tol`, with a replayable message.
+#[track_caller]
+pub fn assert_close(a: f64, b: f64, tol: f64, context: &str) {
+    assert!(
+        (a - b).abs() <= tol,
+        "{context}: |{a} - {b}| = {} > {tol}",
+        (a - b).abs()
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn random_graphs_are_valid() {
+        for_random_graphs(7, 30, GraphGenConfig::default(), |seed, g| {
+            assert!(g.n() >= 2 && g.n() <= 6, "seed {seed}");
+            assert!(g.num_factors() >= 1, "seed {seed}");
+            let s = g.stats();
+            assert!(s.psi >= 0.0 && s.l <= s.psi + 1e-12, "seed {seed}");
+            assert!(s.delta <= g.num_factors(), "seed {seed}");
+        });
+    }
+
+    /// Property: conditional-energy paths agree on arbitrary graphs.
+    #[test]
+    fn cond_energy_paths_agree_property() {
+        for_random_graphs(13, 40, GraphGenConfig::default(), |seed, g| {
+            let mut rng = Pcg64::seeded(seed ^ 0xabcd);
+            let mut state = random_state(&mut rng, g);
+            let d = g.domain_size() as usize;
+            let mut a = vec![0.0; d];
+            let mut b = vec![0.0; d];
+            for i in 0..g.n() {
+                g.cond_energies_generic(&mut state, i, &mut a);
+                g.cond_energies_fast(&mut state, i, &mut b);
+                for u in 0..d {
+                    assert_close(a[u], b[u], 1e-10, &format!("seed {seed} i={i} u={u}"));
+                }
+            }
+        });
+    }
+
+    /// Property: total energy equals the sum of local energies divided by
+    /// arity-weighted counting (each pair counted at both endpoints).
+    #[test]
+    fn local_energy_consistency_property() {
+        let cfg = GraphGenConfig {
+            table_prob: 0.0, // pairs only: each factor counted exactly twice
+            ..Default::default()
+        };
+        for_random_graphs(17, 30, cfg, |seed, g| {
+            let mut rng = Pcg64::seeded(seed ^ 0x1234);
+            let state = random_state(&mut rng, g);
+            let total: f64 = (0..g.n()).map(|i| g.local_energy(&state, i)).sum();
+            assert_close(
+                total,
+                2.0 * g.total_energy(&state),
+                1e-9,
+                &format!("seed {seed}"),
+            );
+        });
+    }
+}

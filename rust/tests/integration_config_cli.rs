@@ -1,0 +1,143 @@
+//! Integration: config file → model → sampler → coordinator → CSV output,
+//! plus CLI round trips.
+
+use std::path::PathBuf;
+
+use mbgibbs::cli;
+use mbgibbs::config::ExperimentConfig;
+use mbgibbs::coordinator::{run_chains, Checkpoint, RunSpec};
+
+fn tmpdir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("mbgibbs_it_{name}_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+#[test]
+fn config_file_to_run() {
+    let dir = tmpdir("cfg");
+    let cfg_path = dir.join("exp.toml");
+    std::fs::write(
+        &cfg_path,
+        r#"
+[model]
+type = "potts_rbf"
+grid_n = 5
+d = 10
+beta = 4.6
+gamma = 1.5
+
+[sampler]
+algorithm = "doublemin"
+lambda_scale = 1.0
+lambda2 = 500.0
+
+[run]
+iters = 20000
+chains = 2
+seed = 3
+record_every = 2000
+"#,
+    )
+    .unwrap();
+    let cfg = ExperimentConfig::load(&cfg_path).unwrap();
+    let (g, dense) = cfg.build_model().unwrap();
+    assert_eq!(g.n(), 25);
+    assert!(dense.is_some());
+    let spec = cfg.sampler_spec(&g).unwrap();
+    let mut run = RunSpec::new(spec);
+    run.iters = cfg.run.iters;
+    run.chains = cfg.run.chains;
+    run.seed = cfg.run.seed;
+    run.record_every = cfg.run.record_every;
+    let report = run_chains(&g, &run);
+    assert_eq!(report.chains.len(), 2);
+    for c in &report.chains {
+        assert!(c.final_error.is_finite());
+        assert!(!c.trajectory.is_empty());
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn cli_sample_command_end_to_end() {
+    let dir = tmpdir("cli");
+    let cfg_path = dir.join("exp.toml");
+    let out_dir = dir.join("out");
+    std::fs::write(
+        &cfg_path,
+        format!(
+            r#"
+[model]
+type = "ising_rbf"
+grid_n = 4
+beta = 1.0
+d = 2
+
+[sampler]
+algorithm = "local"
+lambda = 4
+
+[run]
+iters = 5000
+chains = 1
+seed = 1
+record_every = 1000
+output_dir = "{}"
+"#,
+            out_dir.display()
+        ),
+    )
+    .unwrap();
+    cli::run(vec![
+        "sample".to_string(),
+        "--config".to_string(),
+        cfg_path.to_str().unwrap().to_string(),
+    ])
+    .unwrap();
+    let csv = out_dir.join("sample_run.csv");
+    assert!(csv.exists(), "CSV not written to {}", csv.display());
+    let content = std::fs::read_to_string(csv).unwrap();
+    assert!(content.lines().count() >= 2);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn cli_validate_runs_quick() {
+    let dir = tmpdir("validate");
+    cli::run(vec![
+        "validate".to_string(),
+        "--quick".to_string(),
+        "--out".to_string(),
+        dir.to_str().unwrap().to_string(),
+    ])
+    .unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn checkpoint_resume_matches_state() {
+    // Save a checkpoint mid-run, reload it, confirm state round-trips.
+    let dir = tmpdir("ckpt");
+    let g = mbgibbs::graph::models::tiny_random(4, 3, 0.8, 12);
+    use mbgibbs::rng::Pcg64;
+    use mbgibbs::samplers::{EnergyPath, GibbsSampler, Sampler};
+    let mut rng = Pcg64::seeded(5);
+    let mut sampler = GibbsSampler::new(&g, EnergyPath::Specialized);
+    let mut state = vec![0u16; 4];
+    for _ in 0..1000 {
+        sampler.step(&mut state, &mut rng);
+    }
+    let ckpt = Checkpoint {
+        iter: 1000,
+        seed: 5,
+        chain: 0,
+        state: state.clone(),
+    };
+    let path = dir.join("chain0.ckpt");
+    ckpt.save(&path).unwrap();
+    let loaded = Checkpoint::load(&path).unwrap();
+    assert_eq!(loaded.state, state);
+    assert_eq!(loaded.iter, 1000);
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -1,0 +1,120 @@
+//! Integration: the AOT artifact path (L1 Pallas → L2 JAX → HLO text →
+//! PJRT → L3 Rust) against the native factor-graph implementation.
+//!
+//! These tests require `make artifacts` to have run; they skip (with a
+//! message) when the artifacts directory is absent so `cargo test` works
+//! in a fresh checkout.
+
+use std::path::PathBuf;
+
+use mbgibbs::graph::models;
+use mbgibbs::rng::{Pcg64, Rng};
+use mbgibbs::runtime::{backend::parity_report, ArtifactStore, XlaDenseBackend};
+
+fn store() -> Option<ArtifactStore> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    Some(ArtifactStore::open(&dir).expect("manifest parses"))
+}
+
+#[test]
+fn manifest_covers_all_expected_kernels() {
+    let Some(store) = store() else { return };
+    let names = store.names();
+    for want in [
+        "potts_cond_energies",
+        "ising_cond_energies",
+        "potts_weighted_cond_energies",
+        "minibatch_estimate",
+        "potts_factor_values",
+        "potts_total_energy",
+        "ising_total_energy",
+    ] {
+        assert!(names.iter().any(|n| n == want), "missing {want}: {names:?}");
+    }
+}
+
+#[test]
+fn xla_conditional_energies_drive_correct_gibbs_update() {
+    // Use the XLA conditional-energy table to compute a Gibbs conditional
+    // distribution and compare with the native one — the actual quantity
+    // a sampler would consume.
+    let Some(store) = store() else { return };
+    let model = models::paper_potts();
+    let backend = XlaDenseBackend::new(&store, &model).unwrap();
+    let g = &model.graph;
+    let d = g.domain_size() as usize;
+    let mut rng = Pcg64::seeded(31);
+    let mut state: Vec<u16> = (0..g.n()).map(|_| rng.index(d) as u16).collect();
+
+    let table = backend.cond_energies_all(&state).unwrap();
+    let mut native = vec![0.0f64; d];
+    for &i in &[0usize, 57, 200, 399] {
+        g.cond_energies_fast(&mut state, i, &mut native);
+        // softmax both, compare distributions
+        let xla_row: Vec<f64> = (0..d).map(|u| table[i * d + u] as f64).collect();
+        let soft = |e: &[f64]| -> Vec<f64> {
+            let m = e.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            let w: Vec<f64> = e.iter().map(|&x| (x - m).exp()).collect();
+            let z: f64 = w.iter().sum();
+            w.into_iter().map(|x| x / z).collect()
+        };
+        let px = soft(&xla_row);
+        let pn = soft(&native);
+        for u in 0..d {
+            assert!(
+                (px[u] - pn[u]).abs() < 1e-4,
+                "i={i} u={u}: xla {} native {}",
+                px[u],
+                pn[u]
+            );
+        }
+    }
+}
+
+#[test]
+fn full_parity_sweep_both_models() {
+    let Some(store) = store() else { return };
+    for (name, model) in [
+        ("potts", models::paper_potts()),
+        ("ising", models::paper_ising()),
+    ] {
+        let backend = XlaDenseBackend::new(&store, &model).unwrap();
+        let worst = parity_report(&backend, &model, 3, 17).unwrap();
+        assert!(worst < 2e-3, "{name}: deviation {worst}");
+    }
+}
+
+#[test]
+fn minibatch_estimate_kernel_matches_eq2_semantics() {
+    // Feed the compiled Eq. (2) kernel a hand-built sparse weight vector
+    // and compare with the closed-form sum.
+    let Some(store) = store() else { return };
+    let exec = mbgibbs::runtime::XlaExecutor::new().unwrap();
+    let kernel = exec.load(&store, "minibatch_estimate").unwrap();
+    let m = 160_000; // n² for the 20×20 models
+    let mut phi = vec![0.0f32; m];
+    let mut s = vec![0.0f32; m];
+    let mut coef = vec![0.0f32; m];
+    // three sampled factors
+    let picks = [(3usize, 2.0f32, 0.5f32, 4.0f32), (77, 1.0, 0.25, 8.0), (12345, 3.0, 0.9, 1.5)];
+    let mut want = 0.0f64;
+    for &(idx, sv, phiv, coefv) in &picks {
+        phi[idx] = phiv;
+        s[idx] = sv;
+        coef[idx] = coefv;
+        want += sv as f64 * (1.0 + coefv as f64 * phiv as f64).ln();
+    }
+    let pb = exec.upload(&phi, &[m]).unwrap();
+    let sb = exec.upload(&s, &[m]).unwrap();
+    let cb = exec.upload(&coef, &[m]).unwrap();
+    let out = kernel.run_f32(&[&pb, &sb, &cb]).unwrap();
+    assert!(
+        (out[0] as f64 - want).abs() < 1e-4,
+        "kernel {} vs closed form {want}",
+        out[0]
+    );
+}

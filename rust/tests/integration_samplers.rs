@@ -1,0 +1,108 @@
+//! Integration: samplers × coordinator × analysis on real model sizes.
+
+use mbgibbs::analysis::diagnostics;
+use mbgibbs::bench::workload::SamplerSpec;
+use mbgibbs::coordinator::{run_chains, RunSpec};
+use mbgibbs::coordinator::{EnergyTraceSink, SampleSink};
+use mbgibbs::graph::models;
+use mbgibbs::rng::Pcg64;
+use mbgibbs::samplers::{EnergyPath, GibbsSampler, MgpmhSampler, Sampler};
+
+/// On the paper's Potts model every sampler's running-marginal error must
+/// fall well below the unmixed-start value within 50k iterations.
+#[test]
+fn paper_potts_error_decreases_all_samplers() {
+    let model = models::paper_potts();
+    let s = model.graph.stats().clone();
+    let specs = vec![
+        SamplerSpec::Gibbs(EnergyPath::Specialized),
+        SamplerSpec::Local { batch: s.delta / 4 },
+        SamplerSpec::Mgpmh { lambda: s.l * s.l },
+    ];
+    for spec in specs {
+        let mut run = RunSpec::new(spec);
+        run.iters = 50_000;
+        run.record_every = 5_000;
+        let report = run_chains(&model.graph, &run);
+        let c = &report.chains[0];
+        let start = c.trajectory.first().unwrap().1;
+        let end = c.final_error;
+        assert!(
+            end < start * 0.5,
+            "{}: error {start} -> {end}",
+            spec.label(&model.graph)
+        );
+    }
+}
+
+/// Multi-chain agreement: 4 chains × Gibbs on the paper's Ising model must
+/// produce a Gelman–Rubin R̂ ≈ 1 on the energy series.
+#[test]
+fn multichain_energy_rhat_near_one() {
+    let model = models::paper_ising();
+    let g = &model.graph;
+    let mut master = Pcg64::seeded(5);
+    let mut chains = Vec::new();
+    for k in 0..4u64 {
+        let mut rng = master.split(k);
+        let mut sampler = GibbsSampler::new(g, EnergyPath::Specialized);
+        let mut sink = EnergyTraceSink::new(g, 200);
+        let mut state = vec![0u16; g.n()];
+        for it in 0..60_000u64 {
+            sampler.step(&mut state, &mut rng);
+            if it >= 20_000 {
+                sink.on_sample(it, &state);
+            }
+        }
+        chains.push(sink.trace);
+    }
+    let rhat = diagnostics::gelman_rubin(&chains);
+    assert!(rhat < 1.2, "rhat = {rhat}");
+}
+
+/// MGPMH on the paper Potts model: acceptance at λ = L² must be healthy
+/// (the paper's recipe means an O(1) convergence penalty, which implies a
+/// non-vanishing acceptance rate).
+#[test]
+fn mgpmh_acceptance_healthy_on_paper_model() {
+    let model = models::paper_potts();
+    let s = model.graph.stats().clone();
+    let mut sampler = MgpmhSampler::new(&model.graph, s.l * s.l);
+    let mut rng = Pcg64::seeded(9);
+    let mut state = vec![0u16; model.graph.n()];
+    for _ in 0..30_000 {
+        sampler.step(&mut state, &mut rng);
+    }
+    let acc = sampler.acceptance_rate();
+    assert!(acc > 0.5, "acceptance = {acc}");
+}
+
+/// Energy traces from Gibbs must be stationary around the same level from
+/// two very different starts (all-zeros vs random) — a mixing smoke test.
+#[test]
+fn gibbs_energy_stationary_from_two_starts() {
+    let model = models::paper_ising();
+    let g = &model.graph;
+    let run_from = |init: Vec<u16>, seed: u64| -> f64 {
+        let mut rng = Pcg64::seeded(seed);
+        let mut sampler = GibbsSampler::new(g, EnergyPath::Specialized);
+        let mut state = init;
+        for _ in 0..40_000 {
+            sampler.step(&mut state, &mut rng);
+        }
+        // average energy over the tail
+        let mut acc = 0.0;
+        for _ in 0..10_000 {
+            sampler.step(&mut state, &mut rng);
+            acc += g.total_energy(&state);
+        }
+        acc / 10_000.0
+    };
+    let zeros = run_from(vec![0u16; g.n()], 1);
+    let mut rng = Pcg64::seeded(2);
+    use mbgibbs::rng::Rng;
+    let random: Vec<u16> = (0..g.n()).map(|_| rng.index(2) as u16).collect();
+    let other = run_from(random, 3);
+    let rel = (zeros - other).abs() / zeros.abs().max(1.0);
+    assert!(rel < 0.05, "tail energies differ: {zeros} vs {other}");
+}
