@@ -7,6 +7,7 @@
 use mbgibbs::bench::report::{fmt_seconds, Table};
 use mbgibbs::bench::timer::{bench_iter, BenchConfig};
 use mbgibbs::graph::models;
+use mbgibbs::metrics::SamplerMetrics;
 use mbgibbs::rng::{
     sample_categorical_from_energies, sample_poisson, Pcg64, Rng, SparsePoissonSampler,
 };
@@ -108,6 +109,14 @@ fn main() {
             s2.step(&mut state, &mut rng);
         });
         add("step gibbs fast (potts)", s.median);
+        // Same step with metrics attached — the delta is the observability
+        // overhead (budget: < 5%; two Relaxed atomic adds per step).
+        let mut s2m = GibbsSampler::new(g, EnergyPath::Specialized);
+        s2m.attach_metrics(std::sync::Arc::new(SamplerMetrics::detached()));
+        let s = bench_iter(&cfg, |_| {
+            s2m.step(&mut state, &mut rng);
+        });
+        add("step gibbs fast + metrics (potts)", s.median);
         let mut s2d = DenseGibbsSampler::new(&potts);
         let s = bench_iter(&cfg, |_| {
             s2d.step(&mut state, &mut rng);
@@ -118,6 +127,12 @@ fn main() {
             s3.step(&mut state, &mut rng);
         });
         add("step mgpmh λ=L² (potts)", s.median);
+        let mut s3m = MgpmhSampler::new(g, stats.l * stats.l);
+        s3m.attach_metrics(std::sync::Arc::new(SamplerMetrics::detached()));
+        let s = bench_iter(&cfg, |_| {
+            s3m.step(&mut state, &mut rng);
+        });
+        add("step mgpmh λ=L² + metrics (potts)", s.median);
         let mut s4 = MinGibbsSampler::new(g, 4_000.0);
         let mincfg = BenchConfig {
             warmup_iters: 10,

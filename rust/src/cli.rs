@@ -10,12 +10,22 @@
 //! mbgibbs validate                      numeric checks of Theorems 2/4
 //! mbgibbs check-artifacts               XLA vs native energy parity
 //! mbgibbs info                          paper-model statistics (Δ, L, Ψ)
+//! mbgibbs metrics --snapshot FILE       pretty-print a saved metrics snapshot
 //! ```
 //!
 //! Common flags: `--iters N`, `--out DIR`, `--seed S`, `--quick`.
+//!
+//! Observability flags for `sample`: `--metrics-out PATH` writes an
+//! end-of-run JSON snapshot (plus a Prometheus text sibling `PATH.prom`),
+//! `--metrics-every SECS` additionally flushes both files periodically
+//! during the run, `--progress N` prints per-chain progress lines, and
+//! `--resume` continues from `output_dir/checkpoints/`.
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
 
 use anyhow::{anyhow, bail, Context, Result};
 
@@ -28,8 +38,9 @@ use crate::bench::report::{fmt_seconds, Table};
 use crate::bench::timer::{bench_iter, BenchConfig};
 use crate::bench::workload;
 use crate::config::ExperimentConfig;
-use crate::coordinator::{run_chains, RunSpec};
+use crate::coordinator::{run_chains_with_metrics, RunSpec};
 use crate::graph::models;
+use crate::metrics::{expose, MetricsHub, Snapshot, Unit};
 use crate::rng::Pcg64;
 use crate::runtime::{backend::parity_report, ArtifactStore, XlaDenseBackend};
 
@@ -145,6 +156,7 @@ pub fn run(raw: Vec<String>) -> Result<()> {
         "validate" => cmd_validate(&args),
         "check-artifacts" => cmd_check_artifacts(&args),
         "info" => cmd_info(),
+        "metrics" => cmd_metrics(&args),
         other => bail!("unknown subcommand {other:?} (try `mbgibbs help`)"),
     }
 }
@@ -163,7 +175,13 @@ fn print_help() {
          \x20 table1                 Table 1: per-iteration cost sweep over Δ\n\
          \x20 validate               numeric validation of Theorems 2 and 4\n\
          \x20 check-artifacts        XLA kernels vs native energies parity check\n\
-         \x20 info                   paper-model statistics (Δ, L, Ψ)"
+         \x20 info                   paper-model statistics (Δ, L, Ψ)\n\
+         \x20 metrics --snapshot F   pretty-print a saved metrics snapshot (JSON)\n\n\
+         SAMPLE OBSERVABILITY:\n\
+         \x20 --metrics-out PATH     write end-of-run metrics as JSON (+ PATH.prom)\n\
+         \x20 --metrics-every SECS   also flush the metrics files periodically\n\
+         \x20 --progress N           per-chain progress line every N iterations\n\
+         \x20 --resume               resume chains from output_dir/checkpoints/"
     );
 }
 
@@ -180,10 +198,19 @@ fn cmd_sample(args: &Args) -> Result<()> {
     run.chains = cfg.run.chains;
     run.seed = args.opt_u64("seed", cfg.run.seed)?;
     run.record_every = cfg.run.record_every;
-    if cfg.run.checkpoint_every > 0 {
+    run.progress_every = args.opt_u64("progress", cfg.run.progress_every)?;
+    run.resume = args.has_flag("resume");
+    if cfg.run.checkpoint_every > 0 || run.resume {
         run.checkpoint_every = cfg.run.checkpoint_every;
         run.checkpoint_dir = Some(cfg.run.output_dir.join("checkpoints"));
     }
+
+    let metrics_out = args.options.get("metrics-out").map(PathBuf::from);
+    let metrics_every = args.opt_u64("metrics-every", 0)?;
+    if metrics_every > 0 && metrics_out.is_none() {
+        bail!("--metrics-every requires --metrics-out PATH");
+    }
+
     println!(
         "model: {} (n = {}, D = {}, Δ = {}, L = {:.3}, Ψ = {:.1})",
         cfg.model.kind,
@@ -194,7 +221,36 @@ fn cmd_sample(args: &Args) -> Result<()> {
         graph.stats().psi,
     );
     println!("sampler: {}", spec.label(&graph));
-    let report = run_chains(&graph, &run);
+
+    // Background flusher: periodically snapshot the hub and rewrite the
+    // metrics files so long runs can be watched from outside.
+    let hub = Arc::new(MetricsHub::new());
+    let stop = Arc::new(AtomicBool::new(false));
+    let flusher = metrics_out.as_ref().filter(|_| metrics_every > 0).map(|path| {
+        let (hub, stop, path) = (hub.clone(), stop.clone(), path.clone());
+        std::thread::spawn(move || {
+            let tick = Duration::from_millis(200);
+            let mut since_flush = Duration::ZERO;
+            while !stop.load(Ordering::Relaxed) {
+                std::thread::sleep(tick);
+                since_flush += tick;
+                if since_flush >= Duration::from_secs(metrics_every) {
+                    since_flush = Duration::ZERO;
+                    if let Err(e) = write_metrics_files(&path, &hub.snapshot()) {
+                        eprintln!("[mbgibbs] metrics flush failed: {e:#}");
+                    }
+                }
+            }
+        })
+    });
+
+    let report = run_chains_with_metrics(&graph, &run, &hub);
+
+    stop.store(true, Ordering::Relaxed);
+    if let Some(h) = flusher {
+        let _ = h.join();
+    }
+
     let mut t = Table::new(
         "sample run",
         &["chain", "final_l2_error", "evals/iter", "steps/s", "acceptance", "seconds"],
@@ -204,13 +260,104 @@ fn cmd_sample(args: &Args) -> Result<()> {
             c.chain.to_string(),
             format!("{:.5}", c.final_error),
             format!("{:.1}", c.factor_evals as f64 / run.iters as f64),
-            format!("{:.0}", run.iters as f64 / c.seconds),
+            format!("{:.0}", c.steps_executed as f64 / c.seconds),
             format!("{:.3}", c.acceptance),
             format!("{:.2}", c.seconds),
         ]);
     }
     println!("{}", t.render());
     t.write_csv(&cfg.run.output_dir)?;
+
+    if let Some(path) = &metrics_out {
+        write_metrics_files(path, &report.metrics)?;
+        println!(
+            "metrics written to {} (and {})",
+            path.display(),
+            path.with_extension("prom").display()
+        );
+        print_metrics_tables(&report.metrics);
+    }
+    Ok(())
+}
+
+/// Write a snapshot as JSON at `path` plus Prometheus text at the `.prom`
+/// sibling.
+fn write_metrics_files(path: &Path, snap: &Snapshot) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)
+                .with_context(|| format!("creating {}", parent.display()))?;
+        }
+    }
+    std::fs::write(path, expose::to_json(snap))
+        .with_context(|| format!("writing {}", path.display()))?;
+    let prom = path.with_extension("prom");
+    std::fs::write(&prom, expose::to_prometheus(snap))
+        .with_context(|| format!("writing {}", prom.display()))?;
+    Ok(())
+}
+
+/// Format a histogram statistic for display, honouring the unit.
+fn fmt_stat(v: f64, unit: Unit) -> String {
+    if !v.is_finite() {
+        return "-".to_string();
+    }
+    match unit {
+        Unit::Nanos => fmt_seconds(v * 1e-9),
+        Unit::None => format!("{v:.1}"),
+    }
+}
+
+/// Pretty-print a snapshot as counter/gauge/histogram tables.
+fn print_metrics_tables(snap: &Snapshot) {
+    if !snap.counters.is_empty() {
+        let mut t = Table::new("counters", &["name", "value"]);
+        for (name, v) in &snap.counters {
+            t.push_row(vec![name.clone(), v.to_string()]);
+        }
+        println!("{}", t.render());
+    }
+    if !snap.gauges.is_empty() {
+        let mut t = Table::new("gauges", &["name", "value"]);
+        for (name, v) in &snap.gauges {
+            t.push_row(vec![name.clone(), format!("{v:.4}")]);
+        }
+        println!("{}", t.render());
+    }
+    if !snap.histograms.is_empty() {
+        let mut t = Table::new(
+            "histograms",
+            &["name", "count", "mean", "p50", "p95", "p99"],
+        );
+        for h in &snap.histograms {
+            t.push_row(vec![
+                h.name.clone(),
+                h.count.to_string(),
+                fmt_stat(h.mean, h.unit),
+                fmt_stat(h.p50, h.unit),
+                fmt_stat(h.p95, h.unit),
+                fmt_stat(h.p99, h.unit),
+            ]);
+        }
+        println!("{}", t.render());
+    }
+}
+
+/// `mbgibbs metrics --snapshot FILE`: pretty-print a saved JSON snapshot.
+fn cmd_metrics(args: &Args) -> Result<()> {
+    let path = args
+        .options
+        .get("snapshot")
+        .ok_or_else(|| anyhow!("metrics requires --snapshot FILE"))?;
+    let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+    let snap = expose::from_json(&text)?;
+    println!(
+        "snapshot {path}: {} counters, {} gauges, {} histograms",
+        snap.counters.len(),
+        snap.gauges.len(),
+        snap.histograms.len()
+    );
+    print_metrics_tables(&snap);
     Ok(())
 }
 
@@ -414,5 +561,41 @@ mod tests {
     #[test]
     fn info_runs() {
         run(vec!["info".to_string()]).unwrap();
+    }
+
+    #[test]
+    fn metrics_requires_snapshot_option() {
+        let err = run(vec!["metrics".to_string()]).unwrap_err();
+        assert!(err.to_string().contains("--snapshot"));
+    }
+
+    #[test]
+    fn metrics_pretty_prints_a_saved_snapshot() {
+        let dir = std::env::temp_dir()
+            .join(format!("mbgibbs_cli_metrics_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let hub = MetricsHub::new();
+        hub.counter("demo_total").add(7);
+        hub.latency("demo_latency_ns")
+            .record(Duration::from_micros(3));
+        let path = dir.join("snap.json");
+        write_metrics_files(&path, &hub.snapshot()).unwrap();
+        assert!(path.exists());
+        assert!(dir.join("snap.prom").exists());
+        run(vec![
+            "metrics".to_string(),
+            "--snapshot".to_string(),
+            path.to_str().unwrap().to_string(),
+        ])
+        .unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn fmt_stat_honours_units() {
+        assert_eq!(fmt_stat(f64::NAN, Unit::None), "-");
+        assert_eq!(fmt_stat(12.0, Unit::None), "12.0");
+        // 1.5e9 ns = 1.5 s; exact rendering delegated to fmt_seconds.
+        assert!(fmt_stat(1.5e9, Unit::Nanos).contains('s'));
     }
 }

@@ -83,6 +83,9 @@ pub struct RunConfig {
     /// Write a resumable chain checkpoint every this many iterations
     /// (0 = disabled). Files land in `output_dir/checkpoints/`.
     pub checkpoint_every: u64,
+    /// Emit a per-chain progress line to stderr every this many
+    /// iterations (0 = disabled).
+    pub progress_every: u64,
 }
 
 impl Default for RunConfig {
@@ -94,6 +97,7 @@ impl Default for RunConfig {
             record_every: 10_000,
             output_dir: PathBuf::from("out"),
             checkpoint_every: 0,
+            progress_every: 0,
         }
     }
 }
@@ -172,6 +176,7 @@ impl ExperimentConfig {
                     .unwrap_or("out"),
             ),
             checkpoint_every: get_u64("run", "checkpoint_every", 0)?,
+            progress_every: get_u64("run", "progress_every", 0)?,
         };
         Ok(Self {
             model,

@@ -9,8 +9,16 @@
 //! iter = 123456
 //! seed = 42
 //! chain = 0
+//! factor_evals = 456789
+//! accepted = 120000
+//! proposed = 123456
 //! state = 0 1 2 0 1 ...
 //! ```
+//!
+//! The counter keys (`factor_evals`, `accepted`, `proposed`) are
+//! cumulative totals at checkpoint time; they let a resumed run CONTINUE
+//! its metric counters instead of resetting them. They are optional on
+//! parse (default 0) so pre-observability v1 files still load.
 
 use std::path::Path;
 
@@ -25,6 +33,12 @@ pub struct Checkpoint {
     pub seed: u64,
     /// Chain index.
     pub chain: usize,
+    /// Cumulative factor evaluations at checkpoint time.
+    pub factor_evals: u64,
+    /// Cumulative MH acceptances at checkpoint time.
+    pub accepted: u64,
+    /// Cumulative MH proposals at checkpoint time (0 for Gibbs-type).
+    pub proposed: u64,
     /// Variable assignment.
     pub state: Vec<u16>,
 }
@@ -34,10 +48,14 @@ impl Checkpoint {
     pub fn to_text(&self) -> String {
         let state: Vec<String> = self.state.iter().map(|v| v.to_string()).collect();
         format!(
-            "mbgibbs-checkpoint v1\niter = {}\nseed = {}\nchain = {}\nstate = {}\n",
+            "mbgibbs-checkpoint v1\niter = {}\nseed = {}\nchain = {}\n\
+             factor_evals = {}\naccepted = {}\nproposed = {}\nstate = {}\n",
             self.iter,
             self.seed,
             self.chain,
+            self.factor_evals,
+            self.accepted,
+            self.proposed,
             state.join(" ")
         )
     }
@@ -50,6 +68,7 @@ impl Checkpoint {
             bail!("bad checkpoint header: {header:?}");
         }
         let (mut iter, mut seed, mut chain, mut state) = (None, None, None, None);
+        let (mut factor_evals, mut accepted, mut proposed) = (0u64, 0u64, 0u64);
         for line in lines {
             let line = line.trim();
             if line.is_empty() {
@@ -62,6 +81,9 @@ impl Checkpoint {
                 "iter" => iter = Some(value.trim().parse::<u64>()?),
                 "seed" => seed = Some(value.trim().parse::<u64>()?),
                 "chain" => chain = Some(value.trim().parse::<usize>()?),
+                "factor_evals" => factor_evals = value.trim().parse::<u64>()?,
+                "accepted" => accepted = value.trim().parse::<u64>()?,
+                "proposed" => proposed = value.trim().parse::<u64>()?,
                 "state" => {
                     let vs: Result<Vec<u16>, _> =
                         value.split_whitespace().map(|t| t.parse::<u16>()).collect();
@@ -74,6 +96,9 @@ impl Checkpoint {
             iter: iter.context("missing iter")?,
             seed: seed.context("missing seed")?,
             chain: chain.context("missing chain")?,
+            factor_evals,
+            accepted,
+            proposed,
             state: state.context("missing state")?,
         })
     }
@@ -103,6 +128,9 @@ mod tests {
             iter: 12345,
             seed: 42,
             chain: 3,
+            factor_evals: 987_654,
+            accepted: 11_000,
+            proposed: 12_345,
             state: vec![0, 1, 2, 9, 0],
         }
     }
@@ -128,6 +156,18 @@ mod tests {
     #[test]
     fn rejects_bad_header() {
         assert!(Checkpoint::from_text("not a checkpoint").is_err());
+    }
+
+    /// Pre-observability v1 files (no counter keys) still load, with the
+    /// counters defaulting to zero.
+    #[test]
+    fn loads_legacy_files_without_counters() {
+        let text = "mbgibbs-checkpoint v1\niter = 7\nseed = 2\nchain = 1\nstate = 0 1\n";
+        let c = Checkpoint::from_text(text).unwrap();
+        assert_eq!(c.iter, 7);
+        assert_eq!(c.factor_evals, 0);
+        assert_eq!(c.accepted, 0);
+        assert_eq!(c.proposed, 0);
     }
 
     #[test]

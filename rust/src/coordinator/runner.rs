@@ -1,4 +1,9 @@
 //! The chain runner: fan out chains over threads, aggregate reports.
+//!
+//! Observability: every run attaches a [`MetricsHub`]; each chain
+//! registers a [`SamplerMetrics`] family labeled `{chain, sampler}` and a
+//! per-chain step-latency histogram (sampled 1-in-16 to amortize clock
+//! reads). The final [`RunReport`] carries a [`Snapshot`] of everything.
 
 use std::path::PathBuf;
 use std::sync::Arc;
@@ -6,7 +11,8 @@ use std::time::Instant;
 
 use crate::bench::workload::SamplerSpec;
 use crate::graph::FactorGraph;
-use crate::metrics::MetricsHub;
+use crate::metrics::trace::{EventKind, TraceBuffer, TraceEvent};
+use crate::metrics::{labeled, MetricsHub, SamplerMetrics, Snapshot};
 use crate::rng::Pcg64;
 
 use super::checkpoint::Checkpoint;
@@ -32,6 +38,18 @@ pub struct RunSpec {
     pub checkpoint_dir: Option<PathBuf>,
     /// Checkpoint cadence (iterations); 0 disables periodic checkpoints.
     pub checkpoint_every: u64,
+    /// Resume from `checkpoint_dir/chain<k>.ckpt` where present: the
+    /// chain restarts at the saved iteration/state and its metric
+    /// counters CONTINUE from the saved totals. The RNG stream restarts
+    /// from the master seed (statistically fine — the resumed chain is a
+    /// valid chain — but not a bit-exact replay of the uninterrupted run).
+    pub resume: bool,
+    /// Emit a progress line to stderr every this many iterations per
+    /// chain; 0 disables.
+    pub progress_every: u64,
+    /// Per-chain trace ring-buffer capacity in events; 0 disables
+    /// tracing entirely (nothing is allocated).
+    pub trace_capacity: usize,
 }
 
 impl RunSpec {
@@ -46,6 +64,9 @@ impl RunSpec {
             init: None,
             checkpoint_dir: None,
             checkpoint_every: 0,
+            resume: false,
+            progress_every: 0,
+            trace_capacity: 0,
         }
     }
 }
@@ -59,14 +80,18 @@ pub struct ChainReport {
     pub trajectory: Vec<(u64, f64)>,
     /// Final error.
     pub final_error: f64,
-    /// Total factor evaluations.
+    /// Total factor evaluations (cumulative across resumes).
     pub factor_evals: u64,
     /// Accepted / proposed (1.0 for Gibbs-type samplers).
     pub acceptance: f64,
+    /// Steps executed in THIS process (excludes pre-resume iterations).
+    pub steps_executed: u64,
     /// Wall time in seconds.
     pub seconds: f64,
     /// Final state.
     pub final_state: Vec<u16>,
+    /// Retained trace events (empty unless `trace_capacity > 0`).
+    pub trace: Vec<TraceEvent>,
 }
 
 /// Aggregated results.
@@ -78,6 +103,8 @@ pub struct RunReport {
     pub steps_per_sec: f64,
     /// Mean factor evaluations per iteration.
     pub evals_per_iter: f64,
+    /// End-of-run snapshot of every metric the run touched.
+    pub metrics: Snapshot,
 }
 
 impl RunReport {
@@ -93,8 +120,9 @@ pub fn run_chains(graph: &FactorGraph, spec: &RunSpec) -> RunReport {
 }
 
 /// [`run_chains`] with an externally owned metrics hub: the caller can
-/// watch `chain<k>.steps` / `chain<k>.factor_evals` counters live from
-/// another thread while the run progresses.
+/// watch the `sampler_*{chain="k",...}` counter families live from
+/// another thread while the run progresses (e.g. the CLI's periodic
+/// `--metrics-every` flusher).
 pub fn run_chains_with_metrics(
     graph: &FactorGraph,
     spec: &RunSpec,
@@ -116,14 +144,21 @@ pub fn run_chains_with_metrics(
     });
 
     let total_secs: f64 = reports.iter().map(|r| r.seconds).sum();
-    let total_steps = spec.iters * spec.chains as u64;
+    let executed_steps: u64 = reports.iter().map(|r| r.steps_executed).sum();
+    let logical_steps = (spec.iters * spec.chains as u64).max(1);
     let total_evals: u64 = reports.iter().map(|r| r.factor_evals).sum();
     RunReport {
-        steps_per_sec: total_steps as f64 / (total_secs / spec.chains as f64).max(1e-12),
-        evals_per_iter: total_evals as f64 / total_steps as f64,
+        steps_per_sec: executed_steps as f64 / (total_secs / spec.chains as f64).max(1e-12),
+        evals_per_iter: total_evals as f64 / logical_steps as f64,
         chains: reports,
+        metrics: hub.snapshot(),
     }
 }
+
+/// Record a step-latency sample (and a `Step` trace event) once every
+/// this many iterations; amortizes the two `Instant::now()` reads to
+/// keep the instrumented step path within the overhead budget.
+const LATENCY_SAMPLE: u64 = 16;
 
 fn run_one_chain(
     graph: &FactorGraph,
@@ -137,27 +172,66 @@ fn run_one_chain(
     let mut state = spec.init.clone().unwrap_or_else(|| vec![0u16; n]);
     assert_eq!(state.len(), n, "init state has wrong length");
     let mut sampler = spec.sampler.build(graph);
-    sampler.reset(&state, &mut rng);
-    let mut sink = MarginalTrajectorySink::new(n, d, spec.record_every);
-    let steps_counter = hub.counter(&format!("chain{k}.steps"));
-    let evals_counter = hub.counter(&format!("chain{k}.factor_evals"));
-    // Batch metric updates so the atomics stay off the per-step path.
-    const METRICS_BATCH: u64 = 4096;
 
+    let chain_label = k.to_string();
+    let m = SamplerMetrics::register(
+        hub,
+        &[("chain", &chain_label), ("sampler", sampler.name())],
+    );
+    let latency = hub.latency(&labeled("chain_step_latency_ns", &[("chain", &chain_label)]));
+    let mut trace_buf = TraceBuffer::new(k as u32, spec.trace_capacity);
+
+    // Resume: adopt the checkpointed position and seed the metric
+    // counters with the saved cumulative totals so observability counts
+    // the whole logical run, not just this process.
+    let mut start_iter = 0u64;
+    if spec.resume {
+        if let Some(dir) = &spec.checkpoint_dir {
+            let path = dir.join(format!("chain{k}.ckpt"));
+            if path.exists() {
+                let ckpt = Checkpoint::load(&path).expect("resume: unreadable checkpoint");
+                assert_eq!(ckpt.seed, spec.seed, "resume: checkpoint seed mismatch");
+                assert_eq!(ckpt.chain, k, "resume: checkpoint chain mismatch");
+                assert_eq!(ckpt.state.len(), n, "resume: checkpoint state length mismatch");
+                assert!(
+                    ckpt.iter <= spec.iters,
+                    "resume: checkpoint is past the requested iteration count"
+                );
+                state = ckpt.state;
+                start_iter = ckpt.iter;
+                m.steps.add(ckpt.iter);
+                m.factor_evals.add(ckpt.factor_evals);
+                m.accepts.add(ckpt.accepted);
+                m.proposals.add(ckpt.proposed);
+            }
+        }
+    }
+    sampler.attach_metrics(m.clone());
+    sampler.reset(&state, &mut rng);
+
+    let mut sink = MarginalTrajectorySink::new(n, d, spec.record_every);
     let start = Instant::now();
-    let mut factor_evals = 0u64;
-    let mut accepted = 0u64;
-    let mut last_published = 0u64;
-    for it in 0..spec.iters {
-        let st = sampler.step(&mut state, &mut rng);
-        factor_evals += st.factor_evals;
-        accepted += st.accepted as u64;
+    for it in start_iter..spec.iters {
+        if it % LATENCY_SAMPLE == 0 {
+            let t0 = Instant::now();
+            let st = sampler.step(&mut state, &mut rng);
+            latency.record(t0.elapsed());
+            crate::trace_event!(trace_buf, EventKind::Step, it, st.factor_evals);
+        } else {
+            sampler.step(&mut state, &mut rng);
+        }
         use super::sink::SampleSink;
         sink.on_sample(it, &state);
-        if it % METRICS_BATCH == METRICS_BATCH - 1 {
-            steps_counter.add(METRICS_BATCH);
-            evals_counter.add(factor_evals - last_published);
-            last_published = factor_evals;
+        if spec.progress_every > 0 && (it + 1) % spec.progress_every == 0 {
+            let done = it + 1 - start_iter;
+            let rate = done as f64 / start.elapsed().as_secs_f64().max(1e-9);
+            eprintln!(
+                "[mbgibbs] chain {k}: iter {}/{} ({rate:.0} steps/s, {} factor evals)",
+                it + 1,
+                spec.iters,
+                m.factor_evals.get(),
+            );
+            crate::trace_event!(trace_buf, EventKind::Progress, it + 1, 0);
         }
         if spec.checkpoint_every > 0 && (it + 1) % spec.checkpoint_every == 0 {
             if let Some(dir) = &spec.checkpoint_dir {
@@ -166,15 +240,17 @@ fn run_one_chain(
                     iter: it + 1,
                     seed: spec.seed,
                     chain: k,
+                    factor_evals: m.factor_evals.get(),
+                    accepted: m.accepts.get(),
+                    proposed: m.proposals.get(),
                     state: state.clone(),
                 };
                 ckpt.save(&dir.join(format!("chain{k}.ckpt")))
                     .expect("checkpoint write failed");
+                crate::trace_event!(trace_buf, EventKind::Checkpoint, it + 1, 0);
             }
         }
     }
-    steps_counter.add(spec.iters % METRICS_BATCH);
-    evals_counter.add(factor_evals - last_published);
     {
         use super::sink::SampleSink;
         sink.on_finish(&state);
@@ -185,10 +261,12 @@ fn run_one_chain(
         chain: k,
         trajectory: sink.trajectory,
         final_error,
-        factor_evals,
-        acceptance: accepted as f64 / spec.iters.max(1) as f64,
+        factor_evals: m.factor_evals.get(),
+        acceptance: m.acceptance(),
+        steps_executed: spec.iters - start_iter,
         seconds,
         final_state: state,
+        trace: trace_buf.events_in_order(),
     }
 }
 
@@ -211,6 +289,7 @@ mod tests {
             assert!(c.final_error < 0.2, "chain {} error {}", c.chain, c.final_error);
             assert!(!c.trajectory.is_empty());
             assert_eq!(c.acceptance, 1.0);
+            assert_eq!(c.steps_executed, 20_000);
         }
         assert!(report.steps_per_sec > 0.0);
         assert!(report.evals_per_iter > 0.0);
@@ -261,6 +340,7 @@ mod tests {
             assert_eq!(ckpt.chain, k);
             assert_eq!(ckpt.iter, 800); // last multiple of 400 within 1000
             assert_eq!(ckpt.state.len(), 3);
+            assert!(ckpt.factor_evals > 0, "checkpoint missing cumulative evals");
         }
         assert_eq!(report.chains.len(), 2);
         std::fs::remove_dir_all(&dir).ok();
@@ -274,11 +354,23 @@ mod tests {
         let mut spec = RunSpec::new(SamplerSpec::Gibbs(EnergyPath::Generic));
         spec.iters = 10_000;
         spec.chains = 1;
-        run_chains_with_metrics(&g, &spec, &hub);
-        let snap: std::collections::BTreeMap<String, u64> =
-            hub.snapshot().into_iter().collect();
-        assert_eq!(snap["chain0.steps"], 10_000);
-        assert!(snap["chain0.factor_evals"] > 0);
+        let report = run_chains_with_metrics(&g, &spec, &hub);
+        let snap = hub.snapshot();
+        let steps = snap
+            .counter("sampler_steps_total{chain=\"0\",sampler=\"gibbs\"}")
+            .unwrap();
+        assert_eq!(steps, 10_000);
+        let evals = snap
+            .counter("sampler_factor_evals_total{chain=\"0\",sampler=\"gibbs\"}")
+            .unwrap();
+        assert!(evals > 0);
+        assert_eq!(report.chains[0].factor_evals, evals);
+        // Step latency histogram: 1-in-16 sampling over 10k steps.
+        let lat = snap.histogram("chain_step_latency_ns{chain=\"0\"}").unwrap();
+        assert_eq!(lat.count, 10_000 / LATENCY_SAMPLE);
+        assert!(lat.p50 > 0.0);
+        // And the run report embeds the same snapshot.
+        assert_eq!(report.metrics.counter_family_sum("sampler_steps_total"), 10_000);
     }
 
     #[test]
@@ -295,5 +387,40 @@ mod tests {
             .filter(|&&v| v != 2)
             .count();
         assert!(diff <= 1);
+    }
+
+    /// Write checkpoints, then resume on a fresh hub: the resumed run
+    /// must pick up at the checkpointed iteration and CONTINUE the
+    /// metric counters from the saved totals rather than resetting.
+    #[test]
+    fn resume_continues_metric_counters() {
+        let g = models::tiny_random(3, 2, 0.5, 11);
+        let dir = std::env::temp_dir().join(format!("mbgibbs_resume_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+
+        let mut spec = RunSpec::new(SamplerSpec::Gibbs(EnergyPath::Specialized));
+        spec.iters = 600;
+        spec.chains = 1;
+        spec.checkpoint_dir = Some(dir.clone());
+        spec.checkpoint_every = 300;
+        let first = run_chains(&g, &spec);
+        let evals_at_600 = first.chains[0].factor_evals;
+
+        // Resume the same run with a higher target: counters continue.
+        spec.iters = 1_000;
+        spec.resume = true;
+        let resumed = run_chains(&g, &spec);
+        let c = &resumed.chains[0];
+        assert_eq!(c.steps_executed, 400, "should resume at iter 600");
+        assert!(
+            c.factor_evals > evals_at_600,
+            "cumulative evals must grow past the checkpoint total"
+        );
+        let steps = resumed
+            .metrics
+            .counter("sampler_steps_total{chain=\"0\",sampler=\"gibbs\"}")
+            .unwrap();
+        assert_eq!(steps, 1_000, "steps counter must include pre-resume iterations");
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

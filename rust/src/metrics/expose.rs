@@ -1,0 +1,342 @@
+//! Snapshot exposition: JSON (machine-readable, round-trips through
+//! `mbgibbs metrics`) and Prometheus text format (scrape-compatible).
+//!
+//! The JSON document shape is:
+//!
+//! ```json
+//! {
+//!   "version": 1,
+//!   "counters": { "name{labels}": 123 },
+//!   "gauges":   { "name": 2.5 },
+//!   "histograms": {
+//!     "name": { "unit": "ns", "count": 9, "sum": 1024, "mean": 113.7,
+//!               "p50": 96.0, "p95": 480.0, "p99": 500.0,
+//!               "buckets": [[128, 5], [256, 9]] }
+//!   }
+//! }
+//! ```
+//!
+//! `buckets` pairs are `[upper_bound, cumulative_count]`, matching
+//! Prometheus `le` semantics. Numbers round-trip exactly below 2⁵³;
+//! above that (only the top log₂ bucket bound can get there) values
+//! saturate, which is fine for display purposes.
+
+use crate::config::json::JsonValue;
+use anyhow::{anyhow, Context, Result};
+
+use super::{HistogramSnapshot, Snapshot, Unit};
+
+/// Escape a string for embedding in a JSON document. Metric names carry
+/// `{k="v"}` label quotes, so this is not optional.
+fn esc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Format an f64 as a JSON number token (non-finite values become null).
+fn num(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "null".to_string()
+    }
+}
+
+fn unit_str(u: Unit) -> &'static str {
+    match u {
+        Unit::None => "",
+        Unit::Nanos => "ns",
+    }
+}
+
+fn unit_of(s: &str) -> Unit {
+    match s {
+        "ns" => Unit::Nanos,
+        _ => Unit::None,
+    }
+}
+
+/// Render a snapshot as a JSON document.
+pub fn to_json(snap: &Snapshot) -> String {
+    let mut out = String::with_capacity(1024);
+    out.push_str("{\n  \"version\": 1,\n  \"counters\": {");
+    for (i, (name, v)) in snap.counters.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!("\n    \"{}\": {v}", esc(name)));
+    }
+    if !snap.counters.is_empty() {
+        out.push_str("\n  ");
+    }
+    out.push_str("},\n  \"gauges\": {");
+    for (i, (name, v)) in snap.gauges.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!("\n    \"{}\": {}", esc(name), num(*v)));
+    }
+    if !snap.gauges.is_empty() {
+        out.push_str("\n  ");
+    }
+    out.push_str("},\n  \"histograms\": {");
+    for (i, h) in snap.histograms.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!(
+            "\n    \"{}\": {{\"unit\": \"{}\", \"count\": {}, \"sum\": {}, \
+             \"mean\": {}, \"p50\": {}, \"p95\": {}, \"p99\": {}, \"buckets\": [",
+            esc(&h.name),
+            unit_str(h.unit),
+            h.count,
+            h.sum,
+            num(h.mean),
+            num(h.p50),
+            num(h.p95),
+            num(h.p99),
+        ));
+        for (j, (le, cum)) in h.buckets.iter().enumerate() {
+            if j > 0 {
+                out.push_str(", ");
+            }
+            out.push_str(&format!("[{le}, {cum}]"));
+        }
+        out.push_str("]}");
+    }
+    if !snap.histograms.is_empty() {
+        out.push_str("\n  ");
+    }
+    out.push_str("}\n}\n");
+    out
+}
+
+fn as_u64(v: &JsonValue) -> Option<u64> {
+    v.as_f64().map(|f| {
+        if f >= u64::MAX as f64 {
+            u64::MAX
+        } else if f <= 0.0 {
+            0
+        } else {
+            f as u64
+        }
+    })
+}
+
+fn f64_or_nan(v: &JsonValue) -> f64 {
+    match v {
+        JsonValue::Null => f64::NAN,
+        other => other.as_f64().unwrap_or(f64::NAN),
+    }
+}
+
+/// Parse a JSON document produced by [`to_json`] back into a snapshot.
+pub fn from_json(text: &str) -> Result<Snapshot> {
+    let doc = JsonValue::parse(text).map_err(|e| anyhow!("invalid metrics JSON: {e}"))?;
+    let version = doc
+        .get("version")
+        .and_then(|v| v.as_f64())
+        .context("metrics JSON missing \"version\"")?;
+    if version != 1.0 {
+        return Err(anyhow!("unsupported metrics snapshot version {version}"));
+    }
+    let mut snap = Snapshot::default();
+    if let Some(obj) = doc.get("counters").and_then(|v| v.as_object()) {
+        for (name, v) in obj {
+            let v = as_u64(v).with_context(|| format!("counter {name:?} is not a number"))?;
+            snap.counters.push((name.clone(), v));
+        }
+    }
+    if let Some(obj) = doc.get("gauges").and_then(|v| v.as_object()) {
+        for (name, v) in obj {
+            snap.gauges.push((name.clone(), f64_or_nan(v)));
+        }
+    }
+    if let Some(obj) = doc.get("histograms").and_then(|v| v.as_object()) {
+        for (name, h) in obj {
+            let field = |k: &str| {
+                h.get(k)
+                    .with_context(|| format!("histogram {name:?} missing {k:?}"))
+            };
+            let mut buckets = Vec::new();
+            for pair in field("buckets")?
+                .as_array()
+                .with_context(|| format!("histogram {name:?} buckets not an array"))?
+            {
+                let pair = pair
+                    .as_array()
+                    .filter(|p| p.len() == 2)
+                    .with_context(|| format!("histogram {name:?} bucket is not a pair"))?;
+                buckets.push((
+                    as_u64(&pair[0]).context("bucket bound not a number")?,
+                    as_u64(&pair[1]).context("bucket count not a number")?,
+                ));
+            }
+            snap.histograms.push(HistogramSnapshot {
+                name: name.clone(),
+                unit: unit_of(field("unit")?.as_str().unwrap_or("")),
+                count: as_u64(field("count")?).context("count not a number")?,
+                sum: as_u64(field("sum")?).context("sum not a number")?,
+                mean: f64_or_nan(field("mean")?),
+                p50: f64_or_nan(field("p50")?),
+                p95: f64_or_nan(field("p95")?),
+                p99: f64_or_nan(field("p99")?),
+                buckets,
+            });
+        }
+    }
+    // BTreeMap iteration is already sorted; keep the Snapshot invariant.
+    Ok(snap)
+}
+
+/// Split `base{labels}` into `(base, Some("labels"))`, or `(name, None)`
+/// when unlabeled.
+fn split_name(name: &str) -> (&str, Option<&str>) {
+    match name.split_once('{') {
+        Some((base, rest)) => (base, Some(rest.trim_end_matches('}'))),
+        None => (name, None),
+    }
+}
+
+/// Sanitize a metric base name for Prometheus (`[a-zA-Z_][a-zA-Z0-9_]*`).
+fn prom_name(base: &str) -> String {
+    let mut out: String = base
+        .chars()
+        .map(|c| if c.is_ascii_alphanumeric() || c == '_' { c } else { '_' })
+        .collect();
+    if out.chars().next().is_some_and(|c| c.is_ascii_digit()) {
+        out.insert(0, '_');
+    }
+    out
+}
+
+/// Join existing labels with an extra `le` label for histogram buckets.
+fn with_le(labels: Option<&str>, le: &str) -> String {
+    match labels {
+        Some(l) if !l.is_empty() => format!("{{{l},le=\"{le}\"}}"),
+        _ => format!("{{le=\"{le}\"}}"),
+    }
+}
+
+fn plain_labels(labels: Option<&str>) -> String {
+    match labels {
+        Some(l) if !l.is_empty() => format!("{{{l}}}"),
+        _ => String::new(),
+    }
+}
+
+/// Render a snapshot in the Prometheus text exposition format. `# TYPE`
+/// headers are emitted once per metric family (base name).
+pub fn to_prometheus(snap: &Snapshot) -> String {
+    let mut out = String::with_capacity(1024);
+    let mut last_type_hdr = String::new();
+    let mut type_hdr = |out: &mut String, base: &str, kind: &str| {
+        if last_type_hdr != base {
+            out.push_str(&format!("# TYPE {base} {kind}\n"));
+            last_type_hdr = base.to_string();
+        }
+    };
+    for (name, v) in &snap.counters {
+        let (base, labels) = split_name(name);
+        let base = prom_name(base);
+        type_hdr(&mut out, &base, "counter");
+        out.push_str(&format!("{base}{} {v}\n", plain_labels(labels)));
+    }
+    for (name, v) in &snap.gauges {
+        let (base, labels) = split_name(name);
+        let base = prom_name(base);
+        type_hdr(&mut out, &base, "gauge");
+        out.push_str(&format!("{base}{} {}\n", plain_labels(labels), num(*v)));
+    }
+    for h in &snap.histograms {
+        let (base, labels) = split_name(&h.name);
+        let base = prom_name(base);
+        type_hdr(&mut out, &base, "histogram");
+        for (le, cum) in &h.buckets {
+            out.push_str(&format!("{base}_bucket{} {cum}\n", with_le(labels, &le.to_string())));
+        }
+        out.push_str(&format!("{base}_bucket{} {}\n", with_le(labels, "+Inf"), h.count));
+        out.push_str(&format!("{base}_sum{} {}\n", plain_labels(labels), h.sum));
+        out.push_str(&format!("{base}_count{} {}\n", plain_labels(labels), h.count));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::{labeled, MetricsHub};
+    use std::time::Duration;
+
+    fn sample_snapshot() -> Snapshot {
+        let hub = MetricsHub::new();
+        hub.counter(&labeled(
+            "sampler_factor_evals_total",
+            &[("chain", "0"), ("sampler", "gibbs")],
+        ))
+        .add(1234);
+        hub.counter("runner_chains_total").add(2);
+        hub.gauge("sampler_lambda").set(160.0);
+        hub.histogram("sampler_minibatch_local_size").record(12);
+        hub.histogram("sampler_minibatch_local_size").record(40);
+        hub.latency(&labeled("chain_step_latency_ns", &[("chain", "0")]))
+            .record(Duration::from_micros(5));
+        hub.snapshot()
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let snap = sample_snapshot();
+        let text = to_json(&snap);
+        let back = from_json(&text).unwrap();
+        assert_eq!(snap, back);
+    }
+
+    #[test]
+    fn json_escapes_label_quotes() {
+        let snap = sample_snapshot();
+        let text = to_json(&snap);
+        assert!(text.contains(r#"sampler_factor_evals_total{chain=\"0\",sampler=\"gibbs\"}"#));
+        // Must still be parseable by the first-party parser.
+        assert!(JsonValue::parse(&text).is_ok());
+    }
+
+    #[test]
+    fn from_json_rejects_bad_version() {
+        assert!(from_json("{\"version\": 9}").is_err());
+        assert!(from_json("not json").is_err());
+    }
+
+    #[test]
+    fn prometheus_shape() {
+        let snap = sample_snapshot();
+        let text = to_prometheus(&snap);
+        assert!(text.contains("# TYPE sampler_factor_evals_total counter"));
+        assert!(text.contains("sampler_factor_evals_total{chain=\"0\",sampler=\"gibbs\"} 1234"));
+        assert!(text.contains("# TYPE sampler_lambda gauge"));
+        assert!(text.contains("sampler_lambda 160"));
+        assert!(text.contains("# TYPE sampler_minibatch_local_size histogram"));
+        assert!(text.contains("sampler_minibatch_local_size_bucket{le=\"16\"} 1"));
+        assert!(text.contains("sampler_minibatch_local_size_bucket{le=\"+Inf\"} 2"));
+        assert!(text.contains("sampler_minibatch_local_size_sum 52"));
+        assert!(text.contains("sampler_minibatch_local_size_count 2"));
+        assert!(text.contains("chain_step_latency_ns_bucket{chain=\"0\",le=\"+Inf\"} 1"));
+    }
+
+    #[test]
+    fn prom_name_sanitizes() {
+        assert_eq!(prom_name("a.b-c"), "a_b_c");
+        assert_eq!(prom_name("0abc"), "_0abc");
+    }
+}

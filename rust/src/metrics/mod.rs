@@ -1,11 +1,32 @@
-//! Lightweight runtime metrics: counters, gauges, and latency histograms.
+//! Runtime observability: counters, gauges, histograms, a typed metrics
+//! registry, and structured-event tracing.
 //!
-//! The coordinator publishes per-chain progress through a [`MetricsHub`];
-//! everything is lock-cheap (atomics) so metrics never perturb the hot
-//! sampling loop.
+//! Layout:
+//!
+//! * this module — the metric primitives ([`Counter`], [`Gauge`],
+//!   [`Histogram`], [`LatencyHistogram`]), the [`MetricsHub`] registry,
+//!   the cheap [`Snapshot`] type, and [`SamplerMetrics`] — the shared
+//!   instrumentation struct every sampler reports through;
+//! * [`expose`] — JSON and Prometheus text exposition of snapshots;
+//! * [`trace`] — ring-buffer structured-event recorder with the
+//!   compile-out [`trace_event!`](crate::trace_event) macro.
+//!
+//! Everything on the record path is atomics-only (`Ordering::Relaxed`):
+//! metrics never take a lock after registration, so they do not perturb
+//! the hot sampling loop. The hub's `Mutex` guards only registration and
+//! snapshotting, both of which happen off the per-step path.
+//!
+//! Naming convention: Prometheus-style base names with `{k="v"}` label
+//! suffixes built by [`labeled`], e.g.
+//! `sampler_factor_evals_total{chain="0",sampler="gibbs"}`. See
+//! `docs/OBSERVABILITY.md` for the full metric inventory.
 
+pub mod expose;
+pub mod trace;
+
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 /// Monotone counter.
@@ -31,6 +52,7 @@ pub struct Gauge(AtomicU64);
 
 impl Gauge {
     /// Set the gauge.
+    #[inline]
     pub fn set(&self, v: f64) {
         self.0.store(v.to_bits(), Ordering::Relaxed);
     }
@@ -41,38 +63,50 @@ impl Gauge {
     }
 }
 
-/// Fixed-bucket log-scale latency histogram (nanoseconds).
+/// Number of log₂ buckets: bucket k covers [2^k, 2^(k+1)) (bucket 0 also
+/// holds zero), so 64 buckets span all of `u64`.
+const BUCKETS: usize = 64;
+
+/// Lock-free log₂-bucketed histogram over `u64` values (latencies in
+/// nanoseconds, minibatch sizes, ...). Quantiles interpolate linearly
+/// within the winning bucket, so they are exact to within a factor-of-two
+/// bucket but do not collapse to the bucket's upper bound.
 #[derive(Debug)]
-pub struct LatencyHistogram {
-    /// Bucket k covers [2^k, 2^(k+1)) ns; 48 buckets ≈ up to 3 days.
-    buckets: Vec<AtomicU64>,
+pub struct Histogram {
+    buckets: [AtomicU64; BUCKETS],
     count: AtomicU64,
-    total_ns: AtomicU64,
+    sum: AtomicU64,
 }
 
-impl Default for LatencyHistogram {
+impl Default for Histogram {
     fn default() -> Self {
         Self::new()
     }
 }
 
-impl LatencyHistogram {
+impl Histogram {
     /// Empty histogram.
     pub fn new() -> Self {
         Self {
-            buckets: (0..48).map(|_| AtomicU64::new(0)).collect(),
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
             count: AtomicU64::new(0),
-            total_ns: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
         }
     }
 
-    /// Record one duration.
-    pub fn record(&self, d: Duration) {
-        let ns = d.as_nanos().min(u64::MAX as u128) as u64;
-        let bucket = (64 - ns.max(1).leading_zeros() - 1).min(47) as usize;
-        self.buckets[bucket].fetch_add(1, Ordering::Relaxed);
+    /// Bucket index for a value: floor(log₂ v), with 0 and 1 sharing
+    /// bucket 0.
+    #[inline]
+    fn bucket_of(v: u64) -> usize {
+        (63 - v.max(1).leading_zeros()) as usize
+    }
+
+    /// Record one value.
+    #[inline]
+    pub fn record(&self, v: u64) {
+        self.buckets[Self::bucket_of(v)].fetch_add(1, Ordering::Relaxed);
         self.count.fetch_add(1, Ordering::Relaxed);
-        self.total_ns.fetch_add(ns, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
     }
 
     /// Number of recorded samples.
@@ -80,37 +114,198 @@ impl LatencyHistogram {
         self.count.load(Ordering::Relaxed)
     }
 
-    /// Mean recorded latency.
-    pub fn mean(&self) -> Duration {
-        let c = self.count();
-        if c == 0 {
-            return Duration::ZERO;
-        }
-        Duration::from_nanos(self.total_ns.load(Ordering::Relaxed) / c)
+    /// Sum of recorded values.
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
     }
 
-    /// Approximate quantile (bucket upper bound), q in [0, 1].
-    pub fn quantile(&self, q: f64) -> Duration {
+    /// Mean recorded value (0 when empty).
+    pub fn mean(&self) -> f64 {
         let c = self.count();
         if c == 0 {
-            return Duration::ZERO;
+            0.0
+        } else {
+            self.sum() as f64 / c as f64
         }
-        let target = (q.clamp(0.0, 1.0) * c as f64).ceil() as u64;
+    }
+
+    /// Approximate quantile, q ∈ [0, 1], linearly interpolated within the
+    /// winning bucket. Returns 0 when empty.
+    pub fn quantile(&self, q: f64) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            return 0.0;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * c as f64).ceil() as u64).clamp(1, c);
         let mut acc = 0u64;
         for (k, b) in self.buckets.iter().enumerate() {
-            acc += b.load(Ordering::Relaxed);
-            if acc >= target {
-                return Duration::from_nanos(1u64 << (k + 1));
+            let in_bucket = b.load(Ordering::Relaxed);
+            if in_bucket == 0 {
+                continue;
             }
+            if acc + in_bucket >= rank {
+                let frac = (rank - acc) as f64 / in_bucket as f64;
+                let lo = if k == 0 { 0.0 } else { (k as f64).exp2() };
+                let hi = ((k + 1) as f64).exp2();
+                return lo + frac * (hi - lo);
+            }
+            acc += in_bucket;
         }
-        Duration::from_nanos(u64::MAX)
+        // Unreachable while count() is consistent; be defensive anyway.
+        f64::MAX
+    }
+
+    /// Median.
+    pub fn p50(&self) -> f64 {
+        self.quantile(0.50)
+    }
+
+    /// 95th percentile.
+    pub fn p95(&self) -> f64 {
+        self.quantile(0.95)
+    }
+
+    /// 99th percentile.
+    pub fn p99(&self) -> f64 {
+        self.quantile(0.99)
+    }
+
+    /// Cumulative (upper-bound, count ≤ bound) pairs for non-empty
+    /// prefixes, trimmed after the last non-empty bucket. Bounds are the
+    /// bucket's exclusive upper edge 2^(k+1) (saturated for the top
+    /// bucket).
+    pub fn cumulative_buckets(&self) -> Vec<(u64, u64)> {
+        let raw: Vec<u64> = self
+            .buckets
+            .iter()
+            .map(|b| b.load(Ordering::Relaxed))
+            .collect();
+        let last = match raw.iter().rposition(|&c| c > 0) {
+            Some(i) => i,
+            None => return Vec::new(),
+        };
+        let mut acc = 0u64;
+        let mut out = Vec::with_capacity(last + 1);
+        for (k, &c) in raw.iter().enumerate().take(last + 1) {
+            acc += c;
+            let bound = if k + 1 >= 64 { u64::MAX } else { 1u64 << (k + 1) };
+            out.push((bound, acc));
+        }
+        out
     }
 }
 
-/// Named metrics registry shared between coordinator and CLI reporting.
+/// A [`Histogram`] of durations recorded in nanoseconds.
+#[derive(Debug, Default)]
+pub struct LatencyHistogram {
+    inner: Histogram,
+}
+
+impl LatencyHistogram {
+    /// Empty histogram.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one duration.
+    #[inline]
+    pub fn record(&self, d: Duration) {
+        self.inner.record(d.as_nanos().min(u64::MAX as u128) as u64);
+    }
+
+    /// Number of recorded samples.
+    pub fn count(&self) -> u64 {
+        self.inner.count()
+    }
+
+    /// Mean recorded latency.
+    pub fn mean(&self) -> Duration {
+        Duration::from_nanos(self.inner.mean() as u64)
+    }
+
+    /// Interpolated quantile, q ∈ [0, 1].
+    pub fn quantile(&self, q: f64) -> Duration {
+        Duration::from_nanos(self.inner.quantile(q) as u64)
+    }
+
+    /// Median latency.
+    pub fn p50(&self) -> Duration {
+        self.quantile(0.50)
+    }
+
+    /// 95th-percentile latency.
+    pub fn p95(&self) -> Duration {
+        self.quantile(0.95)
+    }
+
+    /// 99th-percentile latency.
+    pub fn p99(&self) -> Duration {
+        self.quantile(0.99)
+    }
+
+    /// The underlying value histogram (nanosecond units).
+    pub fn histogram(&self) -> &Histogram {
+        &self.inner
+    }
+}
+
+/// Value unit of a histogram, carried into snapshots and exposition.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Unit {
+    /// Dimensionless (sizes, counts).
+    None,
+    /// Nanoseconds (latency histograms).
+    Nanos,
+}
+
+#[derive(Clone, Debug)]
+enum Metric {
+    Counter(Arc<Counter>),
+    Gauge(Arc<Gauge>),
+    Histogram(Arc<Histogram>),
+    Latency(Arc<LatencyHistogram>),
+}
+
+impl Metric {
+    fn kind(&self) -> &'static str {
+        match self {
+            Metric::Counter(_) => "counter",
+            Metric::Gauge(_) => "gauge",
+            Metric::Histogram(_) => "histogram",
+            Metric::Latency(_) => "latency histogram",
+        }
+    }
+}
+
+/// Format a metric name with `{key="value"}` labels appended, e.g.
+/// `labeled("sampler_steps_total", &[("chain", "0")])` →
+/// `sampler_steps_total{chain="0"}`.
+pub fn labeled(name: &str, labels: &[(&str, &str)]) -> String {
+    if labels.is_empty() {
+        return name.to_string();
+    }
+    let mut s = String::with_capacity(name.len() + 16 * labels.len());
+    s.push_str(name);
+    s.push('{');
+    for (i, (k, v)) in labels.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        s.push_str(k);
+        s.push_str("=\"");
+        s.push_str(v);
+        s.push('"');
+    }
+    s.push('}');
+    s
+}
+
+/// Named metrics registry shared between samplers, coordinator, and the
+/// CLI. Handle lookup is a single `HashMap` probe under a registration
+/// mutex; the returned `Arc` handles are lock-free thereafter.
 #[derive(Debug, Default)]
 pub struct MetricsHub {
-    counters: Mutex<Vec<(String, std::sync::Arc<Counter>)>>,
+    inner: Mutex<HashMap<String, Metric>>,
 }
 
 impl MetricsHub {
@@ -119,25 +314,254 @@ impl MetricsHub {
         Self::default()
     }
 
-    /// Get or create a named counter.
-    pub fn counter(&self, name: &str) -> std::sync::Arc<Counter> {
-        let mut g = self.counters.lock().unwrap();
-        if let Some((_, c)) = g.iter().find(|(n, _)| n == name) {
-            return c.clone();
+    fn entry<T, F: FnOnce() -> Metric, G: Fn(&Metric) -> Option<T>>(
+        &self,
+        name: &str,
+        make: F,
+        view: G,
+    ) -> T {
+        let mut g = self.inner.lock().unwrap();
+        let m = g
+            .entry(name.to_string())
+            .or_insert_with(make);
+        match view(m) {
+            Some(t) => t,
+            None => panic!(
+                "metric {name:?} already registered as a {}",
+                m.kind()
+            ),
         }
-        let c = std::sync::Arc::new(Counter::default());
-        g.push((name.to_string(), c.clone()));
-        c
     }
 
-    /// Snapshot all counters (name, value).
-    pub fn snapshot(&self) -> Vec<(String, u64)> {
+    /// Get or create a named counter.
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        self.entry(
+            name,
+            || Metric::Counter(Arc::new(Counter::default())),
+            |m| match m {
+                Metric::Counter(c) => Some(c.clone()),
+                _ => None,
+            },
+        )
+    }
+
+    /// Get or create a named gauge.
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        self.entry(
+            name,
+            || Metric::Gauge(Arc::new(Gauge::default())),
+            |m| match m {
+                Metric::Gauge(g) => Some(g.clone()),
+                _ => None,
+            },
+        )
+    }
+
+    /// Get or create a named value histogram.
+    pub fn histogram(&self, name: &str) -> Arc<Histogram> {
+        self.entry(
+            name,
+            || Metric::Histogram(Arc::new(Histogram::new())),
+            |m| match m {
+                Metric::Histogram(h) => Some(h.clone()),
+                _ => None,
+            },
+        )
+    }
+
+    /// Get or create a named latency histogram (nanosecond units).
+    pub fn latency(&self, name: &str) -> Arc<LatencyHistogram> {
+        self.entry(
+            name,
+            || Metric::Latency(Arc::new(LatencyHistogram::new())),
+            |m| match m {
+                Metric::Latency(h) => Some(h.clone()),
+                _ => None,
+            },
+        )
+    }
+
+    /// Point-in-time snapshot of every registered metric, sorted by name
+    /// (deterministic output for reports and tests).
+    pub fn snapshot(&self) -> Snapshot {
+        let g = self.inner.lock().unwrap();
+        let mut snap = Snapshot::default();
+        for (name, m) in g.iter() {
+            match m {
+                Metric::Counter(c) => snap.counters.push((name.clone(), c.get())),
+                Metric::Gauge(v) => snap.gauges.push((name.clone(), v.get())),
+                Metric::Histogram(h) => {
+                    snap.histograms.push(HistogramSnapshot::of(name, h, Unit::None));
+                }
+                Metric::Latency(h) => snap.histograms.push(HistogramSnapshot::of(
+                    name,
+                    h.histogram(),
+                    Unit::Nanos,
+                )),
+            }
+        }
+        snap.counters.sort_by(|a, b| a.0.cmp(&b.0));
+        snap.gauges.sort_by(|a, b| a.0.cmp(&b.0));
+        snap.histograms.sort_by(|a, b| a.name.cmp(&b.name));
+        snap
+    }
+}
+
+/// Frozen view of one histogram.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HistogramSnapshot {
+    /// Full metric name (with labels).
+    pub name: String,
+    /// Value unit.
+    pub unit: Unit,
+    /// Sample count.
+    pub count: u64,
+    /// Sum of recorded values.
+    pub sum: u64,
+    /// Mean value.
+    pub mean: f64,
+    /// Median (interpolated).
+    pub p50: f64,
+    /// 95th percentile (interpolated).
+    pub p95: f64,
+    /// 99th percentile (interpolated).
+    pub p99: f64,
+    /// Cumulative (upper bound, count ≤ bound) pairs, trimmed.
+    pub buckets: Vec<(u64, u64)>,
+}
+
+impl HistogramSnapshot {
+    fn of(name: &str, h: &Histogram, unit: Unit) -> Self {
+        Self {
+            name: name.to_string(),
+            unit,
+            count: h.count(),
+            sum: h.sum(),
+            mean: h.mean(),
+            p50: h.p50(),
+            p95: h.p95(),
+            p99: h.p99(),
+            buckets: h.cumulative_buckets(),
+        }
+    }
+}
+
+/// Frozen view of every metric in a hub; cheap to clone, serialize, and
+/// diff. Produced by [`MetricsHub::snapshot`], rendered by [`expose`].
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Snapshot {
+    /// (name, value), sorted by name.
+    pub counters: Vec<(String, u64)>,
+    /// (name, value), sorted by name.
+    pub gauges: Vec<(String, f64)>,
+    /// Histograms, sorted by name.
+    pub histograms: Vec<HistogramSnapshot>,
+}
+
+impl Snapshot {
+    /// Counter value by exact name.
+    pub fn counter(&self, name: &str) -> Option<u64> {
         self.counters
-            .lock()
-            .unwrap()
             .iter()
-            .map(|(n, c)| (n.clone(), c.get()))
-            .collect()
+            .find(|(n, _)| n == name)
+            .map(|&(_, v)| v)
+    }
+
+    /// Gauge value by exact name.
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        self.gauges
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|&(_, v)| v)
+    }
+
+    /// Histogram by exact name.
+    pub fn histogram(&self, name: &str) -> Option<&HistogramSnapshot> {
+        self.histograms.iter().find(|h| h.name == name)
+    }
+
+    /// Sum of all counters in a labeled family: matches `base` exactly or
+    /// `base{...}` with any labels.
+    pub fn counter_family_sum(&self, base: &str) -> u64 {
+        self.counters
+            .iter()
+            .filter(|(n, _)| {
+                n == base || (n.starts_with(base) && n[base.len()..].starts_with('{'))
+            })
+            .map(|&(_, v)| v)
+            .sum()
+    }
+}
+
+/// The shared instrumentation struct every sampler reports through.
+///
+/// All handles live in a [`MetricsHub`] (so snapshots see them) and are
+/// updated with relaxed atomics on the step path. A sampler without an
+/// attached `SamplerMetrics` pays only an `Option` branch per step; the
+/// `hotpath` bench runs uninstrumented and gates the overhead budget.
+#[derive(Debug)]
+pub struct SamplerMetrics {
+    /// Steps taken.
+    pub steps: Arc<Counter>,
+    /// Factor evaluations — the paper's cost unit.
+    pub factor_evals: Arc<Counter>,
+    /// MH proposals made (Gibbs-type samplers never increment this).
+    pub proposals: Arc<Counter>,
+    /// MH proposals accepted.
+    pub accepts: Arc<Counter>,
+    /// Per-step local (proposal) minibatch size |S|.
+    pub minibatch_local: Arc<Histogram>,
+    /// Per-estimate global (Eq. 2) minibatch size.
+    pub minibatch_global: Arc<Histogram>,
+    /// Configured first batch size λ (or B for local minibatch).
+    pub lambda: Arc<Gauge>,
+    /// Configured second batch size λ₂ (DoubleMIN only).
+    pub lambda2: Arc<Gauge>,
+    /// Most recent cached energy estimate (ε / ξ) on the augmented space.
+    pub estimator_energy: Arc<Gauge>,
+}
+
+impl SamplerMetrics {
+    /// Register the full metric family in `hub` under `labels` (normally
+    /// `[("chain", k), ("sampler", name)]`).
+    pub fn register(hub: &MetricsHub, labels: &[(&str, &str)]) -> Arc<Self> {
+        Arc::new(Self {
+            steps: hub.counter(&labeled("sampler_steps_total", labels)),
+            factor_evals: hub.counter(&labeled("sampler_factor_evals_total", labels)),
+            proposals: hub.counter(&labeled("sampler_proposals_total", labels)),
+            accepts: hub.counter(&labeled("sampler_accepts_total", labels)),
+            minibatch_local: hub.histogram(&labeled("sampler_minibatch_local_size", labels)),
+            minibatch_global: hub.histogram(&labeled("sampler_minibatch_global_size", labels)),
+            lambda: hub.gauge(&labeled("sampler_lambda", labels)),
+            lambda2: hub.gauge(&labeled("sampler_lambda2", labels)),
+            estimator_energy: hub.gauge(&labeled("sampler_estimator_energy", labels)),
+        })
+    }
+
+    /// Standalone (unregistered) instance — for tests and benches.
+    pub fn detached() -> Arc<Self> {
+        Arc::new(Self {
+            steps: Arc::new(Counter::default()),
+            factor_evals: Arc::new(Counter::default()),
+            proposals: Arc::new(Counter::default()),
+            accepts: Arc::new(Counter::default()),
+            minibatch_local: Arc::new(Histogram::new()),
+            minibatch_global: Arc::new(Histogram::new()),
+            lambda: Arc::new(Gauge::default()),
+            lambda2: Arc::new(Gauge::default()),
+            estimator_energy: Arc::new(Gauge::default()),
+        })
+    }
+
+    /// Empirical acceptance rate; 1.0 for samplers that never propose
+    /// (Gibbs-type chains accept by construction).
+    pub fn acceptance(&self) -> f64 {
+        let p = self.proposals.get();
+        if p == 0 {
+            1.0
+        } else {
+            self.accepts.get() as f64 / p as f64
+        }
     }
 }
 
@@ -161,30 +585,140 @@ mod tests {
     }
 
     #[test]
-    fn histogram_mean_and_quantile() {
+    fn histogram_bucket_edges() {
+        assert_eq!(Histogram::bucket_of(0), 0);
+        assert_eq!(Histogram::bucket_of(1), 0);
+        assert_eq!(Histogram::bucket_of(2), 1);
+        assert_eq!(Histogram::bucket_of(3), 1);
+        assert_eq!(Histogram::bucket_of(4), 2);
+        assert_eq!(Histogram::bucket_of(u64::MAX), 63);
+    }
+
+    #[test]
+    fn quantile_interpolates_within_bucket() {
+        let h = Histogram::new();
+        // 100 samples, all in bucket [1024, 2048).
+        for _ in 0..100 {
+            h.record(1500);
+        }
+        let p50 = h.p50();
+        // Interpolation must land strictly inside the bucket, not at the
+        // 2048 upper bound the pre-fix quantile returned.
+        assert!(p50 > 1024.0 && p50 < 2048.0, "p50 = {p50}");
+        let q01 = h.quantile(0.01);
+        let q99 = h.quantile(0.99);
+        assert!(q01 < q99, "{q01} vs {q99}");
+        assert!(h.quantile(1.0) <= 2048.0);
+    }
+
+    #[test]
+    fn quantile_ordering_across_buckets() {
+        let h = Histogram::new();
+        for v in [1u64, 2, 4, 8, 1000] {
+            h.record(v * 1000);
+        }
+        assert_eq!(h.count(), 5);
+        assert!(h.mean() >= 100.0 * 1000.0);
+        assert!(h.p50() <= h.p95());
+        assert!(h.p95() <= h.p99());
+        assert!(h.quantile(1.0) >= 1_000_000.0 && h.quantile(1.0) <= 2_097_152.0);
+    }
+
+    #[test]
+    fn histogram_empty() {
+        let h = Histogram::new();
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.quantile(0.9), 0.0);
+        assert!(h.cumulative_buckets().is_empty());
+        let l = LatencyHistogram::new();
+        assert_eq!(l.mean(), Duration::ZERO);
+        assert_eq!(l.quantile(0.9), Duration::ZERO);
+    }
+
+    #[test]
+    fn latency_histogram_quantiles() {
         let h = LatencyHistogram::new();
         for us in [1u64, 2, 4, 8, 1000] {
             h.record(Duration::from_micros(us));
         }
         assert_eq!(h.count(), 5);
         assert!(h.mean() >= Duration::from_micros(100));
-        assert!(h.quantile(0.5) >= Duration::from_micros(2));
+        assert!(h.p50() >= Duration::from_micros(2));
         assert!(h.quantile(1.0) >= Duration::from_micros(1000));
+        assert!(h.p50() <= h.p95() && h.p95() <= h.p99());
     }
 
     #[test]
-    fn hub_reuses_counters() {
+    fn cumulative_buckets_trimmed_and_monotone() {
+        let h = Histogram::new();
+        for v in [1u64, 3, 3, 1000] {
+            h.record(v);
+        }
+        let b = h.cumulative_buckets();
+        assert_eq!(b.last().unwrap().1, 4);
+        assert!(b.windows(2).all(|w| w[0].0 < w[1].0 && w[0].1 <= w[1].1));
+        // trimmed: last bound covers 1000 (bucket [512,1024) → bound 1024)
+        assert_eq!(b.last().unwrap().0, 1024);
+    }
+
+    #[test]
+    fn hub_reuses_handles_across_types() {
         let hub = MetricsHub::new();
         hub.counter("steps").add(5);
         hub.counter("steps").add(2);
+        hub.gauge("lambda").set(3.5);
+        hub.histogram("sizes").record(7);
+        hub.latency("lat").record(Duration::from_micros(3));
         let snap = hub.snapshot();
-        assert_eq!(snap, vec![("steps".to_string(), 7)]);
+        assert_eq!(snap.counter("steps"), Some(7));
+        assert_eq!(snap.gauge("lambda"), Some(3.5));
+        assert_eq!(snap.histogram("sizes").unwrap().count, 1);
+        assert_eq!(snap.histogram("lat").unwrap().unit, Unit::Nanos);
     }
 
     #[test]
-    fn histogram_empty() {
-        let h = LatencyHistogram::new();
-        assert_eq!(h.mean(), Duration::ZERO);
-        assert_eq!(h.quantile(0.9), Duration::ZERO);
+    #[should_panic(expected = "already registered")]
+    fn hub_rejects_type_mismatch() {
+        let hub = MetricsHub::new();
+        hub.counter("x");
+        hub.gauge("x");
+    }
+
+    #[test]
+    fn labeled_formatting() {
+        assert_eq!(labeled("a", &[]), "a");
+        assert_eq!(
+            labeled("steps", &[("chain", "0"), ("sampler", "gibbs")]),
+            "steps{chain=\"0\",sampler=\"gibbs\"}"
+        );
+    }
+
+    #[test]
+    fn snapshot_family_sum() {
+        let hub = MetricsHub::new();
+        hub.counter(&labeled("evals", &[("chain", "0")])).add(3);
+        hub.counter(&labeled("evals", &[("chain", "1")])).add(4);
+        hub.counter("evals_other").add(100);
+        let snap = hub.snapshot();
+        assert_eq!(snap.counter_family_sum("evals"), 7);
+    }
+
+    #[test]
+    fn sampler_metrics_acceptance() {
+        let m = SamplerMetrics::detached();
+        assert_eq!(m.acceptance(), 1.0);
+        m.proposals.add(4);
+        m.accepts.add(3);
+        assert_eq!(m.acceptance(), 0.75);
+    }
+
+    #[test]
+    fn snapshot_is_sorted() {
+        let hub = MetricsHub::new();
+        hub.counter("zz");
+        hub.counter("aa");
+        let snap = hub.snapshot();
+        assert_eq!(snap.counters[0].0, "aa");
+        assert_eq!(snap.counters[1].0, "zz");
     }
 }

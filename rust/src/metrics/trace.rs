@@ -1,0 +1,204 @@
+//! Lightweight structured-event tracing.
+//!
+//! A [`TraceBuffer`] is a fixed-capacity, single-writer ring buffer of
+//! [`TraceEvent`]s: the runner creates one per chain, the chain thread is
+//! the only writer, and the buffer is drained after the thread joins — so
+//! recording needs no locks, no atomics, and (after construction) no
+//! allocation. Timestamps are nanoseconds from a monotonic per-buffer
+//! epoch (`Instant`), so events within one chain are totally ordered.
+//!
+//! Recording sites go through the [`trace_event!`](crate::trace_event)
+//! macro, which compiles to nothing unless the crate is built with the
+//! `trace` feature — disabled builds pay zero cost at the call site, not
+//! even a branch. The buffer type itself is always compiled so reports
+//! can mention trace capacity uniformly.
+
+use std::time::Instant;
+
+/// What kind of event a [`TraceEvent`] records. The meaning of the `a`
+/// and `b` payload words depends on the kind.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EventKind {
+    /// One sampler step: `a` = iteration index, `b` = factor evals so far.
+    Step,
+    /// A checkpoint write: `a` = iteration index, `b` = unused.
+    Checkpoint,
+    /// A progress report line: `a` = iteration index, `b` = unused.
+    Progress,
+    /// Free-form instrumentation point: payload meaning is site-defined.
+    Custom,
+}
+
+/// One fixed-size trace record. 32 bytes, `Copy`, no heap.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TraceEvent {
+    /// Nanoseconds since the owning buffer's epoch.
+    pub t_ns: u64,
+    /// Chain index the event belongs to.
+    pub chain: u32,
+    /// Event kind.
+    pub kind: EventKind,
+    /// First payload word (kind-dependent).
+    pub a: u64,
+    /// Second payload word (kind-dependent).
+    pub b: u64,
+}
+
+/// Fixed-capacity single-writer ring buffer of trace events.
+///
+/// With capacity 0 the buffer is inert: [`record`](Self::record) is a
+/// no-op and nothing is allocated.
+#[derive(Debug)]
+pub struct TraceBuffer {
+    chain: u32,
+    epoch: Instant,
+    events: Vec<TraceEvent>,
+    cap: usize,
+    cursor: usize,
+    recorded: u64,
+}
+
+impl TraceBuffer {
+    /// New buffer for `chain` holding at most `cap` events (ring
+    /// semantics: oldest events are overwritten once full).
+    pub fn new(chain: u32, cap: usize) -> Self {
+        Self {
+            chain,
+            epoch: Instant::now(),
+            events: Vec::with_capacity(cap),
+            cap,
+            cursor: 0,
+            recorded: 0,
+        }
+    }
+
+    /// Chain index this buffer belongs to.
+    pub fn chain(&self) -> u32 {
+        self.chain
+    }
+
+    /// Capacity in events.
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Total events ever recorded (including overwritten ones).
+    pub fn recorded(&self) -> u64 {
+        self.recorded
+    }
+
+    /// Record one event. No-op when capacity is 0; never allocates after
+    /// the buffer first fills.
+    #[inline]
+    pub fn record(&mut self, kind: EventKind, a: u64, b: u64) {
+        if self.cap == 0 {
+            return;
+        }
+        let ev = TraceEvent {
+            t_ns: self.epoch.elapsed().as_nanos().min(u64::MAX as u128) as u64,
+            chain: self.chain,
+            kind,
+            a,
+            b,
+        };
+        if self.events.len() < self.cap {
+            self.events.push(ev);
+        } else {
+            self.events[self.cursor] = ev;
+        }
+        self.cursor = (self.cursor + 1) % self.cap;
+        self.recorded += 1;
+    }
+
+    /// Retained events, oldest first.
+    pub fn events_in_order(&self) -> Vec<TraceEvent> {
+        if self.events.len() < self.cap {
+            return self.events.clone();
+        }
+        let mut out = Vec::with_capacity(self.events.len());
+        out.extend_from_slice(&self.events[self.cursor..]);
+        out.extend_from_slice(&self.events[..self.cursor]);
+        out
+    }
+}
+
+/// Record a structured event into a [`TraceBuffer`], compiled out
+/// entirely unless the `trace` cargo feature is enabled.
+///
+/// ```ignore
+/// trace_event!(buf, EventKind::Checkpoint, iter, 0);
+/// ```
+#[cfg(feature = "trace")]
+#[macro_export]
+macro_rules! trace_event {
+    ($buf:expr, $kind:expr, $a:expr, $b:expr) => {
+        $buf.record($kind, $a, $b)
+    };
+}
+
+/// Disabled-build arm: expands to nothing that executes. The dead branch
+/// keeps the bindings "used" so call sites compile identically with the
+/// feature off, without evaluating any argument.
+#[cfg(not(feature = "trace"))]
+#[macro_export]
+macro_rules! trace_event {
+    ($buf:expr, $kind:expr, $a:expr, $b:expr) => {
+        if false {
+            let _ = (&mut $buf, $kind, $a, $b);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_in_order_with_monotone_timestamps() {
+        let mut buf = TraceBuffer::new(3, 16);
+        for i in 0..5u64 {
+            buf.record(EventKind::Step, i, i * 10);
+        }
+        let evs = buf.events_in_order();
+        assert_eq!(evs.len(), 5);
+        assert_eq!(buf.recorded(), 5);
+        assert!(evs.windows(2).all(|w| w[0].t_ns <= w[1].t_ns));
+        assert_eq!(evs[4].a, 4);
+        assert_eq!(evs[4].b, 40);
+        assert!(evs.iter().all(|e| e.chain == 3));
+    }
+
+    #[test]
+    fn ring_wraps_keeping_newest() {
+        let mut buf = TraceBuffer::new(0, 4);
+        for i in 0..10u64 {
+            buf.record(EventKind::Custom, i, 0);
+        }
+        let evs = buf.events_in_order();
+        assert_eq!(evs.len(), 4);
+        assert_eq!(buf.recorded(), 10);
+        assert_eq!(
+            evs.iter().map(|e| e.a).collect::<Vec<_>>(),
+            vec![6, 7, 8, 9]
+        );
+    }
+
+    #[test]
+    fn zero_capacity_is_inert() {
+        let mut buf = TraceBuffer::new(0, 0);
+        buf.record(EventKind::Step, 1, 2);
+        assert_eq!(buf.recorded(), 0);
+        assert!(buf.events_in_order().is_empty());
+    }
+
+    #[test]
+    fn macro_compiles_both_ways() {
+        let mut buf = TraceBuffer::new(0, 2);
+        crate::trace_event!(buf, EventKind::Progress, 7, 0);
+        // With the feature off the call must not have recorded anything;
+        // with it on, exactly one event lands. Both are valid states.
+        assert!(buf.recorded() <= 1);
+        #[cfg(feature = "trace")]
+        assert_eq!(buf.recorded(), 1);
+    }
+}

@@ -7,7 +7,10 @@
 //! walk over Δ factor objects. See EXPERIMENTS.md §Perf for the measured
 //! speedup.
 
+use std::sync::Arc;
+
 use crate::graph::models::DenseModel;
+use crate::metrics::SamplerMetrics;
 use crate::rng::{sample_categorical_from_energies, Rng};
 
 use super::{Sampler, StepStats};
@@ -16,6 +19,7 @@ use super::{Sampler, StepStats};
 pub struct DenseGibbsSampler<'m> {
     model: &'m DenseModel,
     eps: Vec<f64>,
+    metrics: Option<Arc<SamplerMetrics>>,
 }
 
 impl<'m> DenseGibbsSampler<'m> {
@@ -24,6 +28,7 @@ impl<'m> DenseGibbsSampler<'m> {
         Self {
             model,
             eps: vec![0.0; model.graph.domain_size() as usize],
+            metrics: None,
         }
     }
 }
@@ -35,6 +40,10 @@ impl Sampler for DenseGibbsSampler<'_> {
         self.model.cond_energies_row(state, i, &mut self.eps);
         let v = sample_categorical_from_energies(rng, &self.eps);
         state[i] = v as u16;
+        if let Some(m) = &self.metrics {
+            m.steps.add(1);
+            m.factor_evals.add((n - 1) as u64);
+        }
         StepStats {
             variable: i,
             factor_evals: (n - 1) as u64,
@@ -44,6 +53,10 @@ impl Sampler for DenseGibbsSampler<'_> {
 
     fn name(&self) -> &'static str {
         "dense-gibbs"
+    }
+
+    fn attach_metrics(&mut self, m: Arc<SamplerMetrics>) {
+        self.metrics = Some(m);
     }
 }
 

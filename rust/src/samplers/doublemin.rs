@@ -9,7 +9,10 @@
 //! exp(−4δ) of MGPMH (Theorem 6). Total cost O(DL² + Ψ²): independent of
 //! both the degree Δ (acceptance) and D·Δ (proposal).
 
+use std::sync::Arc;
+
 use crate::graph::FactorGraph;
+use crate::metrics::SamplerMetrics;
 use crate::rng::{sample_categorical_from_energies, Rng, SparsePoissonSampler};
 
 use super::{estimator::PoissonEnergyEstimator, Sampler, StepStats};
@@ -28,6 +31,7 @@ pub struct DoubleMinGibbsSampler<'g> {
     cached_xi: Option<f64>,
     accepted: u64,
     proposed: u64,
+    metrics: Option<Arc<SamplerMetrics>>,
 }
 
 impl<'g> DoubleMinGibbsSampler<'g> {
@@ -72,6 +76,7 @@ impl<'g> DoubleMinGibbsSampler<'g> {
             cached_xi: None,
             accepted: 0,
             proposed: 0,
+            metrics: None,
         }
     }
 
@@ -110,6 +115,9 @@ impl Sampler for DoubleMinGibbsSampler<'_> {
             None => {
                 let (x, ev) = self.estimator.estimate(g, state, rng);
                 evals += ev;
+                if let Some(m) = &self.metrics {
+                    m.minibatch_global.record(ev);
+                }
                 x
             }
         };
@@ -133,7 +141,8 @@ impl Sampler for DoubleMinGibbsSampler<'_> {
             self.eps[u] = sum;
         }
         state[i] = saved;
-        evals += (d * batch.len()) as u64;
+        let batch_size = batch.len() as u64;
+        evals += d as u64 * batch_size;
 
         let v = sample_categorical_from_energies(rng, &self.eps);
         self.proposed += 1;
@@ -154,6 +163,15 @@ impl Sampler for DoubleMinGibbsSampler<'_> {
         } else {
             self.cached_xi = Some(xi_x);
         }
+        if let Some(m) = &self.metrics {
+            m.steps.add(1);
+            m.factor_evals.add(evals);
+            m.minibatch_local.record(batch_size);
+            m.minibatch_global.record(ev);
+            m.proposals.add(1);
+            m.accepts.add(accept as u64);
+            m.estimator_energy.set(self.cached_xi.unwrap_or(0.0));
+        }
         StepStats {
             variable: i,
             factor_evals: evals,
@@ -167,6 +185,12 @@ impl Sampler for DoubleMinGibbsSampler<'_> {
 
     fn reset(&mut self, _state: &[u16], _rng: &mut dyn Rng) {
         self.cached_xi = None;
+    }
+
+    fn attach_metrics(&mut self, m: Arc<SamplerMetrics>) {
+        m.lambda.set(self.lambda1);
+        m.lambda2.set(self.estimator.lambda());
+        self.metrics = Some(m);
     }
 }
 

@@ -1,6 +1,9 @@
 //! Algorithm 1: vanilla Gibbs sampling — the exact baseline.
 
+use std::sync::Arc;
+
 use crate::graph::FactorGraph;
+use crate::metrics::SamplerMetrics;
 use crate::rng::{sample_categorical_from_energies, Rng};
 
 use super::{EnergyPath, Sampler, StepStats};
@@ -24,6 +27,7 @@ pub struct GibbsSampler<'g> {
     scan: ScanOrder,
     cursor: usize,
     eps: Vec<f64>,
+    metrics: Option<Arc<SamplerMetrics>>,
 }
 
 impl<'g> GibbsSampler<'g> {
@@ -42,6 +46,7 @@ impl<'g> GibbsSampler<'g> {
             scan,
             cursor: 0,
             eps: vec![0.0; graph.domain_size() as usize],
+            metrics: None,
         }
     }
 
@@ -80,6 +85,10 @@ impl Sampler for GibbsSampler<'_> {
         };
         let v = sample_categorical_from_energies(rng, &self.eps);
         state[i] = v as u16;
+        if let Some(m) = &self.metrics {
+            m.steps.add(1);
+            m.factor_evals.add(evals);
+        }
         StepStats {
             variable: i,
             factor_evals: evals,
@@ -89,6 +98,10 @@ impl Sampler for GibbsSampler<'_> {
 
     fn name(&self) -> &'static str {
         "gibbs"
+    }
+
+    fn attach_metrics(&mut self, m: Arc<SamplerMetrics>) {
+        self.metrics = Some(m);
     }
 }
 

@@ -6,7 +6,10 @@
 //! stresses) there are *no guarantees* on what it converges to. It is the
 //! proposal inside MGPMH and the empirical subject of Figure 2(a).
 
+use std::sync::Arc;
+
 use crate::graph::FactorGraph;
+use crate::metrics::SamplerMetrics;
 use crate::rng::{sample_categorical_from_energies, Rng};
 
 use super::{Sampler, StepStats};
@@ -17,6 +20,7 @@ pub struct LocalMinibatchSampler<'g> {
     batch: usize,
     eps: Vec<f64>,
     picked: Vec<u32>,
+    metrics: Option<Arc<SamplerMetrics>>,
 }
 
 impl<'g> LocalMinibatchSampler<'g> {
@@ -29,6 +33,7 @@ impl<'g> LocalMinibatchSampler<'g> {
             batch,
             eps: vec![0.0; graph.domain_size() as usize],
             picked: Vec::with_capacity(batch),
+            metrics: None,
         }
     }
 
@@ -81,6 +86,11 @@ impl Sampler for LocalMinibatchSampler<'_> {
 
         let v = sample_categorical_from_energies(rng, &self.eps);
         state[i] = v as u16;
+        if let Some(m) = &self.metrics {
+            m.steps.add(1);
+            m.factor_evals.add((b * d) as u64);
+            m.minibatch_local.record(b as u64);
+        }
         StepStats {
             variable: i,
             factor_evals: (b * d) as u64,
@@ -90,6 +100,11 @@ impl Sampler for LocalMinibatchSampler<'_> {
 
     fn name(&self) -> &'static str {
         "local-minibatch"
+    }
+
+    fn attach_metrics(&mut self, m: Arc<SamplerMetrics>) {
+        m.lambda.set(self.batch as f64);
+        self.metrics = Some(m);
     }
 }
 

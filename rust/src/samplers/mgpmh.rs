@@ -7,7 +7,10 @@
 //! (Theorem 4), so λ = Θ(L²) gives an O(1) convergence penalty at
 //! per-iteration cost O(DL² + Δ).
 
+use std::sync::Arc;
+
 use crate::graph::FactorGraph;
+use crate::metrics::SamplerMetrics;
 use crate::rng::{sample_categorical_from_energies, Rng, SparsePoissonSampler};
 
 use super::{Sampler, StepStats};
@@ -26,6 +29,7 @@ pub struct MgpmhSampler<'g> {
     exact: Vec<f64>,
     accepted: u64,
     proposed: u64,
+    metrics: Option<Arc<SamplerMetrics>>,
 }
 
 impl<'g> MgpmhSampler<'g> {
@@ -68,6 +72,7 @@ impl<'g> MgpmhSampler<'g> {
             exact: vec![0.0; graph.domain_size() as usize],
             accepted: 0,
             proposed: 0,
+            metrics: None,
         }
     }
 
@@ -115,7 +120,8 @@ impl Sampler for MgpmhSampler<'_> {
             self.eps[u] = sum;
         }
         state[i] = saved;
-        evals += (d * batch.len()) as u64;
+        let batch_size = batch.len() as u64;
+        evals += d as u64 * batch_size;
 
         // Propose v ~ ψ(v) ∝ exp(ε_v).
         let v = sample_categorical_from_energies(rng, &self.eps);
@@ -123,6 +129,13 @@ impl Sampler for MgpmhSampler<'_> {
         if v == cur {
             // y = x: a = 1 (numerator and denominator coincide).
             self.accepted += 1;
+            if let Some(m) = &self.metrics {
+                m.steps.add(1);
+                m.factor_evals.add(evals);
+                m.minibatch_local.record(batch_size);
+                m.proposals.add(1);
+                m.accepts.add(1);
+            }
             return StepStats {
                 variable: i,
                 factor_evals: evals,
@@ -145,6 +158,13 @@ impl Sampler for MgpmhSampler<'_> {
             state[i] = v as u16;
             self.accepted += 1;
         }
+        if let Some(m) = &self.metrics {
+            m.steps.add(1);
+            m.factor_evals.add(evals);
+            m.minibatch_local.record(batch_size);
+            m.proposals.add(1);
+            m.accepts.add(accept as u64);
+        }
         StepStats {
             variable: i,
             factor_evals: evals,
@@ -154,6 +174,11 @@ impl Sampler for MgpmhSampler<'_> {
 
     fn name(&self) -> &'static str {
         "mgpmh"
+    }
+
+    fn attach_metrics(&mut self, m: Arc<SamplerMetrics>) {
+        m.lambda.set(self.lambda);
+        self.metrics = Some(m);
     }
 }
 

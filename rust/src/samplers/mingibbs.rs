@@ -8,7 +8,10 @@
 //! Lemma 1); with λ = Θ(Ψ²) the spectral gap is within an O(1) factor of
 //! vanilla Gibbs (Theorem 2 + Lemma 2).
 
+use std::sync::Arc;
+
 use crate::graph::FactorGraph;
+use crate::metrics::SamplerMetrics;
 use crate::rng::{sample_categorical_from_energies, Rng};
 
 use super::{
@@ -23,6 +26,7 @@ pub struct MinGibbsSampler<'g> {
     /// Cached ε component of the augmented state (x, ε).
     cached_energy: Option<f64>,
     eps: Vec<f64>,
+    metrics: Option<Arc<SamplerMetrics>>,
 }
 
 impl<'g> MinGibbsSampler<'g> {
@@ -34,6 +38,7 @@ impl<'g> MinGibbsSampler<'g> {
             estimator: PoissonEnergyEstimator::new(graph, lambda),
             cached_energy: None,
             eps: vec![0.0; graph.domain_size() as usize],
+            metrics: None,
         }
     }
 
@@ -62,6 +67,9 @@ impl Sampler for MinGibbsSampler<'_> {
             None => {
                 let (e, ev) = self.estimator.estimate(g, state, rng);
                 evals += ev;
+                if let Some(m) = &self.metrics {
+                    m.minibatch_global.record(ev);
+                }
                 e
             }
         };
@@ -75,6 +83,9 @@ impl Sampler for MinGibbsSampler<'_> {
             state[i] = u as u16;
             let (e, ev) = self.estimator.estimate(g, state, rng);
             evals += ev;
+            if let Some(m) = &self.metrics {
+                m.minibatch_global.record(ev);
+            }
             self.eps[u] = e;
         }
         state[i] = cur as u16;
@@ -82,6 +93,11 @@ impl Sampler for MinGibbsSampler<'_> {
         let v = sample_categorical_from_energies(rng, &self.eps);
         state[i] = v as u16;
         self.cached_energy = Some(self.eps[v]);
+        if let Some(m) = &self.metrics {
+            m.steps.add(1);
+            m.factor_evals.add(evals);
+            m.estimator_energy.set(self.eps[v]);
+        }
         StepStats {
             variable: i,
             factor_evals: evals,
@@ -96,6 +112,11 @@ impl Sampler for MinGibbsSampler<'_> {
     fn reset(&mut self, _state: &[u16], _rng: &mut dyn Rng) {
         self.cached_energy = None;
     }
+
+    fn attach_metrics(&mut self, m: Arc<SamplerMetrics>) {
+        m.lambda.set(self.estimator.lambda());
+        self.metrics = Some(m);
+    }
 }
 
 /// MIN-Gibbs with the *naive* fixed-batch estimator — the ablation
@@ -108,6 +129,7 @@ pub struct NaiveMinGibbsSampler<'g> {
     estimator: FixedBatchEstimator,
     cached_energy: Option<f64>,
     eps: Vec<f64>,
+    metrics: Option<Arc<SamplerMetrics>>,
 }
 
 impl<'g> NaiveMinGibbsSampler<'g> {
@@ -119,6 +141,7 @@ impl<'g> NaiveMinGibbsSampler<'g> {
             estimator: FixedBatchEstimator::new(batch),
             cached_energy: None,
             eps: vec![0.0; graph.domain_size() as usize],
+            metrics: None,
         }
     }
 }
@@ -152,6 +175,11 @@ impl Sampler for NaiveMinGibbsSampler<'_> {
         let v = sample_categorical_from_energies(rng, &self.eps);
         state[i] = v as u16;
         self.cached_energy = Some(self.eps[v]);
+        if let Some(m) = &self.metrics {
+            m.steps.add(1);
+            m.factor_evals.add(evals);
+            m.estimator_energy.set(self.eps[v]);
+        }
         StepStats {
             variable: i,
             factor_evals: evals,
@@ -165,6 +193,10 @@ impl Sampler for NaiveMinGibbsSampler<'_> {
 
     fn reset(&mut self, _state: &[u16], _rng: &mut dyn Rng) {
         self.cached_energy = None;
+    }
+
+    fn attach_metrics(&mut self, m: Arc<SamplerMetrics>) {
+        self.metrics = Some(m);
     }
 }
 

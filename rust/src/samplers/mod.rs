@@ -29,6 +29,9 @@ pub use local::LocalMinibatchSampler;
 pub use mgpmh::MgpmhSampler;
 pub use mingibbs::{MinGibbsSampler, NaiveMinGibbsSampler};
 
+use std::sync::Arc;
+
+use crate::metrics::SamplerMetrics;
 use crate::rng::Rng;
 
 /// Per-step accounting: what happened and what it cost.
@@ -54,6 +57,13 @@ pub trait Sampler {
     /// Reset sampler-internal caches (e.g. MIN-Gibbs's cached energy)
     /// after an external change to the state. Default: no caches.
     fn reset(&mut self, _state: &[u16], _rng: &mut dyn Rng) {}
+
+    /// Attach shared instrumentation. Samplers that support it report
+    /// steps, factor evals, minibatch sizes, MH accept/propose counts,
+    /// and estimator statistics through the handles; the default ignores
+    /// the attachment. An unattached sampler pays only an `Option` branch
+    /// per step.
+    fn attach_metrics(&mut self, _m: Arc<SamplerMetrics>) {}
 }
 
 /// Which conditional-energy evaluation path Gibbs-type samplers use.

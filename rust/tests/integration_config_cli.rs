@@ -132,6 +132,9 @@ fn checkpoint_resume_matches_state() {
         iter: 1000,
         seed: 5,
         chain: 0,
+        factor_evals: 3000,
+        accepted: 0,
+        proposed: 0,
         state: state.clone(),
     };
     let path = dir.join("chain0.ckpt");

@@ -1,0 +1,178 @@
+//! Integration: the observability stack end to end — sampler counters
+//! through the coordinator's metrics hub, checkpoint/resume counter
+//! continuity, and the CLI's `--metrics-out` / `metrics` surfaces.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use mbgibbs::bench::workload::SamplerSpec;
+use mbgibbs::cli;
+use mbgibbs::coordinator::{run_chains_with_metrics, RunSpec};
+use mbgibbs::graph::models;
+use mbgibbs::metrics::{expose, MetricsHub};
+use mbgibbs::samplers::EnergyPath;
+
+fn tmpdir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("mbgibbs_im_{name}_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Satellite regression: on a complete graph every variable has degree
+/// n − 1, so specialized plain Gibbs costs exactly (n − 1) factor
+/// evaluations per iteration — in both the chain report and the hub.
+#[test]
+fn gibbs_factor_evals_are_degree_times_iters() {
+    let (n, iters) = (12usize, 2_000u64);
+    let g = models::table1_workload(n, 3, 2.0); // complete graph, Δ = n − 1
+    let mut run = RunSpec::new(SamplerSpec::Gibbs(EnergyPath::Specialized));
+    run.iters = iters;
+    run.chains = 1;
+    run.seed = 17;
+    run.record_every = 500;
+    let hub = Arc::new(MetricsHub::new());
+    let report = run_chains_with_metrics(&g, &run, &hub);
+
+    let want = (n as u64 - 1) * iters;
+    assert_eq!(report.chains[0].factor_evals, want);
+    let snap = hub.snapshot();
+    assert_eq!(
+        snap.counter("sampler_factor_evals_total{chain=\"0\",sampler=\"gibbs\"}"),
+        Some(want)
+    );
+    assert_eq!(snap.counter_family_sum("sampler_steps_total"), iters);
+}
+
+/// Checkpoint write → resume round trip: the resumed run CONTINUES the
+/// metric counters from the saved totals rather than restarting at zero.
+#[test]
+fn resume_round_trip_continues_counters() {
+    let dir = tmpdir("resume");
+    let (n, d) = (10usize, 3u16);
+    let g = models::table1_workload(n, d, 2.0);
+
+    let mut run = RunSpec::new(SamplerSpec::Gibbs(EnergyPath::Specialized));
+    run.chains = 1;
+    run.seed = 23;
+    run.record_every = 100;
+    run.checkpoint_dir = Some(dir.clone());
+    run.checkpoint_every = 200;
+
+    // First leg: 400 iterations, leaving a checkpoint at iteration 400.
+    run.iters = 400;
+    let hub1 = Arc::new(MetricsHub::new());
+    run_chains_with_metrics(&g, &run, &hub1);
+    assert!(dir.join("chain0.ckpt").exists());
+
+    // Second leg: resume and extend to 1000 total iterations.
+    run.iters = 1_000;
+    run.resume = true;
+    let hub2 = Arc::new(MetricsHub::new());
+    let report = run_chains_with_metrics(&g, &run, &hub2);
+
+    // Only 600 steps executed in this process...
+    assert_eq!(report.chains[0].steps_executed, 600);
+    // ...but the counters cover the whole logical run.
+    let snap = hub2.snapshot();
+    assert_eq!(snap.counter_family_sum("sampler_steps_total"), 1_000);
+    assert_eq!(
+        snap.counter_family_sum("sampler_factor_evals_total"),
+        (n as u64 - 1) * 1_000
+    );
+    assert_eq!(report.chains[0].factor_evals, (n as u64 - 1) * 1_000);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// CLI end to end: `sample --metrics-out` writes a parseable JSON
+/// snapshot plus a Prometheus sibling, and `metrics --snapshot` pretty
+/// prints it back.
+#[test]
+fn cli_metrics_out_and_metrics_subcommand() {
+    let dir = tmpdir("cli");
+    let cfg_path = dir.join("exp.toml");
+    let out_dir = dir.join("out");
+    let snap_path = dir.join("metrics.json");
+    std::fs::write(
+        &cfg_path,
+        format!(
+            r#"
+[model]
+type = "potts_random"
+grid_n = 4
+d = 3
+degree = 4
+seed = 7
+
+[sampler]
+algorithm = "min-gibbs"
+lambda = 60.0
+
+[run]
+iters = 3000
+chains = 1
+seed = 5
+record_every = 1000
+output_dir = "{}"
+"#,
+            out_dir.display()
+        ),
+    )
+    .unwrap();
+    cli::run(vec![
+        "sample".to_string(),
+        "--config".to_string(),
+        cfg_path.to_str().unwrap().to_string(),
+        "--metrics-out".to_string(),
+        snap_path.to_str().unwrap().to_string(),
+    ])
+    .unwrap();
+
+    // JSON snapshot parses back and carries the per-sampler counters,
+    // the estimator's minibatch-size histogram, and step latencies.
+    let text = std::fs::read_to_string(&snap_path).unwrap();
+    let snap = expose::from_json(&text).unwrap();
+    assert!(snap.counter_family_sum("sampler_steps_total") == 3_000);
+    assert!(snap.counter_family_sum("sampler_factor_evals_total") > 0);
+    let mb = snap
+        .histogram("sampler_minibatch_global_size{chain=\"0\",sampler=\"min-gibbs\"}")
+        .expect("minibatch histogram present");
+    assert!(mb.count > 0);
+    let lat = snap
+        .histogram("chain_step_latency_ns{chain=\"0\"}")
+        .expect("latency histogram present");
+    assert!(lat.count > 0);
+    assert!(lat.p50 <= lat.p95 && lat.p95 <= lat.p99);
+
+    // Prometheus sibling has the right shape.
+    let prom = std::fs::read_to_string(snap_path.with_extension("prom")).unwrap();
+    assert!(prom.contains("# TYPE sampler_steps_total counter"));
+    assert!(prom.contains("chain_step_latency_ns_bucket"));
+    assert!(prom.contains("le=\"+Inf\""));
+
+    // The pretty-printer runs on the saved file.
+    cli::run(vec![
+        "metrics".to_string(),
+        "--snapshot".to_string(),
+        snap_path.to_str().unwrap().to_string(),
+    ])
+    .unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// `--metrics-every` without `--metrics-out` is rejected up front.
+#[test]
+fn metrics_every_requires_metrics_out() {
+    let dir = tmpdir("flushargs");
+    let cfg_path = dir.join("exp.toml");
+    std::fs::write(&cfg_path, "[run]\niters = 10\n").unwrap();
+    let err = cli::run(vec![
+        "sample".to_string(),
+        "--config".to_string(),
+        cfg_path.to_str().unwrap().to_string(),
+        "--metrics-every".to_string(),
+        "1".to_string(),
+    ])
+    .unwrap_err();
+    assert!(err.to_string().contains("--metrics-out"));
+    std::fs::remove_dir_all(&dir).ok();
+}

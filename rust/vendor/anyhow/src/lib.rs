@@ -1,0 +1,161 @@
+//! Minimal API-compatible subset of the `anyhow` crate for the offline
+//! dependency set. Covers exactly what this workspace uses: [`Error`],
+//! [`Result`], [`anyhow!`], [`bail!`], and the [`Context`] extension
+//! trait for `Result` and `Option`.
+//!
+//! Like the real crate, [`Error`] deliberately does NOT implement
+//! `std::error::Error` — that is what allows the blanket
+//! `From<E: std::error::Error>` conversion powering `?`.
+
+use std::fmt;
+
+/// A dynamic error with a chain of context messages (outermost first).
+pub struct Error {
+    /// Context chain: `chain[0]` is the outermost message.
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Create from a single message.
+    pub fn msg<M: fmt::Display>(m: M) -> Self {
+        Self {
+            chain: vec![m.to_string()],
+        }
+    }
+
+    /// Wrap with an outer context message.
+    pub fn context<C: fmt::Display>(mut self, c: C) -> Self {
+        self.chain.insert(0, c.to_string());
+        self
+    }
+
+    /// The outermost message.
+    pub fn root_message(&self) -> &str {
+        &self.chain[0]
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}` prints the whole context chain, like real anyhow.
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.join(": "))
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        // Preserve the source chain as context lines.
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Self { chain }
+    }
+}
+
+/// Alias matching `anyhow::Result`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($msg:expr $(,)?) => {
+        $crate::Error::msg($msg)
+    };
+}
+
+/// Return early with an [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Extension trait adding `.context(...)` / `.with_context(...)`.
+pub trait Context<T> {
+    /// Attach a context message to the error branch.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+
+    /// Attach a lazily evaluated context message to the error branch.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse_int(s: &str) -> Result<u64> {
+        Ok(s.parse::<u64>()?)
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        assert_eq!(parse_int("42").unwrap(), 42);
+        assert!(parse_int("nope").is_err());
+    }
+
+    #[test]
+    fn context_chains_outermost_first() {
+        let e: Error = parse_int("x").context("reading config").unwrap_err();
+        let s = format!("{e:#}");
+        assert!(s.starts_with("reading config: "), "{s}");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("missing field").unwrap_err();
+        assert_eq!(e.to_string(), "missing field");
+    }
+
+    #[test]
+    fn bail_and_anyhow_macros() {
+        fn f(flag: bool) -> Result<()> {
+            if flag {
+                bail!("flag was {flag:?}");
+            }
+            Err(anyhow!("fell through {}", 7))
+        }
+        assert!(f(true).unwrap_err().to_string().contains("true"));
+        assert!(f(false).unwrap_err().to_string().contains('7'));
+    }
+}
