@@ -25,17 +25,28 @@ fn main() -> anyhow::Result<()> {
     let out = Path::new("bench_out/end_to_end");
 
     // ---- Stage 1: AOT artifacts → PJRT runtime → parity with native ----
+    // Optional: the compiled kernels only exist after `make artifacts`,
+    // and stages 2–3 exercise the pure-Rust path regardless, so a missing
+    // artifact store degrades to a skip instead of an abort (this keeps
+    // the example runnable in CI, which has no Python toolchain).
     println!("=== stage 1: artifact load + L1/L2/L3 parity ===");
-    let store = ArtifactStore::open(Path::new("artifacts"))?;
-    println!("artifacts: {:?}", store.names());
-    for (name, model) in [
-        ("potts", models::paper_potts()),
-        ("ising", models::paper_ising()),
-    ] {
-        let backend = XlaDenseBackend::new(&store, &model)?;
-        let worst = parity_report(&backend, &model, 2, 3)?;
-        println!("  {name}: max |xla − native| = {worst:.2e} (float32 tolerance)");
-        anyhow::ensure!(worst < 2e-3, "parity check failed for {name}");
+    match ArtifactStore::open(Path::new("artifacts")) {
+        Ok(store) => {
+            println!("artifacts: {:?}", store.names());
+            for (name, model) in [
+                ("potts", models::paper_potts()),
+                ("ising", models::paper_ising()),
+            ] {
+                let backend = XlaDenseBackend::new(&store, &model)?;
+                let worst = parity_report(&backend, &model, 2, 3)?;
+                println!("  {name}: max |xla − native| = {worst:.2e} (float32 tolerance)");
+                anyhow::ensure!(worst < 2e-3, "parity check failed for {name}");
+            }
+        }
+        Err(e) => {
+            println!("  skipping: no artifact store ({e:#})");
+            println!("  run `make artifacts` first to exercise the XLA parity check");
+        }
     }
 
     // ---- Stage 2+3: the paper's experiments through the coordinator ----

@@ -42,9 +42,11 @@ fn main() {
         "sampler", "evals/iter", "steps/sec", "l2 error"
     );
     for spec in lineup {
-        let mut run = RunSpec::new(spec);
-        run.iters = iters;
-        run.record_every = iters / 10;
+        let run = RunSpec::builder(spec)
+            .iters(iters)
+            .record_every(iters / 10)
+            .build()
+            .expect("valid run spec");
         let report = run_chains(&model.graph, &run);
         println!(
             "{:<36} {:>12.1} {:>14.0} {:>12.5}",

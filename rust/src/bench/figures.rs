@@ -62,10 +62,12 @@ pub fn run_figure(
         ],
     );
     for spec in specs {
-        let mut run = RunSpec::new(*spec);
-        run.iters = params.iters;
-        run.record_every = params.record_every;
-        run.seed = params.seed;
+        let run = RunSpec::builder(*spec)
+            .iters(params.iters)
+            .record_every(params.record_every)
+            .seed(params.seed)
+            .build()
+            .expect("figure run spec is statically valid");
         let report = run_chains(g, &run);
         let chain = &report.chains[0];
         summary.push_row(vec![

@@ -20,6 +20,11 @@
 //! `--metrics-every SECS` additionally flushes both files periodically
 //! during the run, `--progress N` prints per-chain progress lines, and
 //! `--resume` continues from `output_dir/checkpoints/`.
+//!
+//! Adaptive control flags for `sample`: `--adapt [POLICY]` turns on the
+//! per-chain controller (policies: `target-accept`, `eval-budget`),
+//! `--target-accept X` sets the acceptance target, and `--adapt-every N`
+//! the review cadence. See `docs/ADAPTIVE.md`.
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
@@ -38,6 +43,7 @@ use crate::bench::report::{fmt_seconds, Table};
 use crate::bench::timer::{bench_iter, BenchConfig};
 use crate::bench::workload;
 use crate::config::ExperimentConfig;
+use crate::control::ControlPolicy;
 use crate::coordinator::{run_chains_with_metrics, RunSpec};
 use crate::graph::models;
 use crate::metrics::{expose, MetricsHub, Snapshot, Unit};
@@ -91,6 +97,17 @@ impl Args {
             Some(v) => v
                 .parse::<u64>()
                 .with_context(|| format!("--{key} must be an integer, got {v:?}")),
+        }
+    }
+
+    /// Float option; `None` when absent.
+    pub fn opt_f64(&self, key: &str) -> Result<Option<f64>> {
+        match self.options.get(key) {
+            None => Ok(None),
+            Some(v) => v
+                .parse::<f64>()
+                .map(Some)
+                .with_context(|| format!("--{key} must be a number, got {v:?}")),
         }
     }
 
@@ -181,8 +198,37 @@ fn print_help() {
          \x20 --metrics-out PATH     write end-of-run metrics as JSON (+ PATH.prom)\n\
          \x20 --metrics-every SECS   also flush the metrics files periodically\n\
          \x20 --progress N           per-chain progress line every N iterations\n\
-         \x20 --resume               resume chains from output_dir/checkpoints/"
+         \x20 --resume               resume chains from output_dir/checkpoints/\n\n\
+         SAMPLE ADAPTIVE CONTROL:\n\
+         \x20 --adapt [POLICY]       auto-tune λ/B from live metrics; POLICY is\n\
+         \x20                        target-accept (default) | eval-budget | off\n\
+         \x20 --target-accept X      acceptance target in (0,1) (implies --adapt)\n\
+         \x20 --adapt-every N        controller review cadence in iterations"
     );
+}
+
+/// Resolve the control policy: the config's `[control]` section,
+/// overridden by `--adapt [POLICY]`, `--target-accept X` (which implies
+/// target-acceptance when no policy is active) and `--adapt-every N`.
+fn control_policy_from(args: &Args, cfg: &ExperimentConfig) -> Result<ControlPolicy> {
+    let mut policy = cfg.control.to_policy()?;
+    if let Some(name) = args.options.get("adapt") {
+        policy = ControlPolicy::from_name(name)?;
+    } else if args.has_flag("adapt") && policy.is_off() {
+        policy = ControlPolicy::target_acceptance(crate::control::DEFAULT_TARGET_ACCEPT);
+    }
+    if let Some(target) = args.opt_f64("target-accept")? {
+        policy = if policy.is_off() {
+            ControlPolicy::target_acceptance(target)
+        } else {
+            policy.with_target(target)
+        };
+    }
+    let every = args.opt_u64("adapt-every", 0)?;
+    if every > 0 {
+        policy = policy.with_adapt_every(every);
+    }
+    Ok(policy)
 }
 
 fn cmd_sample(args: &Args) -> Result<()> {
@@ -193,17 +239,21 @@ fn cmd_sample(args: &Args) -> Result<()> {
     let cfg = ExperimentConfig::load(Path::new(config_path))?;
     let (graph, _dense) = cfg.build_model()?;
     let spec = cfg.sampler_spec(&graph)?;
-    let mut run = RunSpec::new(spec);
-    run.iters = args.opt_u64("iters", cfg.run.iters)?;
-    run.chains = cfg.run.chains;
-    run.seed = args.opt_u64("seed", cfg.run.seed)?;
-    run.record_every = cfg.run.record_every;
-    run.progress_every = args.opt_u64("progress", cfg.run.progress_every)?;
-    run.resume = args.has_flag("resume");
-    if cfg.run.checkpoint_every > 0 || run.resume {
-        run.checkpoint_every = cfg.run.checkpoint_every;
-        run.checkpoint_dir = Some(cfg.run.output_dir.join("checkpoints"));
+    let resume = args.has_flag("resume");
+    let mut builder = RunSpec::builder(spec)
+        .iters(args.opt_u64("iters", cfg.run.iters)?)
+        .chains(cfg.run.chains)
+        .seed(args.opt_u64("seed", cfg.run.seed)?)
+        .record_every(cfg.run.record_every)
+        .progress_every(args.opt_u64("progress", cfg.run.progress_every)?)
+        .resume(resume)
+        .control(control_policy_from(args, &cfg)?);
+    if cfg.run.checkpoint_every > 0 || resume {
+        builder = builder
+            .checkpoint_every(cfg.run.checkpoint_every)
+            .checkpoint_dir(cfg.run.output_dir.join("checkpoints"));
     }
+    let run = builder.build()?;
 
     let metrics_out = args.options.get("metrics-out").map(PathBuf::from);
     let metrics_every = args.opt_u64("metrics-every", 0)?;
@@ -221,6 +271,9 @@ fn cmd_sample(args: &Args) -> Result<()> {
         graph.stats().psi,
     );
     println!("sampler: {}", spec.label(&graph));
+    if !run.control.is_off() {
+        println!("control: {}", run.control);
+    }
 
     // Background flusher: periodically snapshot the hub and rewrite the
     // metrics files so long runs can be watched from outside.
@@ -551,6 +604,47 @@ mod tests {
     fn bad_int_reported() {
         let a = parse(&["fig1", "--iters", "lots"]);
         assert!(a.opt_u64("iters", 0).is_err());
+    }
+
+    #[test]
+    fn opt_f64_parses_and_reports() {
+        let a = parse(&["sample", "--target-accept", "0.65"]);
+        assert_eq!(a.opt_f64("target-accept").unwrap(), Some(0.65));
+        assert_eq!(a.opt_f64("absent").unwrap(), None);
+        let bad = parse(&["sample", "--target-accept", "most"]);
+        assert!(bad.opt_f64("target-accept").is_err());
+    }
+
+    fn empty_cfg() -> ExperimentConfig {
+        ExperimentConfig::from_doc(&crate::config::TomlDoc::parse("").unwrap()).unwrap()
+    }
+
+    #[test]
+    fn adapt_flags_resolve_policies() {
+        // Config off + no flags → off.
+        let a = parse(&["sample"]);
+        assert!(control_policy_from(&a, &empty_cfg()).unwrap().is_off());
+        // Bare --adapt → target-acceptance defaults.
+        let a = parse(&["sample", "--adapt", "--iters", "10"]);
+        assert!(matches!(
+            control_policy_from(&a, &empty_cfg()).unwrap(),
+            ControlPolicy::TargetAcceptance { .. }
+        ));
+        // Valued --adapt picks the named policy.
+        let a = parse(&["sample", "--adapt", "eval-budget", "--adapt-every", "250"]);
+        match control_policy_from(&a, &empty_cfg()).unwrap() {
+            ControlPolicy::EvalBudget { adapt_every } => assert_eq!(adapt_every, 250),
+            other => panic!("wrong policy {other:?}"),
+        }
+        // --target-accept alone implies the target policy.
+        let a = parse(&["sample", "--target-accept", "0.8"]);
+        match control_policy_from(&a, &empty_cfg()).unwrap() {
+            ControlPolicy::TargetAcceptance { target, .. } => assert_eq!(target, 0.8),
+            other => panic!("wrong policy {other:?}"),
+        }
+        // Unknown policy name is an error.
+        let a = parse(&["sample", "--adapt", "nope"]);
+        assert!(control_policy_from(&a, &empty_cfg()).is_err());
     }
 
     #[test]

@@ -10,5 +10,5 @@ pub mod schema;
 pub mod toml;
 
 pub use json::JsonValue;
-pub use schema::{ExperimentConfig, ModelConfig, RunConfig, SamplerConfig};
+pub use schema::{ControlConfig, ExperimentConfig, ModelConfig, RunConfig, SamplerConfig};
 pub use toml::{TomlDoc, TomlValue};

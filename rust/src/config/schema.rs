@@ -20,6 +20,12 @@
 //! seed = 42
 //! record_every = 1000
 //! output_dir = "out"
+//!
+//! [control]
+//! policy = "target-accept"   # off | target-accept | eval-budget
+//! target_accept = 0.7
+//! band = 0.1
+//! adapt_every = 1000
 //! ```
 
 use std::path::{Path, PathBuf};
@@ -27,6 +33,7 @@ use std::path::{Path, PathBuf};
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::bench::workload::SamplerSpec;
+use crate::control::ControlPolicy;
 use crate::graph::models::{self, DenseModel};
 use crate::graph::FactorGraph;
 use crate::samplers::EnergyPath;
@@ -102,6 +109,49 @@ impl Default for RunConfig {
     }
 }
 
+/// Control section: the adaptive-controller policy.
+#[derive(Clone, Debug)]
+pub struct ControlConfig {
+    /// Policy name: `off` | `target-accept` | `eval-budget`.
+    pub policy: String,
+    /// Acceptance-rate target (target-accept policy).
+    pub target_accept: f64,
+    /// Half-width of the no-adjustment band around the target.
+    pub band: f64,
+    /// Review cadence in iterations.
+    pub adapt_every: u64,
+}
+
+impl Default for ControlConfig {
+    fn default() -> Self {
+        Self {
+            policy: "off".to_string(),
+            target_accept: crate::control::DEFAULT_TARGET_ACCEPT,
+            band: crate::control::DEFAULT_BAND,
+            adapt_every: crate::control::DEFAULT_ADAPT_EVERY,
+        }
+    }
+}
+
+impl ControlConfig {
+    /// Resolve to a validated [`ControlPolicy`].
+    pub fn to_policy(&self) -> Result<ControlPolicy> {
+        let policy = match ControlPolicy::from_name(&self.policy)? {
+            ControlPolicy::Off => ControlPolicy::Off,
+            ControlPolicy::TargetAcceptance { .. } => ControlPolicy::TargetAcceptance {
+                target: self.target_accept,
+                band: self.band,
+                adapt_every: self.adapt_every,
+            },
+            ControlPolicy::EvalBudget { .. } => ControlPolicy::EvalBudget {
+                adapt_every: self.adapt_every,
+            },
+        };
+        policy.validate()?;
+        Ok(policy)
+    }
+}
+
 /// A full experiment description.
 #[derive(Clone, Debug)]
 pub struct ExperimentConfig {
@@ -111,6 +161,8 @@ pub struct ExperimentConfig {
     pub sampler: SamplerConfig,
     /// Run parameters.
     pub run: RunConfig,
+    /// Adaptive-control parameters.
+    pub control: ControlConfig,
 }
 
 impl ExperimentConfig {
@@ -178,10 +230,21 @@ impl ExperimentConfig {
             checkpoint_every: get_u64("run", "checkpoint_every", 0)?,
             progress_every: get_u64("run", "progress_every", 0)?,
         };
+        let control_defaults = ControlConfig::default();
+        let control = ControlConfig {
+            policy: gets("control", "policy")
+                .and_then(|v| v.as_str())
+                .unwrap_or(&control_defaults.policy)
+                .to_string(),
+            target_accept: get_f64("control", "target_accept", control_defaults.target_accept)?,
+            band: get_f64("control", "band", control_defaults.band)?,
+            adapt_every: get_u64("control", "adapt_every", control_defaults.adapt_every)?,
+        };
         Ok(Self {
             model,
             sampler,
             run,
+            control,
         })
     }
 
@@ -248,6 +311,39 @@ mod tests {
         assert_eq!(cfg.model.kind, "potts_rbf");
         assert_eq!(cfg.run.iters, 1_000_000);
         assert_eq!(cfg.sampler.algorithm, "gibbs");
+        assert_eq!(cfg.control.policy, "off");
+        assert!(cfg.control.to_policy().unwrap().is_off());
+    }
+
+    #[test]
+    fn control_section_resolves_to_policy() {
+        let cfg = ExperimentConfig::from_doc(&doc(
+            "[control]\npolicy = \"target-accept\"\ntarget_accept = 0.6\nadapt_every = 500",
+        ))
+        .unwrap();
+        match cfg.control.to_policy().unwrap() {
+            ControlPolicy::TargetAcceptance {
+                target,
+                adapt_every,
+                ..
+            } => {
+                assert_eq!(target, 0.6);
+                assert_eq!(adapt_every, 500);
+            }
+            other => panic!("wrong policy {other:?}"),
+        }
+    }
+
+    #[test]
+    fn control_section_rejects_bad_values() {
+        let cfg =
+            ExperimentConfig::from_doc(&doc("[control]\npolicy = \"nope\"")).unwrap();
+        assert!(cfg.control.to_policy().is_err());
+        let cfg = ExperimentConfig::from_doc(&doc(
+            "[control]\npolicy = \"target-accept\"\ntarget_accept = 1.5",
+        ))
+        .unwrap();
+        assert!(cfg.control.to_policy().is_err());
     }
 
     #[test]

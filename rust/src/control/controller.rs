@@ -1,0 +1,510 @@
+//! The per-chain adaptive controller.
+//!
+//! Runs inside `run_one_chain`: every `adapt_every` iterations it diffs
+//! the chain's [`SamplerMetrics`] counters over the review window,
+//! updates the evals-per-effective-sample figure of merit, checks the
+//! marginal-error trajectory for a convergence plateau (freezing further
+//! adjustments and requesting an early checkpoint when it finds one),
+//! and steers the sampler's hyperparameters per the configured
+//! [`ControlPolicy`].
+
+use std::sync::Arc;
+
+use crate::graph::GraphStats;
+use crate::metrics::{labeled, Counter, Gauge, MetricsHub, SamplerMetrics};
+use crate::samplers::{Hyperparams, Sampler};
+
+use super::policy::ControlPolicy;
+
+/// Multiplicative steering gain: λ ← λ · exp(GAIN · (target − acc)),
+/// clamped to one octave per review.
+const GAIN: f64 = 2.0;
+/// Per-review multiplicative clamp (at most halve / double).
+const MAX_STEP: f64 = 2.0;
+/// Acceptance floor for the eval-budget policy: below this the chain is
+/// too sticky to be worth the eval savings, so the climb reverses up.
+const ACCEPT_FLOOR: f64 = 0.2;
+
+/// What the runner should do after a review.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ControlAction {
+    /// Write an early checkpoint now (plateau detected).
+    pub save_checkpoint: bool,
+}
+
+/// Detects convergence plateaus in the (iteration, error) trajectory:
+/// the relative improvement over the last `window` recorded points has
+/// fallen below `rel_tol`.
+#[derive(Clone, Copy, Debug)]
+pub struct PlateauDetector {
+    window: usize,
+    rel_tol: f64,
+}
+
+impl PlateauDetector {
+    /// Plateau = less than `rel_tol` relative improvement across the
+    /// trailing `window` trajectory points.
+    pub fn new(window: usize, rel_tol: f64) -> Self {
+        assert!(window >= 1 && rel_tol >= 0.0);
+        Self { window, rel_tol }
+    }
+
+    /// Check the trailing window of an error trajectory.
+    pub fn is_plateau(&self, trajectory: &[(u64, f64)]) -> bool {
+        if trajectory.len() <= self.window {
+            return false;
+        }
+        let a = trajectory[trajectory.len() - 1 - self.window].1;
+        let b = trajectory[trajectory.len() - 1].1;
+        a.is_finite() && b.is_finite() && a > 0.0 && (a - b) / a < self.rel_tol
+    }
+}
+
+/// Counter totals at the last review; deltas against these form the
+/// review window.
+#[derive(Clone, Copy, Debug, Default)]
+struct CounterSnap {
+    steps: u64,
+    proposals: u64,
+    accepts: u64,
+    evals: u64,
+}
+
+impl CounterSnap {
+    fn take(m: &SamplerMetrics) -> Self {
+        Self {
+            steps: m.steps.get(),
+            proposals: m.proposals.get(),
+            accepts: m.accepts.get(),
+            evals: m.factor_evals.get(),
+        }
+    }
+}
+
+/// Per-chain adaptive controller. Construct with [`Controller::new`]
+/// (returns `None` for [`ControlPolicy::Off`]), then from the chain loop
+/// call [`Controller::due`] each iteration and [`Controller::review`]
+/// when it fires.
+pub struct Controller {
+    policy: ControlPolicy,
+    every: u64,
+    m: Arc<SamplerMetrics>,
+    delta: usize,
+    psi: f64,
+    lambda_min: f64,
+    lambda_max: f64,
+    last: CounterSnap,
+    plateau: PlateauDetector,
+    frozen: bool,
+    settled: bool,
+    /// Eval-budget hill-climb state.
+    climb_factor: f64,
+    prev_cost: Option<f64>,
+    adjustments: Arc<Counter>,
+    g_lambda: Arc<Gauge>,
+    g_lambda2: Arc<Gauge>,
+    g_batch: Arc<Gauge>,
+    g_evals_per_ess: Arc<Gauge>,
+    g_plateau: Arc<Gauge>,
+    g_settled_iter: Arc<Gauge>,
+}
+
+impl Controller {
+    /// Build a controller for one chain, registering its gauges
+    /// (`controller_lambda`, `controller_lambda2`, `controller_batch`,
+    /// `controller_evals_per_ess`, `controller_plateau`,
+    /// `controller_settled_iter`) and the `controller_adjustments_total`
+    /// counter in `hub`, all labeled `{chain}`. Returns `None` when the
+    /// policy is [`ControlPolicy::Off`].
+    pub fn new(
+        policy: &ControlPolicy,
+        hub: &MetricsHub,
+        chain: &str,
+        m: Arc<SamplerMetrics>,
+        stats: &GraphStats,
+    ) -> Option<Self> {
+        if policy.is_off() {
+            return None;
+        }
+        let lbl = |name: &str| labeled(name, &[("chain", chain)]);
+        // Snapshot the (possibly resume-seeded) counters now so the first
+        // window covers only iterations reviewed by THIS controller.
+        let last = CounterSnap::take(&m);
+        Some(Self {
+            policy: *policy,
+            every: policy.adapt_every().max(1),
+            delta: stats.delta,
+            psi: stats.psi,
+            lambda_min: 1e-3,
+            lambda_max: (stats.psi * stats.psi).max(1e6),
+            last,
+            plateau: PlateauDetector::new(8, 0.02),
+            frozen: false,
+            settled: false,
+            climb_factor: 0.8,
+            prev_cost: None,
+            adjustments: hub.counter(&lbl("controller_adjustments_total")),
+            g_lambda: hub.gauge(&lbl("controller_lambda")),
+            g_lambda2: hub.gauge(&lbl("controller_lambda2")),
+            g_batch: hub.gauge(&lbl("controller_batch")),
+            g_evals_per_ess: hub.gauge(&lbl("controller_evals_per_ess")),
+            g_plateau: hub.gauge(&lbl("controller_plateau")),
+            g_settled_iter: hub.gauge(&lbl("controller_settled_iter")),
+            m,
+        })
+    }
+
+    /// Whether a review is due after `completed` iterations. Never fires
+    /// once a plateau froze the controller.
+    pub fn due(&self, completed: u64) -> bool {
+        !self.frozen && completed > 0 && completed % self.every == 0
+    }
+
+    /// Mirror the sampler's current hyperparameters into the controller
+    /// gauges (called once at chain start and after every adjustment).
+    pub fn publish(&self, sampler: &dyn Sampler) {
+        let hp = sampler.hyperparams();
+        if let Some(l) = hp.lambda {
+            self.g_lambda.set(l);
+        }
+        if let Some(l2) = hp.lambda2 {
+            self.g_lambda2.set(l2);
+        }
+        if let Some(b) = hp.batch {
+            self.g_batch.set(b as f64);
+        }
+    }
+
+    /// Review the chain after `completed` iterations: update the figure
+    /// of merit, detect plateaus, and steer the sampler.
+    pub fn review(
+        &mut self,
+        completed: u64,
+        sampler: &mut dyn Sampler,
+        trajectory: &[(u64, f64)],
+    ) -> ControlAction {
+        let cur = CounterSnap::take(&self.m);
+        let w = CounterSnap {
+            steps: cur.steps - self.last.steps,
+            proposals: cur.proposals - self.last.proposals,
+            accepts: cur.accepts - self.last.accepts,
+            evals: cur.evals - self.last.evals,
+        };
+        self.last = cur;
+        if w.steps == 0 {
+            return ControlAction::default();
+        }
+
+        // Figure of merit: factor evals per effective sample. The crude
+        // ESS proxy is accepted moves for MH chains; Gibbs-type chains
+        // move every step.
+        let ess = if w.proposals > 0 {
+            w.accepts.max(1) as f64
+        } else {
+            w.steps as f64
+        };
+        self.g_evals_per_ess.set(w.evals as f64 / ess);
+
+        // Convergence plateau → freeze adjustments, request an early
+        // checkpoint so the settled chain is durably saved.
+        if self.plateau.is_plateau(trajectory) {
+            self.frozen = true;
+            self.g_plateau.set(1.0);
+            return ControlAction {
+                save_checkpoint: true,
+            };
+        }
+
+        let acc = if w.proposals > 0 {
+            Some(w.accepts as f64 / w.proposals as f64)
+        } else {
+            None
+        };
+        match self.policy {
+            ControlPolicy::Off => {}
+            ControlPolicy::TargetAcceptance { target, band, .. } => {
+                self.review_target(completed, sampler, target, band, acc);
+            }
+            ControlPolicy::EvalBudget { .. } => {
+                self.review_budget(sampler, w.evals as f64 / ess, acc);
+            }
+        }
+        ControlAction::default()
+    }
+
+    /// Target-acceptance steering.
+    fn review_target(
+        &mut self,
+        completed: u64,
+        sampler: &mut dyn Sampler,
+        target: f64,
+        band: f64,
+        acc: Option<f64>,
+    ) {
+        let hp = sampler.hyperparams();
+        match acc {
+            Some(a) => {
+                if (a - target).abs() <= band {
+                    self.mark_settled(completed);
+                    return;
+                }
+                // Larger λ → proposal closer to the exact conditional →
+                // higher acceptance (Theorem 4): steer multiplicatively.
+                let factor = (GAIN * (target - a)).exp().clamp(1.0 / MAX_STEP, MAX_STEP);
+                if let Some(l) = hp.lambda {
+                    let nl = (l * factor).clamp(self.lambda_min, self.lambda_max);
+                    self.apply(sampler, Hyperparams::with_lambda(nl));
+                } else if let Some(b) = hp.batch {
+                    self.apply_batch(sampler, b, factor);
+                }
+            }
+            None => {
+                // Gibbs-type chains accept by construction; read the
+                // target as a spectral-penalty bound exp(−δ) ≥ target
+                // and glide toward the Lemma-2 recipe λ* = 2Ψ²/δ.
+                let delta_star = -(target.clamp(0.01, 0.99)).ln();
+                if let Some(l) = hp.lambda {
+                    let l_star =
+                        (2.0 * self.psi * self.psi / delta_star).clamp(self.lambda_min, self.lambda_max);
+                    if (l_star / l).ln().abs() > 0.05 {
+                        let nl = l * (l_star / l).clamp(1.0 / MAX_STEP, MAX_STEP);
+                        self.apply(sampler, Hyperparams::with_lambda(nl));
+                    } else {
+                        self.mark_settled(completed);
+                    }
+                } else if let Some(b) = hp.batch {
+                    // Local minibatch: B* ≈ target fraction of the degree.
+                    let b_star = ((target * self.delta as f64).ceil() as usize).max(1);
+                    if b == b_star {
+                        self.mark_settled(completed);
+                    } else {
+                        let factor = (b_star as f64 / b as f64).clamp(1.0 / MAX_STEP, MAX_STEP);
+                        self.apply_batch(sampler, b, factor);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Eval-budget hill-climb: shrink λ (or B) while the windowed
+    /// evals-per-effective-sample keeps improving, reverse when it
+    /// worsens, and force the climb up below the acceptance floor.
+    fn review_budget(&mut self, sampler: &mut dyn Sampler, cost: f64, acc: Option<f64>) {
+        if let Some(a) = acc {
+            if a < ACCEPT_FLOOR && self.climb_factor < 1.0 {
+                self.climb_factor = 1.0 / self.climb_factor;
+                self.prev_cost = None;
+            }
+        }
+        if let Some(prev) = self.prev_cost {
+            if cost > prev * 1.02 {
+                self.climb_factor = 1.0 / self.climb_factor;
+            }
+        }
+        self.prev_cost = Some(cost);
+        let hp = sampler.hyperparams();
+        if let Some(l) = hp.lambda {
+            let nl = (l * self.climb_factor).clamp(self.lambda_min, self.lambda_max);
+            self.apply(sampler, Hyperparams::with_lambda(nl));
+        } else if let Some(b) = hp.batch {
+            self.apply_batch(sampler, b, self.climb_factor);
+        }
+    }
+
+    /// Apply a batch-size change scaled by `factor`, rounded and clamped
+    /// to [1, Δ] (a batch above the max degree buys nothing).
+    fn apply_batch(&mut self, sampler: &mut dyn Sampler, b: usize, factor: f64) {
+        let scaled = (b as f64 * factor).round() as usize;
+        // `round` alone can no-op for small B (e.g. B = 1, factor 1.25);
+        // force at least one unit of movement in the factor's direction.
+        let nb = if factor > 1.0 {
+            scaled.max(b + 1)
+        } else if factor < 1.0 {
+            scaled.min(b.saturating_sub(1))
+        } else {
+            scaled
+        }
+        .clamp(1, self.delta.max(1));
+        self.apply(sampler, Hyperparams::with_batch(nb));
+    }
+
+    /// Push a hyperparameter update into the sampler; on any actual
+    /// change, bump the adjustments counter and republish both the
+    /// sampler's gauges and the controller's.
+    fn apply(&mut self, sampler: &mut dyn Sampler, hp: Hyperparams) {
+        if sampler.set_hyperparams(&hp) {
+            self.adjustments.add(1);
+            sampler.publish_hyperparams(&self.m);
+            self.publish(sampler);
+        }
+    }
+
+    /// Record the first iteration at which the chain was in-target.
+    fn mark_settled(&mut self, completed: u64) {
+        if !self.settled {
+            self.settled = true;
+            self.g_settled_iter.set(completed as f64);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::models;
+    use crate::metrics::MetricsHub;
+    use crate::rng::Pcg64;
+    use crate::samplers::{LocalMinibatchSampler, MgpmhSampler, MinGibbsSampler};
+
+    #[test]
+    fn plateau_detector_wants_flat_trailing_window() {
+        let det = PlateauDetector::new(3, 0.02);
+        // Still improving fast.
+        let falling: Vec<(u64, f64)> = (0..8).map(|i| (i, 1.0 / (i + 1) as f64)).collect();
+        assert!(!det.is_plateau(&falling));
+        // Flat tail.
+        let mut flat = falling.clone();
+        flat.extend((8..16).map(|i| (i, 0.1)));
+        assert!(det.is_plateau(&flat));
+        // Too short to judge.
+        assert!(!det.is_plateau(&flat[..3]));
+    }
+
+    fn harness(
+        policy: ControlPolicy,
+    ) -> (crate::graph::FactorGraph, MetricsHub, ControlPolicy) {
+        let g = models::tiny_random(4, 3, 0.8, 51);
+        (g, MetricsHub::new(), policy)
+    }
+
+    /// Over-large λ + high acceptance → the controller must shrink λ and
+    /// count the adjustment.
+    #[test]
+    fn target_policy_shrinks_overlarge_lambda() {
+        let (g, hub, policy) = harness(ControlPolicy::target_acceptance(0.7));
+        let m = SamplerMetrics::register(&hub, &[("chain", "0"), ("sampler", "mgpmh")]);
+        let mut s = MgpmhSampler::new(&g, 400.0);
+        s.attach_metrics(m.clone());
+        let mut c = Controller::new(&policy, &hub, "0", m, g.stats()).unwrap();
+        assert!(c.due(1_000));
+        assert!(!c.due(999));
+
+        let mut rng = Pcg64::seeded(52);
+        let mut state = vec![0u16; g.n()];
+        for _ in 0..1_000 {
+            s.step(&mut state, &mut rng);
+        }
+        let action = c.review(1_000, &mut s, &[]);
+        assert!(!action.save_checkpoint);
+        assert!(s.lambda() < 400.0, "λ should shrink, got {}", s.lambda());
+        let snap = hub.snapshot();
+        assert_eq!(
+            snap.counter("controller_adjustments_total{chain=\"0\"}"),
+            Some(1)
+        );
+        assert_eq!(
+            snap.gauge("controller_lambda{chain=\"0\"}"),
+            Some(s.lambda())
+        );
+        // The sampler's own gauge tracks the retuned value too.
+        assert_eq!(
+            snap.gauge("sampler_lambda{chain=\"0\",sampler=\"mgpmh\"}"),
+            Some(s.lambda())
+        );
+        assert!(snap
+            .gauge("controller_evals_per_ess{chain=\"0\"}")
+            .unwrap()
+            > 0.0);
+    }
+
+    /// A flat error trajectory freezes the controller: the review
+    /// requests a checkpoint and no further reviews come due.
+    #[test]
+    fn plateau_freezes_further_reviews() {
+        let (g, hub, policy) = harness(ControlPolicy::target_acceptance(0.7));
+        let m = SamplerMetrics::register(&hub, &[("chain", "0"), ("sampler", "mgpmh")]);
+        let mut s = MgpmhSampler::new(&g, 4.0);
+        s.attach_metrics(m.clone());
+        let mut c = Controller::new(&policy, &hub, "0", m, g.stats()).unwrap();
+
+        let mut rng = Pcg64::seeded(53);
+        let mut state = vec![0u16; g.n()];
+        for _ in 0..1_000 {
+            s.step(&mut state, &mut rng);
+        }
+        let flat: Vec<(u64, f64)> = (0..12).map(|i| (i * 100, 0.25)).collect();
+        let action = c.review(1_000, &mut s, &flat);
+        assert!(action.save_checkpoint);
+        assert!(!c.due(2_000), "frozen controller must not come due");
+        assert_eq!(
+            hub.snapshot().gauge("controller_plateau{chain=\"0\"}"),
+            Some(1.0)
+        );
+    }
+
+    /// Gibbs-type glide: MIN-Gibbs has no acceptance rate, so the
+    /// controller steers λ toward the Lemma-2 recipe 2Ψ²/δ.
+    #[test]
+    fn gibbs_type_glides_toward_recipe() {
+        let (g, hub, policy) = harness(ControlPolicy::target_acceptance(0.7));
+        let m = SamplerMetrics::register(&hub, &[("chain", "0"), ("sampler", "min-gibbs")]);
+        let psi = g.stats().psi;
+        let l_star = 2.0 * psi * psi / -(0.7f64.ln());
+        let mut s = MinGibbsSampler::new(&g, l_star * 16.0);
+        s.attach_metrics(m.clone());
+        let mut c = Controller::new(&policy, &hub, "0", m, g.stats()).unwrap();
+        let mut rng = Pcg64::seeded(54);
+        let mut state = vec![0u16; g.n()];
+        for round in 1..=8u64 {
+            for _ in 0..200 {
+                s.step(&mut state, &mut rng);
+            }
+            c.review(round * 200, &mut s, &[]);
+        }
+        let lam = s.lambda();
+        assert!(
+            (lam / l_star).ln().abs() <= 0.05,
+            "λ = {lam} should have settled near λ* = {l_star}"
+        );
+        let settled = hub
+            .snapshot()
+            .gauge("controller_settled_iter{chain=\"0\"}")
+            .unwrap();
+        assert!(settled > 0.0);
+    }
+
+    /// Eval-budget on Local Minibatch: the first move shrinks B (cheaper
+    /// window), and B never leaves [1, Δ].
+    #[test]
+    fn budget_policy_moves_batch_within_bounds() {
+        let (g, hub, policy) = harness(ControlPolicy::eval_budget());
+        let m = SamplerMetrics::register(&hub, &[("chain", "0"), ("sampler", "local-minibatch")]);
+        let delta = g.stats().delta;
+        let mut s = LocalMinibatchSampler::new(&g, delta.max(2));
+        s.attach_metrics(m.clone());
+        let mut c = Controller::new(&policy, &hub, "0", m, g.stats()).unwrap();
+        let mut rng = Pcg64::seeded(55);
+        let mut state = vec![0u16; g.n()];
+        for round in 1..=6u64 {
+            for _ in 0..200 {
+                s.step(&mut state, &mut rng);
+            }
+            c.review(round * 200, &mut s, &[]);
+            assert!((1..=delta.max(1)).contains(&s.batch()));
+        }
+        assert!(
+            hub.snapshot()
+                .counter("controller_adjustments_total{chain=\"0\"}")
+                .unwrap()
+                > 0
+        );
+    }
+
+    #[test]
+    fn off_policy_builds_no_controller() {
+        let g = models::tiny_random(3, 2, 0.5, 56);
+        let hub = MetricsHub::new();
+        let m = SamplerMetrics::register(&hub, &[("chain", "0"), ("sampler", "gibbs")]);
+        assert!(Controller::new(&ControlPolicy::Off, &hub, "0", m, g.stats()).is_none());
+    }
+}

@@ -1,0 +1,33 @@
+//! Adaptive sampling control.
+//!
+//! The minibatch samplers all hinge on hyperparameters the paper sets
+//! a-priori from graph statistics — λ = Θ(L²) for MGPMH, λ = 2Ψ²/δ for
+//! MIN-Gibbs (Lemma 2), a batch size B for Local Minibatch. Those
+//! recipes need Ψ, L and a chosen slack δ up front; on a real model the
+//! practical sweet spot (acceptance high enough to mix, minibatches
+//! small enough to pay off) is easier to find *while sampling*.
+//!
+//! This module closes that loop. A [`ControlPolicy`] chosen at run
+//! configuration time ([`crate::coordinator::RunSpecBuilder::control`])
+//! makes the runner attach one [`Controller`] per chain. The controller
+//! periodically reviews the chain's live [`crate::metrics::SamplerMetrics`]
+//! — windowed acceptance rate, factor evals per effective sample — and
+//! the recorded marginal-error trajectory, then retunes λ / B through
+//! the [`crate::samplers::Sampler`] hyperparameter surface
+//! (`hyperparams` / `set_hyperparams`). Retuning mid-run is sound for
+//! the same reason the samplers are correct at any fixed λ: each step is
+//! a Markov kernel with the right stationary distribution, and changing
+//! λ between steps just composes different such kernels.
+//!
+//! When the error trajectory plateaus the controller freezes (no more
+//! adjustments) and asks the runner for an early checkpoint, capturing
+//! the tuned hyperparameters — which checkpoints persist, so `--resume`
+//! picks up the tuned values instead of the originals.
+
+mod controller;
+mod policy;
+
+pub use controller::{ControlAction, Controller, PlateauDetector};
+pub use policy::{
+    ControlPolicy, DEFAULT_ADAPT_EVERY, DEFAULT_BAND, DEFAULT_TARGET_ACCEPT,
+};

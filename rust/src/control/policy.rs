@@ -1,0 +1,222 @@
+//! Control policies: what the adaptive controller optimizes for.
+
+use anyhow::{bail, Result};
+
+/// Default acceptance-rate target (center of the band).
+pub const DEFAULT_TARGET_ACCEPT: f64 = 0.7;
+/// Default half-width of the acceptance band around the target.
+pub const DEFAULT_BAND: f64 = 0.1;
+/// Default review cadence in iterations.
+pub const DEFAULT_ADAPT_EVERY: u64 = 1_000;
+
+/// How (and whether) to adapt sampler hyperparameters mid-run.
+///
+/// Composed into a [`crate::coordinator::RunSpec`] via
+/// [`crate::coordinator::RunSpecBuilder::control`]; the runner
+/// instantiates one [`super::Controller`] per chain for any policy other
+/// than [`ControlPolicy::Off`].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ControlPolicy {
+    /// No adaptation: hyperparameters stay as configured (the default,
+    /// and the paper's a-priori setting).
+    Off,
+    /// Steer λ (or B) so the windowed acceptance rate lands in
+    /// `target ± band`. Gibbs-type samplers, which accept by
+    /// construction, reinterpret `target` as the spectral-penalty bound
+    /// `exp(−δ) ≥ target` and glide λ toward the paper's Lemma-2 recipe
+    /// λ* = 2Ψ²/δ.
+    TargetAcceptance {
+        /// Acceptance-rate target in (0, 1).
+        target: f64,
+        /// Half-width of the no-adjustment band around `target`.
+        band: f64,
+        /// Review the chain every this many iterations.
+        adapt_every: u64,
+    },
+    /// Multiplicative hill-climb on λ (or B) minimizing factor evals per
+    /// effective sample, with an acceptance floor so the chain stays
+    /// usable.
+    EvalBudget {
+        /// Review the chain every this many iterations.
+        adapt_every: u64,
+    },
+}
+
+impl Default for ControlPolicy {
+    fn default() -> Self {
+        Self::Off
+    }
+}
+
+impl ControlPolicy {
+    /// Target-acceptance policy with default band and cadence.
+    pub fn target_acceptance(target: f64) -> Self {
+        Self::TargetAcceptance {
+            target,
+            band: DEFAULT_BAND,
+            adapt_every: DEFAULT_ADAPT_EVERY,
+        }
+    }
+
+    /// Eval-budget policy with the default cadence.
+    pub fn eval_budget() -> Self {
+        Self::EvalBudget {
+            adapt_every: DEFAULT_ADAPT_EVERY,
+        }
+    }
+
+    /// Resolve a policy name (CLI `--adapt NAME`, config `control.policy`).
+    pub fn from_name(name: &str) -> Result<Self> {
+        Ok(match name {
+            "off" => Self::Off,
+            "accept" | "target-accept" | "target_accept" => {
+                Self::target_acceptance(DEFAULT_TARGET_ACCEPT)
+            }
+            "budget" | "eval-budget" | "eval_budget" => Self::eval_budget(),
+            other => bail!(
+                "unknown control policy {other:?} (expected off | target-accept | eval-budget)"
+            ),
+        })
+    }
+
+    /// Whether adaptation is disabled.
+    pub fn is_off(&self) -> bool {
+        matches!(self, Self::Off)
+    }
+
+    /// The review cadence (0 for [`ControlPolicy::Off`]).
+    pub fn adapt_every(&self) -> u64 {
+        match self {
+            Self::Off => 0,
+            Self::TargetAcceptance { adapt_every, .. } | Self::EvalBudget { adapt_every } => {
+                *adapt_every
+            }
+        }
+    }
+
+    /// Replace the review cadence (no-op for [`ControlPolicy::Off`]).
+    pub fn with_adapt_every(self, every: u64) -> Self {
+        match self {
+            Self::Off => Self::Off,
+            Self::TargetAcceptance { target, band, .. } => Self::TargetAcceptance {
+                target,
+                band,
+                adapt_every: every,
+            },
+            Self::EvalBudget { .. } => Self::EvalBudget { adapt_every: every },
+        }
+    }
+
+    /// Replace the acceptance target (no-op for other policies).
+    pub fn with_target(self, target: f64) -> Self {
+        match self {
+            Self::TargetAcceptance {
+                band, adapt_every, ..
+            } => Self::TargetAcceptance {
+                target,
+                band,
+                adapt_every,
+            },
+            other => other,
+        }
+    }
+
+    /// Validate parameter ranges (called by `RunSpecBuilder::build`).
+    pub fn validate(&self) -> Result<()> {
+        match *self {
+            Self::Off => {}
+            Self::TargetAcceptance {
+                target,
+                band,
+                adapt_every,
+            } => {
+                if !(target > 0.0 && target < 1.0) {
+                    bail!("control target acceptance must be in (0, 1), got {target}");
+                }
+                if !(band > 0.0 && band < 1.0) {
+                    bail!("control acceptance band must be in (0, 1), got {band}");
+                }
+                if adapt_every == 0 {
+                    bail!("control adapt_every must be > 0");
+                }
+            }
+            Self::EvalBudget { adapt_every } => {
+                if adapt_every == 0 {
+                    bail!("control adapt_every must be > 0");
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+impl std::fmt::Display for ControlPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::Off => write!(f, "off"),
+            Self::TargetAcceptance {
+                target,
+                band,
+                adapt_every,
+            } => write!(
+                f,
+                "target-accept {target} ± {band} (review every {adapt_every})"
+            ),
+            Self::EvalBudget { adapt_every } => {
+                write!(f, "eval-budget (review every {adapt_every})")
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_resolve() {
+        assert_eq!(ControlPolicy::from_name("off").unwrap(), ControlPolicy::Off);
+        assert!(matches!(
+            ControlPolicy::from_name("target-accept").unwrap(),
+            ControlPolicy::TargetAcceptance { .. }
+        ));
+        assert!(matches!(
+            ControlPolicy::from_name("budget").unwrap(),
+            ControlPolicy::EvalBudget { .. }
+        ));
+        assert!(ControlPolicy::from_name("nope").is_err());
+    }
+
+    #[test]
+    fn validation_catches_bad_ranges() {
+        assert!(ControlPolicy::Off.validate().is_ok());
+        assert!(ControlPolicy::target_acceptance(0.7).validate().is_ok());
+        assert!(ControlPolicy::target_acceptance(1.5).validate().is_err());
+        assert!(ControlPolicy::target_acceptance(0.0).validate().is_err());
+        assert!(ControlPolicy::target_acceptance(0.7)
+            .with_adapt_every(0)
+            .validate()
+            .is_err());
+        assert!(ControlPolicy::eval_budget().with_adapt_every(0).validate().is_err());
+    }
+
+    #[test]
+    fn setters_rewrite_fields() {
+        let p = ControlPolicy::target_acceptance(0.5)
+            .with_target(0.8)
+            .with_adapt_every(250);
+        match p {
+            ControlPolicy::TargetAcceptance {
+                target,
+                adapt_every,
+                ..
+            } => {
+                assert_eq!(target, 0.8);
+                assert_eq!(adapt_every, 250);
+            }
+            _ => panic!("wrong variant"),
+        }
+        assert!(ControlPolicy::Off.with_adapt_every(9).is_off());
+        assert_eq!(ControlPolicy::Off.adapt_every(), 0);
+    }
+}

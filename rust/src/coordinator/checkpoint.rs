@@ -5,24 +5,36 @@
 //! dependency set):
 //!
 //! ```text
-//! mbgibbs-checkpoint v1
+//! mbgibbs-checkpoint v2
 //! iter = 123456
 //! seed = 42
 //! chain = 0
 //! factor_evals = 456789
 //! accepted = 120000
 //! proposed = 123456
+//! rng_state = 1f2e3d4c...        (hex u128)
+//! rng_inc = 5a6b7c8d...          (hex u128)
+//! lambda = 25.9                  (tuned hyperparameters, where present)
+//! lambda2 = 957.1
+//! batch = 250
+//! aux_energy = -1.25             (MIN-Gibbs ε / DoubleMIN ξ cache)
 //! state = 0 1 2 0 1 ...
 //! ```
 //!
 //! The counter keys (`factor_evals`, `accepted`, `proposed`) are
 //! cumulative totals at checkpoint time; they let a resumed run CONTINUE
-//! its metric counters instead of resetting them. They are optional on
-//! parse (default 0) so pre-observability v1 files still load.
+//! its metric counters instead of resetting them. Everything after them
+//! is v2: the PCG stream position (making `--resume` a bit-exact replay
+//! of the uninterrupted run), the possibly-controller-tuned
+//! hyperparameters, and the augmented-space energy cache. All of it is
+//! optional on parse, so v1 files still load — they just keep the old
+//! restart-from-seed resume behavior.
 
 use std::path::Path;
 
 use anyhow::{bail, Context, Result};
+
+use crate::samplers::Hyperparams;
 
 /// A point-in-time snapshot of one chain.
 #[derive(Clone, Debug, PartialEq)]
@@ -39,6 +51,14 @@ pub struct Checkpoint {
     pub accepted: u64,
     /// Cumulative MH proposals at checkpoint time (0 for Gibbs-type).
     pub proposed: u64,
+    /// PCG stream position `(state, inc)` at checkpoint time; `None` in
+    /// legacy files (resume then restarts the stream from the seed).
+    pub rng: Option<(u128, u128)>,
+    /// Hyperparameters (possibly tuned by the adaptive controller) at
+    /// checkpoint time; empty for samplers with no knobs or legacy files.
+    pub hyperparams: Hyperparams,
+    /// Augmented-space energy cache (MIN-Gibbs ε / DoubleMIN ξ).
+    pub aux_energy: Option<f64>,
     /// Variable assignment.
     pub state: Vec<u16>,
 }
@@ -47,28 +67,42 @@ impl Checkpoint {
     /// Serialize to the text format.
     pub fn to_text(&self) -> String {
         let state: Vec<String> = self.state.iter().map(|v| v.to_string()).collect();
-        format!(
-            "mbgibbs-checkpoint v1\niter = {}\nseed = {}\nchain = {}\n\
-             factor_evals = {}\naccepted = {}\nproposed = {}\nstate = {}\n",
-            self.iter,
-            self.seed,
-            self.chain,
-            self.factor_evals,
-            self.accepted,
-            self.proposed,
-            state.join(" ")
-        )
+        let mut out = format!(
+            "mbgibbs-checkpoint v2\niter = {}\nseed = {}\nchain = {}\n\
+             factor_evals = {}\naccepted = {}\nproposed = {}\n",
+            self.iter, self.seed, self.chain, self.factor_evals, self.accepted, self.proposed,
+        );
+        if let Some((s, inc)) = self.rng {
+            out.push_str(&format!("rng_state = {s:x}\nrng_inc = {inc:x}\n"));
+        }
+        if let Some(l) = self.hyperparams.lambda {
+            out.push_str(&format!("lambda = {l}\n"));
+        }
+        if let Some(l2) = self.hyperparams.lambda2 {
+            out.push_str(&format!("lambda2 = {l2}\n"));
+        }
+        if let Some(b) = self.hyperparams.batch {
+            out.push_str(&format!("batch = {b}\n"));
+        }
+        if let Some(e) = self.aux_energy {
+            out.push_str(&format!("aux_energy = {e}\n"));
+        }
+        out.push_str(&format!("state = {}\n", state.join(" ")));
+        out
     }
 
-    /// Parse from the text format.
+    /// Parse from the text format (v1 or v2).
     pub fn from_text(text: &str) -> Result<Self> {
         let mut lines = text.lines();
         let header = lines.next().unwrap_or_default();
-        if header != "mbgibbs-checkpoint v1" {
+        if header != "mbgibbs-checkpoint v1" && header != "mbgibbs-checkpoint v2" {
             bail!("bad checkpoint header: {header:?}");
         }
         let (mut iter, mut seed, mut chain, mut state) = (None, None, None, None);
         let (mut factor_evals, mut accepted, mut proposed) = (0u64, 0u64, 0u64);
+        let (mut rng_state, mut rng_inc) = (None, None);
+        let mut hyperparams = Hyperparams::default();
+        let mut aux_energy = None;
         for line in lines {
             let line = line.trim();
             if line.is_empty() {
@@ -77,13 +111,27 @@ impl Checkpoint {
             let (key, value) = line
                 .split_once('=')
                 .with_context(|| format!("bad checkpoint line: {line:?}"))?;
+            let value = value.trim();
             match key.trim() {
-                "iter" => iter = Some(value.trim().parse::<u64>()?),
-                "seed" => seed = Some(value.trim().parse::<u64>()?),
-                "chain" => chain = Some(value.trim().parse::<usize>()?),
-                "factor_evals" => factor_evals = value.trim().parse::<u64>()?,
-                "accepted" => accepted = value.trim().parse::<u64>()?,
-                "proposed" => proposed = value.trim().parse::<u64>()?,
+                "iter" => iter = Some(value.parse::<u64>()?),
+                "seed" => seed = Some(value.parse::<u64>()?),
+                "chain" => chain = Some(value.parse::<usize>()?),
+                "factor_evals" => factor_evals = value.parse::<u64>()?,
+                "accepted" => accepted = value.parse::<u64>()?,
+                "proposed" => proposed = value.parse::<u64>()?,
+                "rng_state" => {
+                    rng_state = Some(
+                        u128::from_str_radix(value, 16).context("bad rng_state (hex u128)")?,
+                    )
+                }
+                "rng_inc" => {
+                    rng_inc =
+                        Some(u128::from_str_radix(value, 16).context("bad rng_inc (hex u128)")?)
+                }
+                "lambda" => hyperparams.lambda = Some(value.parse::<f64>()?),
+                "lambda2" => hyperparams.lambda2 = Some(value.parse::<f64>()?),
+                "batch" => hyperparams.batch = Some(value.parse::<usize>()?),
+                "aux_energy" => aux_energy = Some(value.parse::<f64>()?),
                 "state" => {
                     let vs: Result<Vec<u16>, _> =
                         value.split_whitespace().map(|t| t.parse::<u16>()).collect();
@@ -92,6 +140,11 @@ impl Checkpoint {
                 other => bail!("unknown checkpoint key {other:?}"),
             }
         }
+        let rng = match (rng_state, rng_inc) {
+            (Some(s), Some(i)) => Some((s, i)),
+            (None, None) => None,
+            _ => bail!("checkpoint has only one of rng_state / rng_inc"),
+        };
         Ok(Self {
             iter: iter.context("missing iter")?,
             seed: seed.context("missing seed")?,
@@ -99,6 +152,9 @@ impl Checkpoint {
             factor_evals,
             accepted,
             proposed,
+            rng,
+            hyperparams,
+            aux_energy,
             state: state.context("missing state")?,
         })
     }
@@ -131,6 +187,13 @@ mod tests {
             factor_evals: 987_654,
             accepted: 11_000,
             proposed: 12_345,
+            rng: Some(((0x0123_4567_89ab_cdef_u128 << 64) | 42, (7u128 << 64) | 0x55)),
+            hyperparams: Hyperparams {
+                lambda: Some(25.875),
+                lambda2: Some(957.1),
+                batch: None,
+            },
+            aux_energy: Some(-1.25),
             state: vec![0, 1, 2, 9, 0],
         }
     }
@@ -140,6 +203,25 @@ mod tests {
         let c = sample();
         let parsed = Checkpoint::from_text(&c.to_text()).unwrap();
         assert_eq!(c, parsed);
+    }
+
+    /// Exact round trip for f64 values that are not dyadic-friendly:
+    /// Rust's `Display` emits the shortest string that parses back to the
+    /// identical bits.
+    #[test]
+    fn f64_values_roundtrip_bitexact() {
+        let mut c = sample();
+        c.hyperparams.lambda = Some(1.0 / 3.0 * 77.7);
+        c.aux_energy = Some(-0.1 - 0.2);
+        let parsed = Checkpoint::from_text(&c.to_text()).unwrap();
+        assert_eq!(
+            parsed.hyperparams.lambda.unwrap().to_bits(),
+            c.hyperparams.lambda.unwrap().to_bits()
+        );
+        assert_eq!(
+            parsed.aux_energy.unwrap().to_bits(),
+            c.aux_energy.unwrap().to_bits()
+        );
     }
 
     #[test]
@@ -156,10 +238,11 @@ mod tests {
     #[test]
     fn rejects_bad_header() {
         assert!(Checkpoint::from_text("not a checkpoint").is_err());
+        assert!(Checkpoint::from_text("mbgibbs-checkpoint v3\niter = 1\n").is_err());
     }
 
     /// Pre-observability v1 files (no counter keys) still load, with the
-    /// counters defaulting to zero.
+    /// counters defaulting to zero and no v2 extras.
     #[test]
     fn loads_legacy_files_without_counters() {
         let text = "mbgibbs-checkpoint v1\niter = 7\nseed = 2\nchain = 1\nstate = 0 1\n";
@@ -168,6 +251,9 @@ mod tests {
         assert_eq!(c.factor_evals, 0);
         assert_eq!(c.accepted, 0);
         assert_eq!(c.proposed, 0);
+        assert_eq!(c.rng, None);
+        assert!(c.hyperparams.is_empty());
+        assert_eq!(c.aux_energy, None);
     }
 
     #[test]
@@ -178,6 +264,15 @@ mod tests {
     #[test]
     fn rejects_garbage_state() {
         let text = "mbgibbs-checkpoint v1\niter = 1\nseed = 2\nchain = 0\nstate = 0 x 1\n";
+        assert!(Checkpoint::from_text(text).is_err());
+    }
+
+    /// rng_state without rng_inc is a corrupt stream position, not a
+    /// silently-degraded one.
+    #[test]
+    fn rejects_partial_rng_position() {
+        let text = "mbgibbs-checkpoint v2\niter = 1\nseed = 2\nchain = 0\n\
+                    rng_state = ff\nstate = 0 1\n";
         assert!(Checkpoint::from_text(text).is_err());
     }
 }

@@ -10,5 +10,7 @@ pub mod runner;
 pub mod sink;
 
 pub use checkpoint::Checkpoint;
-pub use runner::{run_chains, run_chains_with_metrics, ChainReport, RunReport, RunSpec};
+pub use runner::{
+    run_chains, run_chains_with_metrics, ChainReport, RunReport, RunSpec, RunSpecBuilder,
+};
 pub use sink::{EnergyTraceSink, MarginalTrajectorySink, SampleSink};

@@ -4,21 +4,31 @@
 //! registers a [`SamplerMetrics`] family labeled `{chain, sampler}` and a
 //! per-chain step-latency histogram (sampled 1-in-16 to amortize clock
 //! reads). The final [`RunReport`] carries a [`Snapshot`] of everything.
+//!
+//! Control: when the spec carries a non-[`ControlPolicy::Off`] policy,
+//! each chain also gets a [`Controller`] that periodically reviews the
+//! live metrics and error trajectory and retunes the sampler's λ / B
+//! (see [`crate::control`]).
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::sync::Arc;
 use std::time::Instant;
 
+use anyhow::{bail, Result};
+
 use crate::bench::workload::SamplerSpec;
+use crate::control::{ControlPolicy, Controller};
 use crate::graph::FactorGraph;
 use crate::metrics::trace::{EventKind, TraceBuffer, TraceEvent};
 use crate::metrics::{labeled, MetricsHub, SamplerMetrics, Snapshot};
 use crate::rng::Pcg64;
+use crate::samplers::Sampler;
 
 use super::checkpoint::Checkpoint;
 use super::sink::MarginalTrajectorySink;
 
-/// What to run.
+/// What to run. Construct with [`RunSpec::builder`]; the fields stay
+/// public for reading (reports, figure harness, tests).
 #[derive(Clone, Debug)]
 pub struct RunSpec {
     /// Sampler to instantiate per chain.
@@ -39,10 +49,13 @@ pub struct RunSpec {
     /// Checkpoint cadence (iterations); 0 disables periodic checkpoints.
     pub checkpoint_every: u64,
     /// Resume from `checkpoint_dir/chain<k>.ckpt` where present: the
-    /// chain restarts at the saved iteration/state and its metric
-    /// counters CONTINUE from the saved totals. The RNG stream restarts
-    /// from the master seed (statistically fine — the resumed chain is a
-    /// valid chain — but not a bit-exact replay of the uninterrupted run).
+    /// chain restarts at the saved iteration/state, metric counters
+    /// CONTINUE from the saved totals, the PCG stream is restored to its
+    /// exact saved position (making the resumed run a bit-exact replay of
+    /// the uninterrupted one), and controller-tuned hyperparameters are
+    /// reapplied. Legacy v1 checkpoints carry no stream position; they
+    /// keep the old restart-from-seed behavior (statistically fine, not
+    /// bit-exact).
     pub resume: bool,
     /// Emit a progress line to stderr every this many iterations per
     /// chain; 0 disables.
@@ -50,11 +63,13 @@ pub struct RunSpec {
     /// Per-chain trace ring-buffer capacity in events; 0 disables
     /// tracing entirely (nothing is allocated).
     pub trace_capacity: usize,
+    /// Adaptive-control policy; [`ControlPolicy::Off`] (default) runs
+    /// hyperparameters exactly as configured.
+    pub control: ControlPolicy,
 }
 
 impl RunSpec {
-    /// Sensible defaults: 1 chain, 10⁶ iterations, paper's unmixed init.
-    pub fn new(sampler: SamplerSpec) -> Self {
+    fn defaults(sampler: SamplerSpec) -> Self {
         Self {
             sampler,
             iters: 1_000_000,
@@ -67,7 +82,120 @@ impl RunSpec {
             resume: false,
             progress_every: 0,
             trace_capacity: 0,
+            control: ControlPolicy::Off,
         }
+    }
+
+    /// Start building a run spec: 1 chain, 10⁶ iterations, the paper's
+    /// unmixed all-zeros init, control off.
+    pub fn builder(sampler: SamplerSpec) -> RunSpecBuilder {
+        RunSpecBuilder {
+            spec: Self::defaults(sampler),
+        }
+    }
+
+    /// Sensible defaults: 1 chain, 10⁶ iterations, paper's unmixed init.
+    #[deprecated(note = "use RunSpec::builder(..) — mutate-the-fields construction \
+                         skips validation and predates the control policy")]
+    pub fn new(sampler: SamplerSpec) -> Self {
+        Self::defaults(sampler)
+    }
+}
+
+/// Fluent builder for [`RunSpec`]; [`RunSpecBuilder::build`] validates
+/// the combination before it reaches the runner.
+#[derive(Clone, Debug)]
+pub struct RunSpecBuilder {
+    spec: RunSpec,
+}
+
+impl RunSpecBuilder {
+    /// Iterations per chain.
+    pub fn iters(mut self, iters: u64) -> Self {
+        self.spec.iters = iters;
+        self
+    }
+
+    /// Number of chains (threads).
+    pub fn chains(mut self, chains: usize) -> Self {
+        self.spec.chains = chains;
+        self
+    }
+
+    /// Master seed.
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.spec.seed = seed;
+        self
+    }
+
+    /// Marginal-error recording cadence.
+    pub fn record_every(mut self, every: u64) -> Self {
+        self.spec.record_every = every;
+        self
+    }
+
+    /// Explicit initial state (default: all zeros).
+    pub fn init(mut self, init: Vec<u16>) -> Self {
+        self.spec.init = Some(init);
+        self
+    }
+
+    /// Checkpoint directory (enables `checkpoint_every` / `resume`).
+    pub fn checkpoint_dir(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.spec.checkpoint_dir = Some(dir.into());
+        self
+    }
+
+    /// Periodic checkpoint cadence in iterations (0 disables).
+    pub fn checkpoint_every(mut self, every: u64) -> Self {
+        self.spec.checkpoint_every = every;
+        self
+    }
+
+    /// Resume from checkpoints in `checkpoint_dir`.
+    pub fn resume(mut self, resume: bool) -> Self {
+        self.spec.resume = resume;
+        self
+    }
+
+    /// Progress-line cadence in iterations (0 disables).
+    pub fn progress_every(mut self, every: u64) -> Self {
+        self.spec.progress_every = every;
+        self
+    }
+
+    /// Per-chain trace ring-buffer capacity (0 disables tracing).
+    pub fn trace_capacity(mut self, capacity: usize) -> Self {
+        self.spec.trace_capacity = capacity;
+        self
+    }
+
+    /// Adaptive-control policy (default [`ControlPolicy::Off`]).
+    pub fn control(mut self, policy: ControlPolicy) -> Self {
+        self.spec.control = policy;
+        self
+    }
+
+    /// Validate and produce the [`RunSpec`].
+    pub fn build(self) -> Result<RunSpec> {
+        let s = &self.spec;
+        if s.chains == 0 {
+            bail!("run spec needs at least one chain");
+        }
+        if s.iters == 0 {
+            bail!("run spec needs at least one iteration");
+        }
+        if s.record_every == 0 {
+            bail!("record_every must be > 0");
+        }
+        if s.resume && s.checkpoint_dir.is_none() {
+            bail!("resume requires a checkpoint_dir");
+        }
+        if s.checkpoint_every > 0 && s.checkpoint_dir.is_none() {
+            bail!("checkpoint_every requires a checkpoint_dir");
+        }
+        s.control.validate()?;
+        Ok(self.spec)
     }
 }
 
@@ -160,6 +288,37 @@ pub fn run_chains_with_metrics(
 /// keep the instrumented step path within the overhead budget.
 const LATENCY_SAMPLE: u64 = 16;
 
+/// Write a v2 checkpoint capturing the full chain position: state,
+/// cumulative counters, the exact PCG stream position, and the sampler's
+/// current (possibly controller-tuned) hyperparameters and energy cache.
+#[allow(clippy::too_many_arguments)]
+fn save_checkpoint(
+    dir: &Path,
+    spec: &RunSpec,
+    k: usize,
+    iter: u64,
+    state: &[u16],
+    m: &SamplerMetrics,
+    rng: &Pcg64,
+    sampler: &dyn Sampler,
+) {
+    let _ = std::fs::create_dir_all(dir);
+    let ckpt = Checkpoint {
+        iter,
+        seed: spec.seed,
+        chain: k,
+        factor_evals: m.factor_evals.get(),
+        accepted: m.accepts.get(),
+        proposed: m.proposals.get(),
+        rng: Some(rng.state_parts()),
+        hyperparams: sampler.hyperparams(),
+        aux_energy: sampler.aux_energy(),
+        state: state.to_vec(),
+    };
+    ckpt.save(&dir.join(format!("chain{k}.ckpt")))
+        .expect("checkpoint write failed");
+}
+
 fn run_one_chain(
     graph: &FactorGraph,
     spec: &RunSpec,
@@ -183,8 +342,11 @@ fn run_one_chain(
 
     // Resume: adopt the checkpointed position and seed the metric
     // counters with the saved cumulative totals so observability counts
-    // the whole logical run, not just this process.
+    // the whole logical run, not just this process. v2 checkpoints also
+    // restore the PCG stream position (bit-exact continuation), tuned
+    // hyperparameters, and the augmented-space energy cache.
     let mut start_iter = 0u64;
+    let mut restored_aux = None;
     if spec.resume {
         if let Some(dir) = &spec.checkpoint_dir {
             let path = dir.join(format!("chain{k}.ckpt"));
@@ -203,11 +365,26 @@ fn run_one_chain(
                 m.factor_evals.add(ckpt.factor_evals);
                 m.accepts.add(ckpt.accepted);
                 m.proposals.add(ckpt.proposed);
+                if let Some((s, inc)) = ckpt.rng {
+                    rng = Pcg64::from_state_parts(s, inc);
+                }
+                if !ckpt.hyperparams.is_empty() {
+                    sampler.set_hyperparams(&ckpt.hyperparams);
+                }
+                restored_aux = ckpt.aux_energy;
             }
         }
     }
     sampler.attach_metrics(m.clone());
     sampler.reset(&state, &mut rng);
+    if let Some(e) = restored_aux {
+        sampler.restore_aux_energy(e);
+    }
+
+    let mut controller = Controller::new(&spec.control, hub, &chain_label, m.clone(), graph.stats());
+    if let Some(c) = &controller {
+        c.publish(sampler.as_ref());
+    }
 
     let mut sink = MarginalTrajectorySink::new(n, d, spec.record_every);
     let start = Instant::now();
@@ -233,20 +410,20 @@ fn run_one_chain(
             );
             crate::trace_event!(trace_buf, EventKind::Progress, it + 1, 0);
         }
+        if let Some(c) = controller.as_mut() {
+            if c.due(it + 1) {
+                let action = c.review(it + 1, sampler.as_mut(), &sink.trajectory);
+                if action.save_checkpoint {
+                    if let Some(dir) = &spec.checkpoint_dir {
+                        save_checkpoint(dir, spec, k, it + 1, &state, &m, &rng, sampler.as_ref());
+                        crate::trace_event!(trace_buf, EventKind::Checkpoint, it + 1, 0);
+                    }
+                }
+            }
+        }
         if spec.checkpoint_every > 0 && (it + 1) % spec.checkpoint_every == 0 {
             if let Some(dir) = &spec.checkpoint_dir {
-                let _ = std::fs::create_dir_all(dir);
-                let ckpt = Checkpoint {
-                    iter: it + 1,
-                    seed: spec.seed,
-                    chain: k,
-                    factor_evals: m.factor_evals.get(),
-                    accepted: m.accepts.get(),
-                    proposed: m.proposals.get(),
-                    state: state.clone(),
-                };
-                ckpt.save(&dir.join(format!("chain{k}.ckpt")))
-                    .expect("checkpoint write failed");
+                save_checkpoint(dir, spec, k, it + 1, &state, &m, &rng, sampler.as_ref());
                 crate::trace_event!(trace_buf, EventKind::Checkpoint, it + 1, 0);
             }
         }
@@ -279,10 +456,12 @@ mod tests {
     #[test]
     fn runs_multiple_chains() {
         let g = models::tiny_random(4, 3, 0.8, 5);
-        let mut spec = RunSpec::new(SamplerSpec::Gibbs(EnergyPath::Specialized));
-        spec.iters = 20_000;
-        spec.chains = 3;
-        spec.record_every = 5_000;
+        let spec = RunSpec::builder(SamplerSpec::Gibbs(EnergyPath::Specialized))
+            .iters(20_000)
+            .chains(3)
+            .record_every(5_000)
+            .build()
+            .unwrap();
         let report = run_chains(&g, &spec);
         assert_eq!(report.chains.len(), 3);
         for c in &report.chains {
@@ -296,11 +475,54 @@ mod tests {
     }
 
     #[test]
+    fn builder_validates_combinations() {
+        let mk = || RunSpec::builder(SamplerSpec::Gibbs(EnergyPath::Generic));
+        assert!(mk().build().is_ok());
+        assert!(mk().chains(0).build().is_err());
+        assert!(mk().iters(0).build().is_err());
+        assert!(mk().record_every(0).build().is_err());
+        assert!(mk().resume(true).build().is_err(), "resume needs a dir");
+        assert!(mk().checkpoint_every(10).build().is_err(), "cadence needs a dir");
+        assert!(mk()
+            .checkpoint_dir("/tmp/x")
+            .checkpoint_every(10)
+            .resume(true)
+            .build()
+            .is_ok());
+        assert!(mk()
+            .control(ControlPolicy::target_acceptance(1.5))
+            .build()
+            .is_err());
+        assert!(mk()
+            .control(ControlPolicy::target_acceptance(0.6))
+            .build()
+            .is_ok());
+    }
+
+    /// The deprecated constructor must stay a field-for-field alias of
+    /// the builder defaults (external code still mutates it directly).
+    #[test]
+    #[allow(deprecated)]
+    fn legacy_constructor_matches_builder_defaults() {
+        let old = RunSpec::new(SamplerSpec::Gibbs(EnergyPath::Generic));
+        let new = RunSpec::builder(SamplerSpec::Gibbs(EnergyPath::Generic))
+            .build()
+            .unwrap();
+        assert_eq!(old.iters, new.iters);
+        assert_eq!(old.chains, new.chains);
+        assert_eq!(old.seed, new.seed);
+        assert_eq!(old.record_every, new.record_every);
+        assert_eq!(old.control, new.control);
+    }
+
+    #[test]
     fn chains_use_distinct_streams() {
         let g = models::tiny_random(4, 2, 0.5, 6);
-        let mut spec = RunSpec::new(SamplerSpec::Gibbs(EnergyPath::Generic));
-        spec.iters = 500;
-        spec.chains = 2;
+        let spec = RunSpec::builder(SamplerSpec::Gibbs(EnergyPath::Generic))
+            .iters(500)
+            .chains(2)
+            .build()
+            .unwrap();
         let report = run_chains(&g, &spec);
         // Overwhelmingly the final states should differ.
         assert_ne!(
@@ -312,9 +534,11 @@ mod tests {
     #[test]
     fn deterministic_given_seed() {
         let g = models::tiny_random(3, 2, 0.5, 7);
-        let mut spec = RunSpec::new(SamplerSpec::Mgpmh { lambda: 3.0 });
-        spec.iters = 5_000;
-        spec.chains = 2;
+        let spec = RunSpec::builder(SamplerSpec::Mgpmh { lambda: 3.0 })
+            .iters(5_000)
+            .chains(2)
+            .build()
+            .unwrap();
         let a = run_chains(&g, &spec);
         let b = run_chains(&g, &spec);
         for (ca, cb) in a.chains.iter().zip(b.chains.iter()) {
@@ -327,11 +551,13 @@ mod tests {
     fn periodic_checkpoints_written_and_loadable() {
         let g = models::tiny_random(3, 2, 0.5, 9);
         let dir = std::env::temp_dir().join(format!("mbgibbs_run_ckpt_{}", std::process::id()));
-        let mut spec = RunSpec::new(SamplerSpec::Gibbs(EnergyPath::Specialized));
-        spec.iters = 1_000;
-        spec.chains = 2;
-        spec.checkpoint_dir = Some(dir.clone());
-        spec.checkpoint_every = 400;
+        let spec = RunSpec::builder(SamplerSpec::Gibbs(EnergyPath::Specialized))
+            .iters(1_000)
+            .chains(2)
+            .checkpoint_dir(dir.clone())
+            .checkpoint_every(400)
+            .build()
+            .unwrap();
         let report = run_chains(&g, &spec);
         for k in 0..2 {
             let ckpt =
@@ -341,6 +567,7 @@ mod tests {
             assert_eq!(ckpt.iter, 800); // last multiple of 400 within 1000
             assert_eq!(ckpt.state.len(), 3);
             assert!(ckpt.factor_evals > 0, "checkpoint missing cumulative evals");
+            assert!(ckpt.rng.is_some(), "v2 checkpoint must carry the stream position");
         }
         assert_eq!(report.chains.len(), 2);
         std::fs::remove_dir_all(&dir).ok();
@@ -351,9 +578,10 @@ mod tests {
         use std::sync::Arc;
         let g = models::tiny_random(3, 2, 0.5, 10);
         let hub = Arc::new(crate::metrics::MetricsHub::new());
-        let mut spec = RunSpec::new(SamplerSpec::Gibbs(EnergyPath::Generic));
-        spec.iters = 10_000;
-        spec.chains = 1;
+        let spec = RunSpec::builder(SamplerSpec::Gibbs(EnergyPath::Generic))
+            .iters(10_000)
+            .build()
+            .unwrap();
         let report = run_chains_with_metrics(&g, &spec, &hub);
         let snap = hub.snapshot();
         let steps = snap
@@ -376,9 +604,11 @@ mod tests {
     #[test]
     fn respects_custom_init() {
         let g = models::tiny_random(3, 3, 0.3, 8);
-        let mut spec = RunSpec::new(SamplerSpec::Gibbs(EnergyPath::Specialized));
-        spec.iters = 1;
-        spec.init = Some(vec![2, 2, 2]);
+        let spec = RunSpec::builder(SamplerSpec::Gibbs(EnergyPath::Specialized))
+            .iters(1)
+            .init(vec![2, 2, 2])
+            .build()
+            .unwrap();
         let report = run_chains(&g, &spec);
         // After one step only one variable may have changed.
         let diff = report.chains[0]
@@ -398,17 +628,23 @@ mod tests {
         let dir = std::env::temp_dir().join(format!("mbgibbs_resume_{}", std::process::id()));
         std::fs::remove_dir_all(&dir).ok();
 
-        let mut spec = RunSpec::new(SamplerSpec::Gibbs(EnergyPath::Specialized));
-        spec.iters = 600;
-        spec.chains = 1;
-        spec.checkpoint_dir = Some(dir.clone());
-        spec.checkpoint_every = 300;
+        let spec = RunSpec::builder(SamplerSpec::Gibbs(EnergyPath::Specialized))
+            .iters(600)
+            .checkpoint_dir(dir.clone())
+            .checkpoint_every(300)
+            .build()
+            .unwrap();
         let first = run_chains(&g, &spec);
         let evals_at_600 = first.chains[0].factor_evals;
 
         // Resume the same run with a higher target: counters continue.
-        spec.iters = 1_000;
-        spec.resume = true;
+        let spec = RunSpec::builder(SamplerSpec::Gibbs(EnergyPath::Specialized))
+            .iters(1_000)
+            .checkpoint_dir(dir.clone())
+            .checkpoint_every(300)
+            .resume(true)
+            .build()
+            .unwrap();
         let resumed = run_chains(&g, &spec);
         let c = &resumed.chains[0];
         assert_eq!(c.steps_executed, 400, "should resume at iter 600");
@@ -421,6 +657,86 @@ mod tests {
             .counter("sampler_steps_total{chain=\"0\",sampler=\"gibbs\"}")
             .unwrap();
         assert_eq!(steps, 1_000, "steps counter must include pre-resume iterations");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Bit-exact resume: interrupt + resume must replay the EXACT same
+    /// chain as the uninterrupted run — same final state, same eval
+    /// count — because v2 checkpoints restore the PCG stream position
+    /// and the MIN-Gibbs energy cache.
+    #[test]
+    fn resume_is_bit_exact_for_mingibbs() {
+        let g = models::tiny_random(4, 3, 0.8, 12);
+        let dir = std::env::temp_dir().join(format!("mbgibbs_bitexact_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+
+        let uninterrupted = RunSpec::builder(SamplerSpec::MinGibbs { lambda: 40.0 })
+            .iters(1_000)
+            .build()
+            .unwrap();
+        let full = run_chains(&g, &uninterrupted);
+
+        let first_leg = RunSpec::builder(SamplerSpec::MinGibbs { lambda: 40.0 })
+            .iters(600)
+            .checkpoint_dir(dir.clone())
+            .checkpoint_every(600)
+            .build()
+            .unwrap();
+        run_chains(&g, &first_leg);
+        let second_leg = RunSpec::builder(SamplerSpec::MinGibbs { lambda: 40.0 })
+            .iters(1_000)
+            .checkpoint_dir(dir.clone())
+            .resume(true)
+            .build()
+            .unwrap();
+        let resumed = run_chains(&g, &second_leg);
+
+        assert_eq!(
+            full.chains[0].final_state, resumed.chains[0].final_state,
+            "resumed chain diverged from the uninterrupted run"
+        );
+        assert_eq!(
+            full.chains[0].factor_evals, resumed.chains[0].factor_evals,
+            "resumed chain did different work than the uninterrupted run"
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// An adaptive run writes the tuned λ into its checkpoints, and a
+    /// resume (control off) picks the tuned value back up.
+    #[test]
+    fn resume_restores_controller_tuned_lambda() {
+        let g = models::tiny_random(4, 3, 0.8, 13);
+        let dir = std::env::temp_dir().join(format!("mbgibbs_tuned_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+
+        let spec = RunSpec::builder(SamplerSpec::Mgpmh { lambda: 500.0 })
+            .iters(2_000)
+            .control(ControlPolicy::target_acceptance(0.7).with_adapt_every(200))
+            .checkpoint_dir(dir.clone())
+            .checkpoint_every(2_000)
+            .build()
+            .unwrap();
+        run_chains(&g, &spec);
+        let ckpt = Checkpoint::load(&dir.join("chain0.ckpt")).unwrap();
+        let tuned = ckpt.hyperparams.lambda.expect("checkpoint missing λ");
+        assert!(tuned < 500.0, "controller should have shrunk λ, got {tuned}");
+
+        let resumed_spec = RunSpec::builder(SamplerSpec::Mgpmh { lambda: 500.0 })
+            .iters(2_500)
+            .checkpoint_dir(dir.clone())
+            .checkpoint_every(2_500)
+            .resume(true)
+            .build()
+            .unwrap();
+        run_chains(&g, &resumed_spec);
+        let after = Checkpoint::load(&dir.join("chain0.ckpt")).unwrap();
+        assert_eq!(after.iter, 2_500);
+        assert_eq!(
+            after.hyperparams.lambda.unwrap(),
+            tuned,
+            "resume must carry the tuned λ forward, not reset to the spec's"
+        );
         std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -35,6 +35,7 @@ pub mod analysis;
 pub mod bench;
 pub mod cli;
 pub mod config;
+pub mod control;
 pub mod coordinator;
 pub mod graph;
 pub mod metrics;

@@ -55,8 +55,8 @@ impl Sampler for DenseGibbsSampler<'_> {
         "dense-gibbs"
     }
 
-    fn attach_metrics(&mut self, m: Arc<SamplerMetrics>) {
-        self.metrics = Some(m);
+    fn metrics_slot(&mut self) -> Option<&mut Option<Arc<SamplerMetrics>>> {
+        Some(&mut self.metrics)
     }
 }
 

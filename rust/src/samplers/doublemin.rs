@@ -15,7 +15,7 @@ use crate::graph::FactorGraph;
 use crate::metrics::SamplerMetrics;
 use crate::rng::{sample_categorical_from_energies, Rng, SparsePoissonSampler};
 
-use super::{estimator::PoissonEnergyEstimator, Sampler, StepStats};
+use super::{estimator::PoissonEnergyEstimator, local_proposal_tables, Hyperparams, Sampler, StepStats};
 
 /// DoubleMIN-Gibbs sampler (paper Algorithm 5).
 pub struct DoubleMinGibbsSampler<'g> {
@@ -38,33 +38,8 @@ impl<'g> DoubleMinGibbsSampler<'g> {
     /// Create with first-batch size λ₁ (paper: Θ(L²)) and second-batch
     /// size λ₂ (paper: Θ(Ψ²)).
     pub fn new(graph: &'g FactorGraph, lambda1: f64, lambda2: f64) -> Self {
-        assert!(lambda1 > 0.0 && lambda2 > 0.0, "batch sizes must be positive");
-        let l = graph.stats().l;
-        assert!(l > 0.0, "graph has zero local energy");
-        let n = graph.n();
-        let mut per_var = Vec::with_capacity(n);
-        let mut weights = Vec::with_capacity(n);
-        for i in 0..n {
-            let rates: Vec<f64> = graph
-                .factors_of(i)
-                .iter()
-                .map(|&fid| lambda1 * graph.max_energy(fid as usize) / l)
-                .collect();
-            let w: Vec<f64> = graph
-                .factors_of(i)
-                .iter()
-                .map(|&fid| {
-                    let m = graph.max_energy(fid as usize);
-                    if m > 0.0 {
-                        l / (lambda1 * m)
-                    } else {
-                        0.0
-                    }
-                })
-                .collect();
-            per_var.push(SparsePoissonSampler::new(&rates));
-            weights.push(w);
-        }
+        assert!(lambda2 > 0.0, "batch sizes must be positive");
+        let (per_var, weights) = local_proposal_tables(graph, lambda1);
         Self {
             graph,
             lambda1,
@@ -88,6 +63,21 @@ impl<'g> DoubleMinGibbsSampler<'g> {
     /// Second-minibatch expected size λ₂.
     pub fn lambda2(&self) -> f64 {
         self.estimator.lambda()
+    }
+
+    /// Retune λ₁: rebuilds the per-variable Poisson proposal tables.
+    pub fn set_lambda1(&mut self, lambda1: f64) {
+        let (per_var, weights) = local_proposal_tables(self.graph, lambda1);
+        self.per_var = per_var;
+        self.weights = weights;
+        self.lambda1 = lambda1;
+    }
+
+    /// Retune λ₂: rebuilds the global estimator and drops the cached ξ
+    /// (it was drawn under the old estimator).
+    pub fn set_lambda2(&mut self, lambda2: f64) {
+        self.estimator = PoissonEnergyEstimator::new(self.graph, lambda2);
+        self.cached_xi = None;
     }
 
     /// Empirical acceptance rate so far.
@@ -187,10 +177,41 @@ impl Sampler for DoubleMinGibbsSampler<'_> {
         self.cached_xi = None;
     }
 
-    fn attach_metrics(&mut self, m: Arc<SamplerMetrics>) {
-        m.lambda.set(self.lambda1);
-        m.lambda2.set(self.estimator.lambda());
-        self.metrics = Some(m);
+    fn hyperparams(&self) -> Hyperparams {
+        Hyperparams {
+            lambda: Some(self.lambda1),
+            lambda2: Some(self.estimator.lambda()),
+            batch: None,
+        }
+    }
+
+    fn set_hyperparams(&mut self, hp: &Hyperparams) -> bool {
+        let mut changed = false;
+        if let Some(l1) = hp.lambda {
+            if l1 > 0.0 && l1 != self.lambda1 {
+                self.set_lambda1(l1);
+                changed = true;
+            }
+        }
+        if let Some(l2) = hp.lambda2 {
+            if l2 > 0.0 && l2 != self.estimator.lambda() {
+                self.set_lambda2(l2);
+                changed = true;
+            }
+        }
+        changed
+    }
+
+    fn metrics_slot(&mut self) -> Option<&mut Option<Arc<SamplerMetrics>>> {
+        Some(&mut self.metrics)
+    }
+
+    fn aux_energy(&self) -> Option<f64> {
+        self.cached_xi
+    }
+
+    fn restore_aux_energy(&mut self, e: f64) {
+        self.cached_xi = Some(e);
     }
 }
 

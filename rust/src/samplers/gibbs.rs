@@ -100,8 +100,8 @@ impl Sampler for GibbsSampler<'_> {
         "gibbs"
     }
 
-    fn attach_metrics(&mut self, m: Arc<SamplerMetrics>) {
-        self.metrics = Some(m);
+    fn metrics_slot(&mut self) -> Option<&mut Option<Arc<SamplerMetrics>>> {
+        Some(&mut self.metrics)
     }
 }
 

@@ -12,7 +12,7 @@ use crate::graph::FactorGraph;
 use crate::metrics::SamplerMetrics;
 use crate::rng::{sample_categorical_from_energies, Rng};
 
-use super::{Sampler, StepStats};
+use super::{Hyperparams, Sampler, StepStats};
 
 /// Local Minibatch Gibbs sampler (paper Algorithm 3).
 pub struct LocalMinibatchSampler<'g> {
@@ -102,9 +102,22 @@ impl Sampler for LocalMinibatchSampler<'_> {
         "local-minibatch"
     }
 
-    fn attach_metrics(&mut self, m: Arc<SamplerMetrics>) {
-        m.lambda.set(self.batch as f64);
-        self.metrics = Some(m);
+    fn hyperparams(&self) -> Hyperparams {
+        Hyperparams::with_batch(self.batch)
+    }
+
+    fn set_hyperparams(&mut self, hp: &Hyperparams) -> bool {
+        match hp.batch {
+            Some(b) if b >= 1 && b != self.batch => {
+                self.batch = b;
+                true
+            }
+            _ => false,
+        }
+    }
+
+    fn metrics_slot(&mut self) -> Option<&mut Option<Arc<SamplerMetrics>>> {
+        Some(&mut self.metrics)
     }
 }
 

@@ -13,7 +13,7 @@ use crate::graph::FactorGraph;
 use crate::metrics::SamplerMetrics;
 use crate::rng::{sample_categorical_from_energies, Rng, SparsePoissonSampler};
 
-use super::{Sampler, StepStats};
+use super::{local_proposal_tables, Hyperparams, Sampler, StepStats};
 
 /// MGPMH sampler (paper Algorithm 4).
 pub struct MgpmhSampler<'g> {
@@ -35,33 +35,7 @@ pub struct MgpmhSampler<'g> {
 impl<'g> MgpmhSampler<'g> {
     /// Create with expected first-minibatch size λ (paper recipe: λ = L²).
     pub fn new(graph: &'g FactorGraph, lambda: f64) -> Self {
-        assert!(lambda > 0.0, "λ must be positive");
-        let l = graph.stats().l;
-        assert!(l > 0.0, "graph has zero local energy");
-        let n = graph.n();
-        let mut per_var = Vec::with_capacity(n);
-        let mut weights = Vec::with_capacity(n);
-        for i in 0..n {
-            let rates: Vec<f64> = graph
-                .factors_of(i)
-                .iter()
-                .map(|&fid| lambda * graph.max_energy(fid as usize) / l)
-                .collect();
-            let w: Vec<f64> = graph
-                .factors_of(i)
-                .iter()
-                .map(|&fid| {
-                    let m = graph.max_energy(fid as usize);
-                    if m > 0.0 {
-                        l / (lambda * m)
-                    } else {
-                        0.0
-                    }
-                })
-                .collect();
-            per_var.push(SparsePoissonSampler::new(&rates));
-            weights.push(w);
-        }
+        let (per_var, weights) = local_proposal_tables(graph, lambda);
         Self {
             graph,
             lambda,
@@ -79,6 +53,14 @@ impl<'g> MgpmhSampler<'g> {
     /// Expected minibatch size λ.
     pub fn lambda(&self) -> f64 {
         self.lambda
+    }
+
+    /// Retune λ: rebuilds the per-variable Poisson proposal tables.
+    pub fn set_lambda(&mut self, lambda: f64) {
+        let (per_var, weights) = local_proposal_tables(self.graph, lambda);
+        self.per_var = per_var;
+        self.weights = weights;
+        self.lambda = lambda;
     }
 
     /// Empirical acceptance rate so far.
@@ -176,9 +158,22 @@ impl Sampler for MgpmhSampler<'_> {
         "mgpmh"
     }
 
-    fn attach_metrics(&mut self, m: Arc<SamplerMetrics>) {
-        m.lambda.set(self.lambda);
-        self.metrics = Some(m);
+    fn hyperparams(&self) -> Hyperparams {
+        Hyperparams::with_lambda(self.lambda)
+    }
+
+    fn set_hyperparams(&mut self, hp: &Hyperparams) -> bool {
+        match hp.lambda {
+            Some(l) if l > 0.0 && l != self.lambda => {
+                self.set_lambda(l);
+                true
+            }
+            _ => false,
+        }
+    }
+
+    fn metrics_slot(&mut self) -> Option<&mut Option<Arc<SamplerMetrics>>> {
+        Some(&mut self.metrics)
     }
 }
 

@@ -16,7 +16,7 @@ use crate::rng::{sample_categorical_from_energies, Rng};
 
 use super::{
     estimator::{FixedBatchEstimator, PoissonEnergyEstimator},
-    Sampler, StepStats,
+    Hyperparams, Sampler, StepStats,
 };
 
 /// MIN-Gibbs sampler (paper Algorithm 2) with the Eq. (2) estimator.
@@ -113,9 +113,33 @@ impl Sampler for MinGibbsSampler<'_> {
         self.cached_energy = None;
     }
 
-    fn attach_metrics(&mut self, m: Arc<SamplerMetrics>) {
-        m.lambda.set(self.estimator.lambda());
-        self.metrics = Some(m);
+    fn hyperparams(&self) -> Hyperparams {
+        Hyperparams::with_lambda(self.estimator.lambda())
+    }
+
+    fn set_hyperparams(&mut self, hp: &Hyperparams) -> bool {
+        match hp.lambda {
+            Some(l) if l > 0.0 && l != self.estimator.lambda() => {
+                self.estimator = PoissonEnergyEstimator::new(self.graph, l);
+                // The cached ε was drawn under the old estimator; drop it
+                // so the next step re-estimates on the new distribution.
+                self.cached_energy = None;
+                true
+            }
+            _ => false,
+        }
+    }
+
+    fn metrics_slot(&mut self) -> Option<&mut Option<Arc<SamplerMetrics>>> {
+        Some(&mut self.metrics)
+    }
+
+    fn aux_energy(&self) -> Option<f64> {
+        self.cached_energy
+    }
+
+    fn restore_aux_energy(&mut self, e: f64) {
+        self.cached_energy = Some(e);
     }
 }
 
@@ -195,8 +219,16 @@ impl Sampler for NaiveMinGibbsSampler<'_> {
         self.cached_energy = None;
     }
 
-    fn attach_metrics(&mut self, m: Arc<SamplerMetrics>) {
-        self.metrics = Some(m);
+    fn metrics_slot(&mut self) -> Option<&mut Option<Arc<SamplerMetrics>>> {
+        Some(&mut self.metrics)
+    }
+
+    fn aux_energy(&self) -> Option<f64> {
+        self.cached_energy
+    }
+
+    fn restore_aux_energy(&mut self, e: f64) {
+        self.cached_energy = Some(e);
     }
 }
 

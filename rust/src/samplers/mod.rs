@@ -31,8 +31,9 @@ pub use mingibbs::{MinGibbsSampler, NaiveMinGibbsSampler};
 
 use std::sync::Arc;
 
+use crate::graph::FactorGraph;
 use crate::metrics::SamplerMetrics;
-use crate::rng::Rng;
+use crate::rng::{Rng, SparsePoissonSampler};
 
 /// Per-step accounting: what happened and what it cost.
 #[derive(Clone, Copy, Debug, Default)]
@@ -44,6 +45,47 @@ pub struct StepStats {
     /// For MH-type samplers: whether the proposal was accepted.
     /// Always `true` for Gibbs-type samplers.
     pub accepted: bool,
+}
+
+/// The typed control surface over a sampler's tunable hyperparameters.
+///
+/// Each field is `Some` only where the sampler has that knob: λ for the
+/// MGPMH / MIN-Gibbs family, λ₂ for DoubleMIN's second (global)
+/// minibatch, B for Local Minibatch Gibbs. The adaptive controller
+/// ([`crate::control`]) reads and writes these through
+/// [`Sampler::hyperparams`] / [`Sampler::set_hyperparams`], and
+/// checkpoints persist them so `--resume` continues with tuned values.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Hyperparams {
+    /// Poisson minibatch rate λ (MGPMH, MIN-Gibbs, DoubleMIN's λ₁).
+    pub lambda: Option<f64>,
+    /// Second-minibatch rate λ₂ (DoubleMIN only).
+    pub lambda2: Option<f64>,
+    /// Fixed minibatch size B (Local Minibatch Gibbs).
+    pub batch: Option<usize>,
+}
+
+impl Hyperparams {
+    /// Just a λ.
+    pub fn with_lambda(lambda: f64) -> Self {
+        Self {
+            lambda: Some(lambda),
+            ..Self::default()
+        }
+    }
+
+    /// Just a batch size B.
+    pub fn with_batch(batch: usize) -> Self {
+        Self {
+            batch: Some(batch),
+            ..Self::default()
+        }
+    }
+
+    /// No knobs at all (e.g. exact Gibbs).
+    pub fn is_empty(&self) -> bool {
+        self.lambda.is_none() && self.lambda2.is_none() && self.batch.is_none()
+    }
 }
 
 /// A single-site MCMC sampler over a factor graph.
@@ -58,12 +100,105 @@ pub trait Sampler {
     /// after an external change to the state. Default: no caches.
     fn reset(&mut self, _state: &[u16], _rng: &mut dyn Rng) {}
 
-    /// Attach shared instrumentation. Samplers that support it report
-    /// steps, factor evals, minibatch sizes, MH accept/propose counts,
-    /// and estimator statistics through the handles; the default ignores
-    /// the attachment. An unattached sampler pays only an `Option` branch
-    /// per step.
-    fn attach_metrics(&mut self, _m: Arc<SamplerMetrics>) {}
+    /// Current tunable hyperparameters. Samplers with nothing to tune
+    /// (exact Gibbs) return the empty default.
+    fn hyperparams(&self) -> Hyperparams {
+        Hyperparams::default()
+    }
+
+    /// Apply new hyperparameters mid-run. Fields that are `None` — or
+    /// that the sampler does not have — are left unchanged; non-positive
+    /// or identical values are ignored. Returns `true` iff anything
+    /// actually changed (the controller counts these as adjustments).
+    fn set_hyperparams(&mut self, _hp: &Hyperparams) -> bool {
+        false
+    }
+
+    /// Where an instrumented sampler stores its metrics handle. The
+    /// default (`None`) drops the attachment; instrumented samplers
+    /// return their `Option<Arc<SamplerMetrics>>` field and inherit the
+    /// full [`Sampler::attach_metrics`] wiring from this one line.
+    fn metrics_slot(&mut self) -> Option<&mut Option<Arc<SamplerMetrics>>> {
+        None
+    }
+
+    /// Publish the configured hyperparameters to the shared gauges. The
+    /// default derives everything from [`Sampler::hyperparams`]: λ → the
+    /// `sampler_lambda` gauge (B reuses it, as before this API), λ₂ →
+    /// `sampler_lambda2`. Called on attach and re-called by the
+    /// controller after every adjustment.
+    fn publish_hyperparams(&self, m: &SamplerMetrics) {
+        let hp = self.hyperparams();
+        if let Some(l) = hp.lambda {
+            m.lambda.set(l);
+        }
+        if let Some(b) = hp.batch {
+            m.lambda.set(b as f64);
+        }
+        if let Some(l2) = hp.lambda2 {
+            m.lambda2.set(l2);
+        }
+    }
+
+    /// Attach shared instrumentation. The default publishes the gauges
+    /// and stores the handle in [`Sampler::metrics_slot`]; samplers
+    /// without a slot ignore the attachment. An unattached sampler pays
+    /// only an `Option` branch per step.
+    fn attach_metrics(&mut self, m: Arc<SamplerMetrics>) {
+        self.publish_hyperparams(&m);
+        if let Some(slot) = self.metrics_slot() {
+            *slot = Some(m);
+        }
+    }
+
+    /// The augmented-space energy cache (MIN-Gibbs's ε, DoubleMIN's ξ),
+    /// if the sampler carries one and it is initialized. Checkpointed so
+    /// `--resume` replays the uninterrupted run bit-exactly.
+    fn aux_energy(&self) -> Option<f64> {
+        None
+    }
+
+    /// Restore a checkpointed [`Sampler::aux_energy`]. Call after
+    /// [`Sampler::reset`] (which clears the cache).
+    fn restore_aux_energy(&mut self, _e: f64) {}
+}
+
+/// Per-variable sparse Poisson proposal tables shared by MGPMH and
+/// DoubleMIN-Gibbs: over each A\[i\], rates λ·M_φ/L and the matching
+/// importance weights L/(λ·M_φ). Rebuilt whenever the controller retunes
+/// λ.
+pub(crate) fn local_proposal_tables(
+    graph: &FactorGraph,
+    lambda: f64,
+) -> (Vec<SparsePoissonSampler>, Vec<Vec<f64>>) {
+    assert!(lambda > 0.0, "λ must be positive");
+    let l = graph.stats().l;
+    assert!(l > 0.0, "graph has zero local energy");
+    let n = graph.n();
+    let mut per_var = Vec::with_capacity(n);
+    let mut weights = Vec::with_capacity(n);
+    for i in 0..n {
+        let rates: Vec<f64> = graph
+            .factors_of(i)
+            .iter()
+            .map(|&fid| lambda * graph.max_energy(fid as usize) / l)
+            .collect();
+        let w: Vec<f64> = graph
+            .factors_of(i)
+            .iter()
+            .map(|&fid| {
+                let m = graph.max_energy(fid as usize);
+                if m > 0.0 {
+                    l / (lambda * m)
+                } else {
+                    0.0
+                }
+            })
+            .collect();
+        per_var.push(SparsePoissonSampler::new(&rates));
+        weights.push(w);
+    }
+    (per_var, weights)
 }
 
 /// Which conditional-energy evaluation path Gibbs-type samplers use.
@@ -156,6 +291,82 @@ mod tests {
             let tol = if s.name() == "local-minibatch" { 0.08 } else { 0.02 };
             assert!(err < tol, "{}: marginal error {err}", s.name());
         }
+    }
+
+    /// The typed control surface: every tunable sampler round-trips its
+    /// hyperparameters through `hyperparams` / `set_hyperparams`, ignores
+    /// knobs it does not have, and reports no-op updates as `false`.
+    #[test]
+    fn hyperparam_surface_roundtrips() {
+        let g = models::tiny_random(3, 3, 0.8, 42);
+
+        let mut gibbs = GibbsSampler::new(&g, EnergyPath::Specialized);
+        assert!(gibbs.hyperparams().is_empty());
+        assert!(!gibbs.set_hyperparams(&Hyperparams::with_lambda(9.0)));
+
+        let mut mgpmh = MgpmhSampler::new(&g, 4.0);
+        assert_eq!(mgpmh.hyperparams().lambda, Some(4.0));
+        assert!(mgpmh.set_hyperparams(&Hyperparams::with_lambda(2.0)));
+        assert_eq!(mgpmh.lambda(), 2.0);
+        assert!(!mgpmh.set_hyperparams(&Hyperparams::with_lambda(2.0)));
+        assert!(!mgpmh.set_hyperparams(&Hyperparams::with_batch(7)));
+
+        let mut local = LocalMinibatchSampler::new(&g, 2);
+        assert_eq!(local.hyperparams().batch, Some(2));
+        assert!(local.set_hyperparams(&Hyperparams::with_batch(3)));
+        assert_eq!(local.batch(), 3);
+        assert!(!local.set_hyperparams(&Hyperparams::with_batch(0)));
+
+        let mut mg = MinGibbsSampler::new(&g, 16.0);
+        assert_eq!(mg.hyperparams().lambda, Some(16.0));
+        assert!(mg.set_hyperparams(&Hyperparams::with_lambda(8.0)));
+        assert_eq!(mg.lambda(), 8.0);
+
+        let mut dm = DoubleMinGibbsSampler::new(&g, 4.0, 32.0);
+        let hp = dm.hyperparams();
+        assert_eq!((hp.lambda, hp.lambda2), (Some(4.0), Some(32.0)));
+        let update = Hyperparams {
+            lambda: Some(3.0),
+            lambda2: Some(24.0),
+            batch: None,
+        };
+        assert!(dm.set_hyperparams(&update));
+        assert_eq!((dm.lambda1(), dm.lambda2()), (3.0, 24.0));
+    }
+
+    /// Retuning λ mid-chain must not bias the stationary distribution:
+    /// MGPMH keeps exactly π because each step is a valid MH kernel for
+    /// π regardless of the proposal's λ.
+    #[test]
+    fn mgpmh_stays_unbiased_across_retuning() {
+        let g = models::tiny_random(3, 3, 0.8, 44);
+        let mut s = MgpmhSampler::new(&g, 1.0);
+        let mut rng = Pcg64::seeded(45);
+        let n = g.n();
+        let d = g.domain_size() as usize;
+        let mut state = vec![0u16; n];
+        let (iters, burnin) = (400_000usize, 40_000usize);
+        let mut counts = vec![vec![0u64; d]; n];
+        for it in 0..iters {
+            // Sweep λ across a ×16 range every quarter of the run.
+            if it % (iters / 4) == 0 && it > 0 {
+                let cur = s.lambda();
+                s.set_hyperparams(&Hyperparams::with_lambda(cur * 2.5));
+            }
+            s.step(&mut state, &mut rng);
+            if it >= burnin {
+                for (i, &v) in state.iter().enumerate() {
+                    counts[i][v as usize] += 1;
+                }
+            }
+        }
+        let total = (iters - burnin) as f64;
+        let marginals: Vec<Vec<f64>> = counts
+            .into_iter()
+            .map(|row| row.into_iter().map(|c| c as f64 / total).collect())
+            .collect();
+        let err = test_support::marginal_error_vs_exact(&g, &marginals);
+        assert!(err < 0.02, "retuned chain biased: err = {err}");
     }
 
     /// Chains must be exactly reproducible for a fixed seed.

@@ -45,11 +45,14 @@ record_every = 2000
     assert_eq!(g.n(), 25);
     assert!(dense.is_some());
     let spec = cfg.sampler_spec(&g).unwrap();
-    let mut run = RunSpec::new(spec);
-    run.iters = cfg.run.iters;
-    run.chains = cfg.run.chains;
-    run.seed = cfg.run.seed;
-    run.record_every = cfg.run.record_every;
+    let run = RunSpec::builder(spec)
+        .iters(cfg.run.iters)
+        .chains(cfg.run.chains)
+        .seed(cfg.run.seed)
+        .record_every(cfg.run.record_every)
+        .control(cfg.control.to_policy().unwrap())
+        .build()
+        .unwrap();
     let report = run_chains(&g, &run);
     assert_eq!(report.chains.len(), 2);
     for c in &report.chains {
@@ -135,6 +138,9 @@ fn checkpoint_resume_matches_state() {
         factor_evals: 3000,
         accepted: 0,
         proposed: 0,
+        rng: Some(rng.state_parts()),
+        hyperparams: sampler.hyperparams(),
+        aux_energy: sampler.aux_energy(),
         state: state.clone(),
     };
     let path = dir.join("chain0.ckpt");
@@ -142,5 +148,6 @@ fn checkpoint_resume_matches_state() {
     let loaded = Checkpoint::load(&path).unwrap();
     assert_eq!(loaded.state, state);
     assert_eq!(loaded.iter, 1000);
+    assert_eq!(loaded.rng, Some(rng.state_parts()));
     std::fs::remove_dir_all(&dir).ok();
 }

@@ -1,0 +1,148 @@
+//! Integration: the adaptive controller end to end — λ recovery from a
+//! deliberately bad setting on a degree-1000 Ising model, plateau
+//! detection, and checkpointed tuned hyperparameters.
+
+use std::sync::Arc;
+
+use mbgibbs::bench::workload::SamplerSpec;
+use mbgibbs::control::ControlPolicy;
+use mbgibbs::coordinator::{run_chains, run_chains_with_metrics, Checkpoint, RunSpec};
+use mbgibbs::graph::models;
+use mbgibbs::metrics::MetricsHub;
+use mbgibbs::samplers::EnergyPath;
+
+/// The headline acceptance test: on a degree-1000 Ising model (complete
+/// graph, L = 2 so the paper's recipe is λ ≈ L² = 4), start MGPMH from a
+/// deliberately bad λ = 200 with `--adapt --target-accept 0.7`. The
+/// controller must steer the acceptance rate into the target band within
+/// the first 20% of iterations, and the adaptive run must finish with
+/// fewer total factor evaluations than the fixed bad-λ run.
+#[test]
+fn adaptive_mgpmh_recovers_from_bad_lambda_on_degree_1000_ising() {
+    let g = models::table1_workload(1001, 2, 2.0); // complete graph, Δ = 1000
+    let iters = 20_000u64;
+    let bad_lambda = 200.0; // 50× the L² recipe
+
+    let fixed = RunSpec::builder(SamplerSpec::Mgpmh { lambda: bad_lambda })
+        .iters(iters)
+        .seed(31)
+        .record_every(5_000)
+        .build()
+        .unwrap();
+    let fixed_report = run_chains(&g, &fixed);
+    let fixed_evals = fixed_report.chains[0].factor_evals;
+
+    let adaptive = RunSpec::builder(SamplerSpec::Mgpmh { lambda: bad_lambda })
+        .iters(iters)
+        .seed(31)
+        .record_every(5_000)
+        .control(ControlPolicy::target_acceptance(0.7).with_adapt_every(250))
+        .build()
+        .unwrap();
+    let hub = Arc::new(MetricsHub::new());
+    let adaptive_report = run_chains_with_metrics(&g, &adaptive, &hub);
+    let snap = hub.snapshot();
+
+    // The controller actually adjusted something...
+    let adjustments = snap
+        .counter("controller_adjustments_total{chain=\"0\"}")
+        .expect("adjustments counter registered");
+    assert!(adjustments > 0, "controller never adjusted λ");
+
+    // ...the windowed acceptance entered the target band within the
+    // first 20% of iterations...
+    let settled = snap
+        .gauge("controller_settled_iter{chain=\"0\"}")
+        .expect("settled gauge registered");
+    assert!(
+        settled > 0.0 && settled <= iters as f64 * 0.2,
+        "acceptance should settle within the first 20% of iterations, settled at {settled}"
+    );
+
+    // ...λ ended far below the bad start, visible both as the controller
+    // gauge and the sampler's own gauge...
+    let lam = snap
+        .gauge("controller_lambda{chain=\"0\"}")
+        .expect("λ gauge registered");
+    assert!(lam < bad_lambda / 2.0, "λ barely moved: {lam}");
+    assert_eq!(
+        snap.gauge("sampler_lambda{chain=\"0\",sampler=\"mgpmh\"}"),
+        Some(lam),
+        "sampler gauge must track the retuned λ"
+    );
+    assert!(
+        snap.gauge("controller_evals_per_ess{chain=\"0\"}").unwrap() > 0.0,
+        "figure-of-merit gauge missing"
+    );
+
+    // ...and the tuned run did strictly less total work.
+    let adaptive_evals = adaptive_report.chains[0].factor_evals;
+    assert!(
+        adaptive_evals < fixed_evals,
+        "adaptive run should cost fewer factor evals: {adaptive_evals} vs {fixed_evals}"
+    );
+
+    // The chain still mixes: final error comparable to the fixed run.
+    assert!(adaptive_report.chains[0].final_error.is_finite());
+}
+
+/// Plateau detection: once the error trajectory flattens, the controller
+/// freezes (plateau gauge set) and writes an early checkpoint even
+/// though no periodic checkpoint cadence is configured.
+#[test]
+fn plateau_freezes_and_writes_early_checkpoint() {
+    let dir = std::env::temp_dir().join(format!(
+        "mbgibbs_ic_plateau_{}",
+        std::process::id()
+    ));
+    std::fs::remove_dir_all(&dir).ok();
+    let g = models::tiny_random(4, 3, 0.8, 21);
+    let iters = 30_000u64;
+    let spec = RunSpec::builder(SamplerSpec::Mgpmh { lambda: 50.0 })
+        .iters(iters)
+        .seed(33)
+        .record_every(200)
+        .control(ControlPolicy::target_acceptance(0.7).with_adapt_every(500))
+        .checkpoint_dir(dir.clone())
+        .build()
+        .unwrap();
+    let hub = Arc::new(MetricsHub::new());
+    run_chains_with_metrics(&g, &spec, &hub);
+
+    assert_eq!(
+        hub.snapshot().gauge("controller_plateau{chain=\"0\"}"),
+        Some(1.0),
+        "tiny fast-mixing model must plateau within {iters} iterations"
+    );
+    let ckpt = Checkpoint::load(&dir.join("chain0.ckpt"))
+        .expect("plateau must have written an early checkpoint");
+    assert!(
+        ckpt.iter < iters,
+        "plateau checkpoint should predate the end of the run"
+    );
+    assert!(ckpt.rng.is_some());
+    assert!(ckpt.hyperparams.lambda.is_some());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The control surface is a no-op for samplers without knobs: running
+/// plain Gibbs under an adaptive policy must not adjust anything (and
+/// must not crash).
+#[test]
+fn gibbs_under_adaptive_policy_is_untouched() {
+    let g = models::tiny_random(4, 2, 0.5, 22);
+    let spec = RunSpec::builder(SamplerSpec::Gibbs(EnergyPath::Specialized))
+        .iters(5_000)
+        .record_every(5_000)
+        .control(ControlPolicy::target_acceptance(0.7).with_adapt_every(500))
+        .build()
+        .unwrap();
+    let hub = Arc::new(MetricsHub::new());
+    let report = run_chains_with_metrics(&g, &spec, &hub);
+    assert_eq!(report.chains[0].acceptance, 1.0);
+    assert_eq!(
+        hub.snapshot().counter("controller_adjustments_total{chain=\"0\"}"),
+        Some(0),
+        "nothing to tune on exact Gibbs"
+    );
+}

@@ -25,11 +25,12 @@ fn tmpdir(name: &str) -> PathBuf {
 fn gibbs_factor_evals_are_degree_times_iters() {
     let (n, iters) = (12usize, 2_000u64);
     let g = models::table1_workload(n, 3, 2.0); // complete graph, Δ = n − 1
-    let mut run = RunSpec::new(SamplerSpec::Gibbs(EnergyPath::Specialized));
-    run.iters = iters;
-    run.chains = 1;
-    run.seed = 17;
-    run.record_every = 500;
+    let run = RunSpec::builder(SamplerSpec::Gibbs(EnergyPath::Specialized))
+        .iters(iters)
+        .seed(17)
+        .record_every(500)
+        .build()
+        .unwrap();
     let hub = Arc::new(MetricsHub::new());
     let report = run_chains_with_metrics(&g, &run, &hub);
 
@@ -51,24 +52,26 @@ fn resume_round_trip_continues_counters() {
     let (n, d) = (10usize, 3u16);
     let g = models::table1_workload(n, d, 2.0);
 
-    let mut run = RunSpec::new(SamplerSpec::Gibbs(EnergyPath::Specialized));
-    run.chains = 1;
-    run.seed = 23;
-    run.record_every = 100;
-    run.checkpoint_dir = Some(dir.clone());
-    run.checkpoint_every = 200;
+    let leg = |iters: u64, resume: bool| {
+        RunSpec::builder(SamplerSpec::Gibbs(EnergyPath::Specialized))
+            .iters(iters)
+            .seed(23)
+            .record_every(100)
+            .checkpoint_dir(dir.clone())
+            .checkpoint_every(200)
+            .resume(resume)
+            .build()
+            .unwrap()
+    };
 
     // First leg: 400 iterations, leaving a checkpoint at iteration 400.
-    run.iters = 400;
     let hub1 = Arc::new(MetricsHub::new());
-    run_chains_with_metrics(&g, &run, &hub1);
+    run_chains_with_metrics(&g, &leg(400, false), &hub1);
     assert!(dir.join("chain0.ckpt").exists());
 
     // Second leg: resume and extend to 1000 total iterations.
-    run.iters = 1_000;
-    run.resume = true;
     let hub2 = Arc::new(MetricsHub::new());
-    let report = run_chains_with_metrics(&g, &run, &hub2);
+    let report = run_chains_with_metrics(&g, &leg(1_000, true), &hub2);
 
     // Only 600 steps executed in this process...
     assert_eq!(report.chains[0].steps_executed, 600);

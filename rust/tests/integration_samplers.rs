@@ -20,9 +20,11 @@ fn paper_potts_error_decreases_all_samplers() {
         SamplerSpec::Mgpmh { lambda: s.l * s.l },
     ];
     for spec in specs {
-        let mut run = RunSpec::new(spec);
-        run.iters = 50_000;
-        run.record_every = 5_000;
+        let run = RunSpec::builder(spec)
+            .iters(50_000)
+            .record_every(5_000)
+            .build()
+            .unwrap();
         let report = run_chains(&model.graph, &run);
         let c = &report.chains[0];
         let start = c.trajectory.first().unwrap().1;
