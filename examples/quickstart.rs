@@ -4,7 +4,7 @@
 //! Run with: `cargo run --release --example quickstart`
 
 use mbgibbs::bench::workload::SamplerSpec;
-use mbgibbs::coordinator::{run_chains, RunSpec};
+use mbgibbs::coordinator::{run_chains, RunOptions, RunSpec};
 use mbgibbs::graph::models;
 use mbgibbs::samplers::EnergyPath;
 
@@ -47,7 +47,7 @@ fn main() {
             .record_every(iters / 10)
             .build()
             .expect("valid run spec");
-        let report = run_chains(&model.graph, &run);
+        let report = run_chains(&model.graph, &run, &RunOptions::default());
         println!(
             "{:<36} {:>12.1} {:>14.0} {:>12.5}",
             spec.label(&model.graph),

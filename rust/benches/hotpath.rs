@@ -155,6 +155,48 @@ fn main() {
         add("step doublemin λ₁=L²,λ₂=4000 (potts)", s.median);
     }
 
+    // --- chromatic parallel sweeps: serial vs 4 workers ---
+    // Acceptance row: on the degree-1000 multipartite Ising model
+    // (n = 1250, 5 color classes of 250) the 4-worker engine must beat
+    // the 1-worker engine by ≥2× in sweep throughput.
+    {
+        use mbgibbs::bench::workload::SamplerSpec;
+        use mbgibbs::metrics::MetricsHub;
+        use mbgibbs::runtime::ChromaticSweepEngine;
+
+        let mg = models::ising_multipartite(5, 250, 2.0);
+        let sweeps = if quick { 4u64 } else { 20 };
+        let iters = sweeps * mg.n() as u64;
+        let mut throughput = [0.0f64; 2];
+        for (slot, workers) in [(0usize, 1usize), (1, 4)] {
+            let hub = MetricsHub::new();
+            let m = SamplerMetrics::register(&hub, &[("chain", "bench")]);
+            let mut prng = Pcg64::seeded(9);
+            let engine = ChromaticSweepEngine::new(
+                &mg,
+                SamplerSpec::Gibbs(EnergyPath::Specialized),
+                workers,
+                &mut prng,
+                m,
+                &hub,
+                "bench",
+            );
+            let mut mstate = vec![0u16; mg.n()];
+            let t0 = std::time::Instant::now();
+            engine.run(&mut mstate, 0, iters, &mut |_| {});
+            let secs = t0.elapsed().as_secs_f64();
+            throughput[slot] = iters as f64 / secs;
+            add(
+                &format!("chromatic sweep gibbs workers={workers} (Δ=1000)"),
+                secs / iters as f64,
+            );
+        }
+        eprintln!(
+            "chromatic sweep speedup at 4 workers: {:.2}x (target ≥ 2x)",
+            throughput[1] / throughput[0]
+        );
+    }
+
     // --- XLA backend round-trip (opt-in: PJRT client startup is slow) ---
     if with_xla {
         use mbgibbs::runtime::{ArtifactStore, XlaDenseBackend};

@@ -21,7 +21,10 @@ use mbgibbs::bench::timer::{bench_iter, BenchConfig};
 use mbgibbs::bench::workload;
 use mbgibbs::graph::models;
 use mbgibbs::graph::FactorGraph;
+use mbgibbs::metrics::{MetricsHub, SamplerMetrics};
 use mbgibbs::rng::Pcg64;
+use mbgibbs::runtime::ChromaticSweepEngine;
+use mbgibbs::samplers::EnergyPath;
 
 fn run_sweep(
     title: &str,
@@ -111,6 +114,51 @@ fn main() {
     );
     println!("{}", b.render());
     b.write_csv(out).expect("csv");
+
+    // Sweep C: serial vs parallel chromatic sweeps of plain Gibbs on the
+    // degree-1000 multipartite Ising model (n = 1250, 5 color classes).
+    // Per-site randomness makes the result identical at every worker
+    // count, so the only difference between rows is wall-clock.
+    eprintln!("sweep C: chromatic parallel sweeps (degree-1000 multipartite Ising)");
+    let g = models::ising_multipartite(5, 250, 2.0);
+    let mut c = Table::new(
+        "table1 sweep C chromatic parallel",
+        &["workers", "colors", "ns_per_iter", "iters_per_sec", "speedup_vs_serial"],
+    );
+    let sweeps = if quick { 4u64 } else { 20 };
+    let iters = sweeps * g.n() as u64;
+    let mut serial = 0.0f64;
+    for workers in [1usize, 4] {
+        let hub = MetricsHub::new();
+        let m = SamplerMetrics::register(&hub, &[("chain", "bench")]);
+        let mut rng = Pcg64::seeded(9);
+        let engine = ChromaticSweepEngine::new(
+            &g,
+            workload::SamplerSpec::Gibbs(EnergyPath::Specialized),
+            workers,
+            &mut rng,
+            m,
+            &hub,
+            "bench",
+        );
+        let mut state = vec![0u16; g.n()];
+        let t0 = std::time::Instant::now();
+        engine.run(&mut state, 0, iters, &mut |_| {});
+        let secs = t0.elapsed().as_secs_f64();
+        let per_sec = iters as f64 / secs;
+        if workers == 1 {
+            serial = per_sec;
+        }
+        c.push_row(vec![
+            workers.to_string(),
+            g.coloring().num_colors().to_string(),
+            format!("{:.0}", secs * 1e9 / iters as f64),
+            format!("{:.0}", per_sec),
+            format!("{:.2}", per_sec / serial),
+        ]);
+    }
+    println!("{}", c.render());
+    c.write_csv(out).expect("csv");
 
     println!(
         "Expected shape — sweep A: gibbs time grows ~linearly in Δ while\n\

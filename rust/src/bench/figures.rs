@@ -3,7 +3,7 @@
 
 use std::path::Path;
 
-use crate::coordinator::{run_chains, RunSpec};
+use crate::coordinator::{run_chains, RunOptions, RunSpec};
 use crate::graph::models::DenseModel;
 
 use super::report::Table;
@@ -68,7 +68,7 @@ pub fn run_figure(
             .seed(params.seed)
             .build()
             .expect("figure run spec is statically valid");
-        let report = run_chains(g, &run);
+        let report = run_chains(g, &run, &RunOptions::default());
         let chain = &report.chains[0];
         summary.push_row(vec![
             spec.label(g),

@@ -40,6 +40,19 @@ impl SamplerSpec {
         }
     }
 
+    /// Whether the sampler's update touches only the chosen site's
+    /// neighborhood — i.e. [`Sampler::is_site_local`] holds for the
+    /// built sampler — which is what the chromatic parallel executor
+    /// ([`crate::runtime::parallel`]) requires. MIN-Gibbs and DoubleMIN
+    /// carry a *global* cached augmented-space energy, so concurrent
+    /// site updates would corrupt it.
+    pub fn supports_parallel(&self) -> bool {
+        matches!(
+            self,
+            SamplerSpec::Gibbs(_) | SamplerSpec::Local { .. } | SamplerSpec::Mgpmh { .. }
+        )
+    }
+
     /// Label for reports ("gibbs", "min-gibbs λ=2Ψ²", ...).
     pub fn label(&self, g: &FactorGraph) -> String {
         let s = g.stats();
@@ -196,6 +209,30 @@ mod tests {
         }
         let (_, specs) = fig2c_workload();
         assert!(matches!(specs[2], SamplerSpec::DoubleMin { .. }));
+    }
+
+    /// `supports_parallel` must agree with what the built sampler
+    /// reports — it's the static (graph-free) view of `is_site_local`,
+    /// used by run-spec validation before any sampler exists.
+    #[test]
+    fn supports_parallel_matches_built_samplers() {
+        let g = crate::graph::models::tiny_random(4, 3, 0.8, 2);
+        let specs = [
+            SamplerSpec::Gibbs(EnergyPath::Generic),
+            SamplerSpec::Gibbs(EnergyPath::Specialized),
+            SamplerSpec::MinGibbs { lambda: 10.0 },
+            SamplerSpec::Local { batch: 2 },
+            SamplerSpec::Mgpmh { lambda: 10.0 },
+            SamplerSpec::DoubleMin { lambda1: 5.0, lambda2: 20.0 },
+        ];
+        for spec in specs {
+            let sampler = spec.build(&g);
+            assert_eq!(
+                spec.supports_parallel(),
+                sampler.is_site_local(),
+                "spec/sampler disagreement for {spec:?}"
+            );
+        }
     }
 
     #[test]

@@ -44,7 +44,7 @@ use crate::bench::timer::{bench_iter, BenchConfig};
 use crate::bench::workload;
 use crate::config::ExperimentConfig;
 use crate::control::ControlPolicy;
-use crate::coordinator::{run_chains_with_metrics, RunSpec};
+use crate::coordinator::{run_chains, RunOptions, RunSpec};
 use crate::graph::models;
 use crate::metrics::{expose, MetricsHub, Snapshot, Unit};
 use crate::rng::Pcg64;
@@ -198,7 +198,9 @@ fn print_help() {
          \x20 --metrics-out PATH     write end-of-run metrics as JSON (+ PATH.prom)\n\
          \x20 --metrics-every SECS   also flush the metrics files periodically\n\
          \x20 --progress N           per-chain progress line every N iterations\n\
-         \x20 --resume               resume chains from output_dir/checkpoints/\n\n\
+         \x20 --resume               resume chains from output_dir/checkpoints/\n\
+         \x20 --workers N            within-chain worker threads (chromatic sweeps;\n\
+         \x20                        0 = serial random scan; see docs/PARALLEL.md)\n\n\
          SAMPLE ADAPTIVE CONTROL:\n\
          \x20 --adapt [POLICY]       auto-tune λ/B from live metrics; POLICY is\n\
          \x20                        target-accept (default) | eval-budget | off\n\
@@ -247,6 +249,7 @@ fn cmd_sample(args: &Args) -> Result<()> {
         .record_every(cfg.run.record_every)
         .progress_every(args.opt_u64("progress", cfg.run.progress_every)?)
         .resume(resume)
+        .workers(args.opt_u64("workers", cfg.parallel.workers as u64)? as usize)
         .control(control_policy_from(args, &cfg)?);
     if cfg.run.checkpoint_every > 0 || resume {
         builder = builder
@@ -274,6 +277,13 @@ fn cmd_sample(args: &Args) -> Result<()> {
     if !run.control.is_off() {
         println!("control: {}", run.control);
     }
+    if run.workers > 0 {
+        println!(
+            "parallel: {} workers, {} color classes",
+            run.workers,
+            graph.coloring().num_colors()
+        );
+    }
 
     // Background flusher: periodically snapshot the hub and rewrite the
     // metrics files so long runs can be watched from outside.
@@ -297,7 +307,7 @@ fn cmd_sample(args: &Args) -> Result<()> {
         })
     });
 
-    let report = run_chains_with_metrics(&graph, &run, &hub);
+    let report = run_chains(&graph, &run, &RunOptions::with_hub(hub.clone()));
 
     stop.store(true, Ordering::Relaxed);
     if let Some(h) = flusher {
@@ -319,6 +329,10 @@ fn cmd_sample(args: &Args) -> Result<()> {
         ]);
     }
     println!("{}", t.render());
+    println!(
+        "throughput: {:.0} steps/s wall-clock aggregate, {:.0} steps/s mean per chain",
+        report.steps_per_sec, report.per_chain_steps_per_sec
+    );
     t.write_csv(&cfg.run.output_dir)?;
 
     if let Some(path) = &metrics_out {

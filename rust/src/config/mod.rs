@@ -10,5 +10,7 @@ pub mod schema;
 pub mod toml;
 
 pub use json::JsonValue;
-pub use schema::{ControlConfig, ExperimentConfig, ModelConfig, RunConfig, SamplerConfig};
+pub use schema::{
+    ControlConfig, ExperimentConfig, ModelConfig, ParallelConfig, RunConfig, SamplerConfig,
+};
 pub use toml::{TomlDoc, TomlValue};

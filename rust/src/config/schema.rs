@@ -26,6 +26,9 @@
 //! target_accept = 0.7
 //! band = 0.1
 //! adapt_every = 1000
+//!
+//! [parallel]
+//! workers = 4            # 0 = serial random-scan (default)
 //! ```
 
 use std::path::{Path, PathBuf};
@@ -152,6 +155,15 @@ impl ControlConfig {
     }
 }
 
+/// Parallel section: within-chain chromatic sweep execution.
+#[derive(Clone, Debug, Default)]
+pub struct ParallelConfig {
+    /// Worker threads per chain. 0 (the default) keeps the serial
+    /// random-scan path; ≥ 1 switches to chromatic systematic sweeps
+    /// (see `docs/PARALLEL.md`). The CLI `--workers` flag overrides this.
+    pub workers: usize,
+}
+
 /// A full experiment description.
 #[derive(Clone, Debug)]
 pub struct ExperimentConfig {
@@ -163,6 +175,8 @@ pub struct ExperimentConfig {
     pub run: RunConfig,
     /// Adaptive-control parameters.
     pub control: ControlConfig,
+    /// Within-chain parallelism.
+    pub parallel: ParallelConfig,
 }
 
 impl ExperimentConfig {
@@ -240,11 +254,15 @@ impl ExperimentConfig {
             band: get_f64("control", "band", control_defaults.band)?,
             adapt_every: get_u64("control", "adapt_every", control_defaults.adapt_every)?,
         };
+        let parallel = ParallelConfig {
+            workers: get_u64("parallel", "workers", 0)? as usize,
+        };
         Ok(Self {
             model,
             sampler,
             run,
             control,
+            parallel,
         })
     }
 
@@ -313,6 +331,14 @@ mod tests {
         assert_eq!(cfg.sampler.algorithm, "gibbs");
         assert_eq!(cfg.control.policy, "off");
         assert!(cfg.control.to_policy().unwrap().is_off());
+        assert_eq!(cfg.parallel.workers, 0);
+    }
+
+    #[test]
+    fn parallel_section_parses() {
+        let cfg = ExperimentConfig::from_doc(&doc("[parallel]\nworkers = 4")).unwrap();
+        assert_eq!(cfg.parallel.workers, 4);
+        assert!(ExperimentConfig::from_doc(&doc("[parallel]\nworkers = -1")).is_err());
     }
 
     #[test]

@@ -18,6 +18,7 @@
 //! lambda2 = 957.1
 //! batch = 250
 //! aux_energy = -1.25             (MIN-Gibbs ε / DoubleMIN ξ cache)
+//! site_rngs = 1f:5a 2e:6b ...    (parallel runs: per-site state:inc)
 //! state = 0 1 2 0 1 ...
 //! ```
 //!
@@ -59,6 +60,11 @@ pub struct Checkpoint {
     pub hyperparams: Hyperparams,
     /// Augmented-space energy cache (MIN-Gibbs ε / DoubleMIN ξ).
     pub aux_energy: Option<f64>,
+    /// Per-site PCG stream positions, one `(state, inc)` pair per
+    /// variable — written by parallel (`workers > 0`) runs, where
+    /// randomness is keyed to sites rather than a single chain stream.
+    /// `None` for serial runs and legacy files.
+    pub site_rngs: Option<Vec<(u128, u128)>>,
     /// Variable assignment.
     pub state: Vec<u16>,
 }
@@ -87,6 +93,10 @@ impl Checkpoint {
         if let Some(e) = self.aux_energy {
             out.push_str(&format!("aux_energy = {e}\n"));
         }
+        if let Some(parts) = &self.site_rngs {
+            let toks: Vec<String> = parts.iter().map(|(s, i)| format!("{s:x}:{i:x}")).collect();
+            out.push_str(&format!("site_rngs = {}\n", toks.join(" ")));
+        }
         out.push_str(&format!("state = {}\n", state.join(" ")));
         out
     }
@@ -103,6 +113,7 @@ impl Checkpoint {
         let (mut rng_state, mut rng_inc) = (None, None);
         let mut hyperparams = Hyperparams::default();
         let mut aux_energy = None;
+        let mut site_rngs = None;
         for line in lines {
             let line = line.trim();
             if line.is_empty() {
@@ -132,6 +143,23 @@ impl Checkpoint {
                 "lambda2" => hyperparams.lambda2 = Some(value.parse::<f64>()?),
                 "batch" => hyperparams.batch = Some(value.parse::<usize>()?),
                 "aux_energy" => aux_energy = Some(value.parse::<f64>()?),
+                "site_rngs" => {
+                    let parts: Result<Vec<(u128, u128)>> = value
+                        .split_whitespace()
+                        .map(|tok| {
+                            let (s, i) = tok
+                                .split_once(':')
+                                .with_context(|| format!("bad site_rngs token {tok:?}"))?;
+                            Ok((
+                                u128::from_str_radix(s, 16)
+                                    .context("bad site_rngs state (hex u128)")?,
+                                u128::from_str_radix(i, 16)
+                                    .context("bad site_rngs inc (hex u128)")?,
+                            ))
+                        })
+                        .collect();
+                    site_rngs = Some(parts?);
+                }
                 "state" => {
                     let vs: Result<Vec<u16>, _> =
                         value.split_whitespace().map(|t| t.parse::<u16>()).collect();
@@ -155,6 +183,7 @@ impl Checkpoint {
             rng,
             hyperparams,
             aux_energy,
+            site_rngs,
             state: state.context("missing state")?,
         })
     }
@@ -194,6 +223,7 @@ mod tests {
                 batch: None,
             },
             aux_energy: Some(-1.25),
+            site_rngs: None,
             state: vec![0, 1, 2, 9, 0],
         }
     }
@@ -222,6 +252,31 @@ mod tests {
             parsed.aux_energy.unwrap().to_bits(),
             c.aux_energy.unwrap().to_bits()
         );
+    }
+
+    /// Parallel checkpoints carry one stream position per site.
+    #[test]
+    fn site_rngs_roundtrip() {
+        let mut c = sample();
+        c.site_rngs = Some(vec![
+            (u128::MAX, 1),
+            (0, u128::MAX),
+            ((0xdead_beef_u128 << 64) | 0x1234, 0x5555),
+        ]);
+        let parsed = Checkpoint::from_text(&c.to_text()).unwrap();
+        assert_eq!(c, parsed);
+    }
+
+    #[test]
+    fn rejects_malformed_site_rngs() {
+        let base = "mbgibbs-checkpoint v2\niter = 1\nseed = 2\nchain = 0\n";
+        for bad in ["site_rngs = ff", "site_rngs = ff:zz", "site_rngs = ff:1 3"] {
+            let text = format!("{base}{bad}\nstate = 0 1\n");
+            assert!(
+                Checkpoint::from_text(&text).is_err(),
+                "accepted malformed line {bad:?}"
+            );
+        }
     }
 
     #[test]

@@ -2,15 +2,14 @@
 //!
 //! The coordinator owns process topology: it fans a workload out over
 //! OS threads (one chain per thread, each with an independent split RNG
-//! stream), drives per-chain samplers, streams samples into [`sink`]s,
-//! writes [`checkpoint`]s, and aggregates a [`RunReport`].
+//! stream, optionally running within-chain parallel sweeps), drives
+//! per-chain samplers, streams samples into [`sink`]s, writes
+//! [`checkpoint`]s, and aggregates a [`RunReport`].
 
 pub mod checkpoint;
 pub mod runner;
 pub mod sink;
 
 pub use checkpoint::Checkpoint;
-pub use runner::{
-    run_chains, run_chains_with_metrics, ChainReport, RunReport, RunSpec, RunSpecBuilder,
-};
+pub use runner::{run_chains, ChainReport, RunOptions, RunReport, RunSpec, RunSpecBuilder};
 pub use sink::{EnergyTraceSink, MarginalTrajectorySink, SampleSink};

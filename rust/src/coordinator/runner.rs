@@ -9,6 +9,12 @@
 //! each chain also gets a [`Controller`] that periodically reviews the
 //! live metrics and error trajectory and retunes the sampler's λ / B
 //! (see [`crate::control`]).
+//!
+//! Parallelism: chains always run on their own threads; with
+//! `workers > 0` each chain additionally runs *within-chain* parallel
+//! sweeps on the chromatic engine ([`crate::runtime::parallel`]) —
+//! site-local samplers only, control off, one RNG stream per site so
+//! results are identical for any worker count.
 
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
@@ -22,6 +28,7 @@ use crate::graph::FactorGraph;
 use crate::metrics::trace::{EventKind, TraceBuffer, TraceEvent};
 use crate::metrics::{labeled, MetricsHub, SamplerMetrics, Snapshot};
 use crate::rng::Pcg64;
+use crate::runtime::parallel::ChromaticSweepEngine;
 use crate::samplers::Sampler;
 
 use super::checkpoint::Checkpoint;
@@ -66,6 +73,11 @@ pub struct RunSpec {
     /// Adaptive-control policy; [`ControlPolicy::Off`] (default) runs
     /// hyperparameters exactly as configured.
     pub control: ControlPolicy,
+    /// Within-chain parallel workers; 0 (default) is the serial
+    /// random-scan path. `workers >= 1` switches the chain to chromatic
+    /// systematic sweeps ([`crate::runtime::parallel`]); results are
+    /// identical for every worker count ≥ 1, so pick by core budget.
+    pub workers: usize,
 }
 
 impl RunSpec {
@@ -83,6 +95,7 @@ impl RunSpec {
             progress_every: 0,
             trace_capacity: 0,
             control: ControlPolicy::Off,
+            workers: 0,
         }
     }
 
@@ -94,12 +107,6 @@ impl RunSpec {
         }
     }
 
-    /// Sensible defaults: 1 chain, 10⁶ iterations, paper's unmixed init.
-    #[deprecated(note = "use RunSpec::builder(..) — mutate-the-fields construction \
-                         skips validation and predates the control policy")]
-    pub fn new(sampler: SamplerSpec) -> Self {
-        Self::defaults(sampler)
-    }
 }
 
 /// Fluent builder for [`RunSpec`]; [`RunSpecBuilder::build`] validates
@@ -176,6 +183,15 @@ impl RunSpecBuilder {
         self
     }
 
+    /// Within-chain parallel workers (default 0 = serial random scan).
+    /// Requires a site-local sampler (Gibbs, Local, MGPMH) and control
+    /// off; see [`crate::runtime::parallel`] for the determinism
+    /// contract.
+    pub fn workers(mut self, workers: usize) -> Self {
+        self.spec.workers = workers;
+        self
+    }
+
     /// Validate and produce the [`RunSpec`].
     pub fn build(self) -> Result<RunSpec> {
         let s = &self.spec;
@@ -195,6 +211,21 @@ impl RunSpecBuilder {
             bail!("checkpoint_every requires a checkpoint_dir");
         }
         s.control.validate()?;
+        if s.workers > 0 {
+            if !s.sampler.supports_parallel() {
+                bail!(
+                    "workers > 0 needs a site-local sampler (Gibbs, Local, MGPMH); \
+                     {:?} carries global augmented-space state",
+                    s.sampler
+                );
+            }
+            if s.control != ControlPolicy::Off {
+                bail!(
+                    "adaptive control is not supported with workers > 0; \
+                     tune serially, then resume the checkpoint in parallel"
+                );
+            }
+        }
         Ok(self.spec)
     }
 }
@@ -227,8 +258,15 @@ pub struct ChainReport {
 pub struct RunReport {
     /// Per-chain reports.
     pub chains: Vec<ChainReport>,
-    /// Steps per second aggregated over chains.
+    /// Wall-clock aggregate throughput: every step executed in this
+    /// process divided by the elapsed time of the whole fan-out — what a
+    /// stopwatch on the run observes. Chains that finish early idle
+    /// their thread, so this is ≤ chains × per-chain throughput.
     pub steps_per_sec: f64,
+    /// Mean single-chain throughput: each chain's executed steps over
+    /// its own busy time, averaged — the per-thread sampler speed,
+    /// independent of fan-out skew.
+    pub per_chain_steps_per_sec: f64,
     /// Mean factor evaluations per iteration.
     pub evals_per_iter: f64,
     /// End-of-run snapshot of every metric the run touched.
@@ -242,41 +280,65 @@ impl RunReport {
     }
 }
 
-/// Run `spec.chains` independent chains in parallel threads.
-pub fn run_chains(graph: &FactorGraph, spec: &RunSpec) -> RunReport {
-    run_chains_with_metrics(graph, spec, &Arc::new(MetricsHub::new()))
+/// Caller-side options orthogonal to *what* runs (that is [`RunSpec`]'s
+/// job): today, whose metrics hub to record into.
+#[derive(Clone, Default)]
+pub struct RunOptions {
+    /// Externally owned metrics hub — lets the caller watch the
+    /// `sampler_*{chain="k",...}` counter families live from another
+    /// thread while the run progresses (e.g. the CLI's periodic
+    /// `--metrics-every` flusher). `None` gives the run a private hub;
+    /// its end-of-run snapshot still lands in [`RunReport::metrics`].
+    pub hub: Option<Arc<MetricsHub>>,
 }
 
-/// [`run_chains`] with an externally owned metrics hub: the caller can
-/// watch the `sampler_*{chain="k",...}` counter families live from
-/// another thread while the run progresses (e.g. the CLI's periodic
-/// `--metrics-every` flusher).
-pub fn run_chains_with_metrics(
-    graph: &FactorGraph,
-    spec: &RunSpec,
-    hub: &Arc<MetricsHub>,
-) -> RunReport {
+impl RunOptions {
+    /// Record into an externally owned hub.
+    pub fn with_hub(hub: Arc<MetricsHub>) -> Self {
+        Self { hub: Some(hub) }
+    }
+}
+
+/// Run `spec.chains` independent chains in parallel threads.
+pub fn run_chains(graph: &FactorGraph, spec: &RunSpec, opts: &RunOptions) -> RunReport {
+    let hub = opts
+        .hub
+        .clone()
+        .unwrap_or_else(|| Arc::new(MetricsHub::new()));
     let mut master = Pcg64::seeded(spec.seed);
     let streams: Vec<Pcg64> = (0..spec.chains).map(|k| master.split(k as u64)).collect();
 
+    let wall = Instant::now();
     let reports: Vec<ChainReport> = std::thread::scope(|scope| {
         let handles: Vec<_> = streams
             .into_iter()
             .enumerate()
             .map(|(k, rng)| {
                 let hub = hub.clone();
-                scope.spawn(move || run_one_chain(graph, spec, k, rng, &hub))
+                scope.spawn(move || {
+                    if spec.workers > 0 {
+                        run_one_chain_parallel(graph, spec, k, rng, &hub)
+                    } else {
+                        run_one_chain(graph, spec, k, rng, &hub)
+                    }
+                })
             })
             .collect();
         handles.into_iter().map(|h| h.join().unwrap()).collect()
     });
+    let wall_secs = wall.elapsed().as_secs_f64();
 
-    let total_secs: f64 = reports.iter().map(|r| r.seconds).sum();
     let executed_steps: u64 = reports.iter().map(|r| r.steps_executed).sum();
     let logical_steps = (spec.iters * spec.chains as u64).max(1);
     let total_evals: u64 = reports.iter().map(|r| r.factor_evals).sum();
+    let per_chain_steps_per_sec = reports
+        .iter()
+        .map(|r| r.steps_executed as f64 / r.seconds.max(1e-12))
+        .sum::<f64>()
+        / reports.len() as f64;
     RunReport {
-        steps_per_sec: executed_steps as f64 / (total_secs / spec.chains as f64).max(1e-12),
+        steps_per_sec: executed_steps as f64 / wall_secs.max(1e-12),
+        per_chain_steps_per_sec,
         evals_per_iter: total_evals as f64 / logical_steps as f64,
         chains: reports,
         metrics: hub.snapshot(),
@@ -300,6 +362,7 @@ fn save_checkpoint(
     state: &[u16],
     m: &SamplerMetrics,
     rng: &Pcg64,
+    site_rngs: Option<Vec<(u128, u128)>>,
     sampler: &dyn Sampler,
 ) {
     let _ = std::fs::create_dir_all(dir);
@@ -313,6 +376,7 @@ fn save_checkpoint(
         rng: Some(rng.state_parts()),
         hyperparams: sampler.hyperparams(),
         aux_energy: sampler.aux_energy(),
+        site_rngs,
         state: state.to_vec(),
     };
     ckpt.save(&dir.join(format!("chain{k}.ckpt")))
@@ -415,7 +479,7 @@ fn run_one_chain(
                 let action = c.review(it + 1, sampler.as_mut(), &sink.trajectory);
                 if action.save_checkpoint {
                     if let Some(dir) = &spec.checkpoint_dir {
-                        save_checkpoint(dir, spec, k, it + 1, &state, &m, &rng, sampler.as_ref());
+                        save_checkpoint(dir, spec, k, it + 1, &state, &m, &rng, None, sampler.as_ref());
                         crate::trace_event!(trace_buf, EventKind::Checkpoint, it + 1, 0);
                     }
                 }
@@ -423,11 +487,144 @@ fn run_one_chain(
         }
         if spec.checkpoint_every > 0 && (it + 1) % spec.checkpoint_every == 0 {
             if let Some(dir) = &spec.checkpoint_dir {
-                save_checkpoint(dir, spec, k, it + 1, &state, &m, &rng, sampler.as_ref());
+                save_checkpoint(dir, spec, k, it + 1, &state, &m, &rng, None, sampler.as_ref());
                 crate::trace_event!(trace_buf, EventKind::Checkpoint, it + 1, 0);
             }
         }
     }
+    {
+        use super::sink::SampleSink;
+        sink.on_finish(&state);
+    }
+    let seconds = start.elapsed().as_secs_f64();
+    let final_error = sink.estimator().l2_error_vs_uniform();
+    ChainReport {
+        chain: k,
+        trajectory: sink.trajectory,
+        final_error,
+        factor_evals: m.factor_evals.get(),
+        acceptance: m.acceptance(),
+        steps_executed: spec.iters - start_iter,
+        seconds,
+        final_state: state,
+        trace: trace_buf.events_in_order(),
+    }
+}
+
+/// One chain on the chromatic sweep engine (`spec.workers >= 1`).
+///
+/// Differences from the serial path, all at sweep granularity because
+/// intermediate states only materialize at color-class boundaries:
+/// the marginal sink samples once per sweep (n site updates) instead of
+/// once per step; progress lines and periodic checkpoints fire at the
+/// first sweep boundary on or after each configured multiple; and
+/// checkpoints persist every per-site stream position so `--resume`
+/// replays bit-exactly. Step/eval counters keep per-site-update meaning
+/// — the worker samplers share this chain's [`SamplerMetrics`].
+fn run_one_chain_parallel(
+    graph: &FactorGraph,
+    spec: &RunSpec,
+    k: usize,
+    mut rng: Pcg64,
+    hub: &MetricsHub,
+) -> ChainReport {
+    let n = graph.n();
+    let d = graph.domain_size() as usize;
+    let mut state = spec.init.clone().unwrap_or_else(|| vec![0u16; n]);
+    assert_eq!(state.len(), n, "init state has wrong length");
+    // The probe sampler never steps: it carries the name for metric
+    // labels and the (possibly checkpoint-restored) hyperparameters for
+    // checkpoint writes. The sampling instances live in the engine's
+    // workers, one per thread, sharing `m`.
+    let mut probe = spec.sampler.build(graph);
+
+    let chain_label = k.to_string();
+    let m = SamplerMetrics::register(hub, &[("chain", &chain_label), ("sampler", probe.name())]);
+    let mut trace_buf = TraceBuffer::new(k as u32, spec.trace_capacity);
+
+    let mut start_iter = 0u64;
+    let mut saved_site_rngs: Option<Vec<(u128, u128)>> = None;
+    if spec.resume {
+        if let Some(dir) = &spec.checkpoint_dir {
+            let path = dir.join(format!("chain{k}.ckpt"));
+            if path.exists() {
+                let ckpt = Checkpoint::load(&path).expect("resume: unreadable checkpoint");
+                assert_eq!(ckpt.seed, spec.seed, "resume: checkpoint seed mismatch");
+                assert_eq!(ckpt.chain, k, "resume: checkpoint chain mismatch");
+                assert_eq!(ckpt.state.len(), n, "resume: checkpoint state length mismatch");
+                assert!(
+                    ckpt.iter <= spec.iters,
+                    "resume: checkpoint is past the requested iteration count"
+                );
+                state = ckpt.state;
+                start_iter = ckpt.iter;
+                m.steps.add(ckpt.iter);
+                m.factor_evals.add(ckpt.factor_evals);
+                m.accepts.add(ckpt.accepted);
+                m.proposals.add(ckpt.proposed);
+                if !ckpt.hyperparams.is_empty() {
+                    probe.set_hyperparams(&ckpt.hyperparams);
+                }
+                saved_site_rngs = ckpt.site_rngs;
+            }
+        }
+    }
+
+    let mut engine = ChromaticSweepEngine::new(
+        graph,
+        spec.sampler,
+        spec.workers,
+        &mut rng,
+        m.clone(),
+        hub,
+        &chain_label,
+    );
+    engine.set_hyperparams(probe.hyperparams());
+    if let Some(parts) = &saved_site_rngs {
+        engine
+            .restore_site_rngs(parts)
+            .expect("resume: checkpoint site streams do not match this graph");
+    }
+
+    let mut sink = MarginalTrajectorySink::new(n, d, spec.record_every);
+    let start = Instant::now();
+    // A boundary at `iter` fires cadence `every` if it is the first
+    // boundary at or past a multiple of `every` since `prev`.
+    let crossed = |prev: u64, iter: u64, every: u64| iter / every > prev / every;
+    let mut prev_iter = start_iter;
+    engine.run(&mut state, start_iter, spec.iters, &mut |ctx| {
+        use super::sink::SampleSink;
+        sink.on_sample(ctx.iter, ctx.state);
+        if spec.progress_every > 0 && crossed(prev_iter, ctx.iter, spec.progress_every) {
+            let done = ctx.iter - start_iter;
+            let rate = done as f64 / start.elapsed().as_secs_f64().max(1e-9);
+            eprintln!(
+                "[mbgibbs] chain {k}: iter {}/{} ({rate:.0} steps/s, {} factor evals, {} workers)",
+                ctx.iter,
+                spec.iters,
+                m.factor_evals.get(),
+                spec.workers,
+            );
+            crate::trace_event!(trace_buf, EventKind::Progress, ctx.iter, 0);
+        }
+        if spec.checkpoint_every > 0 && crossed(prev_iter, ctx.iter, spec.checkpoint_every) {
+            if let Some(dir) = &spec.checkpoint_dir {
+                save_checkpoint(
+                    dir,
+                    spec,
+                    k,
+                    ctx.iter,
+                    ctx.state,
+                    &m,
+                    &rng,
+                    Some(ctx.site_rng_parts()),
+                    probe.as_ref(),
+                );
+                crate::trace_event!(trace_buf, EventKind::Checkpoint, ctx.iter, 0);
+            }
+        }
+        prev_iter = ctx.iter;
+    });
     {
         use super::sink::SampleSink;
         sink.on_finish(&state);
@@ -462,7 +659,7 @@ mod tests {
             .record_every(5_000)
             .build()
             .unwrap();
-        let report = run_chains(&g, &spec);
+        let report = run_chains(&g, &spec, &RunOptions::default());
         assert_eq!(report.chains.len(), 3);
         for c in &report.chains {
             assert!(c.final_error < 0.2, "chain {} error {}", c.chain, c.final_error);
@@ -499,20 +696,72 @@ mod tests {
             .is_ok());
     }
 
-    /// The deprecated constructor must stay a field-for-field alias of
-    /// the builder defaults (external code still mutates it directly).
+    /// The parallel engine only accepts combinations it can run
+    /// correctly: site-local samplers, control off.
     #[test]
-    #[allow(deprecated)]
-    fn legacy_constructor_matches_builder_defaults() {
-        let old = RunSpec::new(SamplerSpec::Gibbs(EnergyPath::Generic));
-        let new = RunSpec::builder(SamplerSpec::Gibbs(EnergyPath::Generic))
-            .build()
-            .unwrap();
-        assert_eq!(old.iters, new.iters);
-        assert_eq!(old.chains, new.chains);
-        assert_eq!(old.seed, new.seed);
-        assert_eq!(old.record_every, new.record_every);
-        assert_eq!(old.control, new.control);
+    fn builder_validates_parallel_combinations() {
+        let ok = RunSpec::builder(SamplerSpec::Gibbs(EnergyPath::Specialized))
+            .workers(4)
+            .build();
+        assert!(ok.is_ok());
+        assert_eq!(ok.unwrap().workers, 4);
+        assert!(
+            RunSpec::builder(SamplerSpec::MinGibbs { lambda: 10.0 })
+                .workers(2)
+                .build()
+                .is_err(),
+            "MIN-Gibbs carries global cached ε; must be rejected"
+        );
+        assert!(
+            RunSpec::builder(SamplerSpec::DoubleMin { lambda1: 4.0, lambda2: 16.0 })
+                .workers(2)
+                .build()
+                .is_err(),
+            "DoubleMIN carries global cached ξ; must be rejected"
+        );
+        assert!(
+            RunSpec::builder(SamplerSpec::Mgpmh { lambda: 10.0 })
+                .workers(2)
+                .control(ControlPolicy::target_acceptance(0.6))
+                .build()
+                .is_err(),
+            "adaptive control must be rejected with workers > 0"
+        );
+    }
+
+    /// Dispatch through the public entry point: a parallel spec must
+    /// produce worker-count-invariant results, flow `parallel_*` metrics
+    /// into the report snapshot, and fill both throughput fields.
+    #[test]
+    fn parallel_workers_run_and_report() {
+        let g = models::ising_multipartite(3, 6, 1.5);
+        let n = g.n() as u64;
+        let mk = |w: usize| {
+            RunSpec::builder(SamplerSpec::Gibbs(EnergyPath::Specialized))
+                .iters(n * 50)
+                .record_every(n * 10)
+                .workers(w)
+                .build()
+                .unwrap()
+        };
+        let r1 = run_chains(&g, &mk(1), &RunOptions::default());
+        let r4 = run_chains(&g, &mk(4), &RunOptions::default());
+        assert_eq!(
+            r1.chains[0].final_state, r4.chains[0].final_state,
+            "worker count changed the chain"
+        );
+        assert_eq!(r4.chains[0].steps_executed, n * 50);
+        assert!(r4.steps_per_sec > 0.0);
+        assert!(r4.per_chain_steps_per_sec > 0.0);
+        assert_eq!(
+            r4.metrics.counter("parallel_sweeps_total{chain=\"0\"}"),
+            Some(50)
+        );
+        assert_eq!(
+            r4.metrics
+                .counter("sampler_steps_total{chain=\"0\",sampler=\"gibbs\"}"),
+            Some(n * 50)
+        );
     }
 
     #[test]
@@ -523,7 +772,7 @@ mod tests {
             .chains(2)
             .build()
             .unwrap();
-        let report = run_chains(&g, &spec);
+        let report = run_chains(&g, &spec, &RunOptions::default());
         // Overwhelmingly the final states should differ.
         assert_ne!(
             report.chains[0].final_state, report.chains[1].final_state,
@@ -539,8 +788,8 @@ mod tests {
             .chains(2)
             .build()
             .unwrap();
-        let a = run_chains(&g, &spec);
-        let b = run_chains(&g, &spec);
+        let a = run_chains(&g, &spec, &RunOptions::default());
+        let b = run_chains(&g, &spec, &RunOptions::default());
         for (ca, cb) in a.chains.iter().zip(b.chains.iter()) {
             assert_eq!(ca.final_state, cb.final_state);
             assert_eq!(ca.factor_evals, cb.factor_evals);
@@ -558,7 +807,7 @@ mod tests {
             .checkpoint_every(400)
             .build()
             .unwrap();
-        let report = run_chains(&g, &spec);
+        let report = run_chains(&g, &spec, &RunOptions::default());
         for k in 0..2 {
             let ckpt =
                 crate::coordinator::Checkpoint::load(&dir.join(format!("chain{k}.ckpt")))
@@ -582,7 +831,7 @@ mod tests {
             .iters(10_000)
             .build()
             .unwrap();
-        let report = run_chains_with_metrics(&g, &spec, &hub);
+        let report = run_chains(&g, &spec, &RunOptions::with_hub(hub.clone()));
         let snap = hub.snapshot();
         let steps = snap
             .counter("sampler_steps_total{chain=\"0\",sampler=\"gibbs\"}")
@@ -609,7 +858,7 @@ mod tests {
             .init(vec![2, 2, 2])
             .build()
             .unwrap();
-        let report = run_chains(&g, &spec);
+        let report = run_chains(&g, &spec, &RunOptions::default());
         // After one step only one variable may have changed.
         let diff = report.chains[0]
             .final_state
@@ -634,7 +883,7 @@ mod tests {
             .checkpoint_every(300)
             .build()
             .unwrap();
-        let first = run_chains(&g, &spec);
+        let first = run_chains(&g, &spec, &RunOptions::default());
         let evals_at_600 = first.chains[0].factor_evals;
 
         // Resume the same run with a higher target: counters continue.
@@ -645,7 +894,7 @@ mod tests {
             .resume(true)
             .build()
             .unwrap();
-        let resumed = run_chains(&g, &spec);
+        let resumed = run_chains(&g, &spec, &RunOptions::default());
         let c = &resumed.chains[0];
         assert_eq!(c.steps_executed, 400, "should resume at iter 600");
         assert!(
@@ -674,7 +923,7 @@ mod tests {
             .iters(1_000)
             .build()
             .unwrap();
-        let full = run_chains(&g, &uninterrupted);
+        let full = run_chains(&g, &uninterrupted, &RunOptions::default());
 
         let first_leg = RunSpec::builder(SamplerSpec::MinGibbs { lambda: 40.0 })
             .iters(600)
@@ -682,14 +931,14 @@ mod tests {
             .checkpoint_every(600)
             .build()
             .unwrap();
-        run_chains(&g, &first_leg);
+        run_chains(&g, &first_leg, &RunOptions::default());
         let second_leg = RunSpec::builder(SamplerSpec::MinGibbs { lambda: 40.0 })
             .iters(1_000)
             .checkpoint_dir(dir.clone())
             .resume(true)
             .build()
             .unwrap();
-        let resumed = run_chains(&g, &second_leg);
+        let resumed = run_chains(&g, &second_leg, &RunOptions::default());
 
         assert_eq!(
             full.chains[0].final_state, resumed.chains[0].final_state,
@@ -717,7 +966,7 @@ mod tests {
             .checkpoint_every(2_000)
             .build()
             .unwrap();
-        run_chains(&g, &spec);
+        run_chains(&g, &spec, &RunOptions::default());
         let ckpt = Checkpoint::load(&dir.join("chain0.ckpt")).unwrap();
         let tuned = ckpt.hyperparams.lambda.expect("checkpoint missing λ");
         assert!(tuned < 500.0, "controller should have shrunk λ, got {tuned}");
@@ -729,7 +978,7 @@ mod tests {
             .resume(true)
             .build()
             .unwrap();
-        run_chains(&g, &resumed_spec);
+        run_chains(&g, &resumed_spec, &RunOptions::default());
         let after = Checkpoint::load(&dir.join("chain0.ckpt")).unwrap();
         assert_eq!(after.iter, 2_500);
         assert_eq!(

@@ -1,0 +1,219 @@
+//! Greedy variable coloring over the factor adjacency.
+//!
+//! Two variables are adjacent iff some factor touches both; variables of
+//! the same color therefore share no factor, so their full conditionals
+//! are independent given the rest of the state and a whole color class
+//! can be resampled concurrently (chromatic Gibbs scheduling, cf. the
+//! hierarchy-width line of work on which parallelism factor-graph
+//! structure permits). The executor in [`crate::runtime::parallel`]
+//! sweeps one class at a time.
+//!
+//! The coloring is the classic Welsh–Powell greedy: visit variables in
+//! order of decreasing adjacency degree and give each the smallest color
+//! unused among its neighbors. That uses at most Δ_adj + 1 colors and is
+//! exact on the paper's complete-graph workloads (n colors — no
+//! parallelism to be had there, which is itself worth surfacing).
+//! Computed once per graph and cached on [`FactorGraph`].
+
+use super::stats::ColoringStats;
+use super::FactorGraph;
+
+/// A proper coloring of the variable-adjacency graph.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Coloring {
+    colors: Vec<u32>,
+    classes: Vec<Vec<u32>>,
+}
+
+impl Coloring {
+    /// Welsh–Powell greedy coloring of `graph`'s variable adjacency.
+    pub fn compute(graph: &FactorGraph) -> Self {
+        let n = graph.n();
+        // Variable adjacency from the factor structure: every pair of
+        // variables co-occurring in a factor is an edge (both directions;
+        // sort + dedup below collapses multi-edges from parallel factors).
+        let mut neighbors: Vec<Vec<u32>> = vec![Vec::new(); n];
+        let mut vars_scratch: Vec<u32> = Vec::new();
+        for f in graph.factors() {
+            vars_scratch.clear();
+            f.for_each_var(|v| vars_scratch.push(v as u32));
+            for (a, &va) in vars_scratch.iter().enumerate() {
+                for &vb in &vars_scratch[a + 1..] {
+                    if va != vb {
+                        neighbors[va as usize].push(vb);
+                        neighbors[vb as usize].push(va);
+                    }
+                }
+            }
+        }
+        for adj in neighbors.iter_mut() {
+            adj.sort_unstable();
+            adj.dedup();
+        }
+
+        // Degree-descending visit order (ties broken by index for
+        // determinism).
+        let mut order: Vec<u32> = (0..n as u32).collect();
+        order.sort_by_key(|&i| std::cmp::Reverse(neighbors[i as usize].len()));
+
+        const UNCOLORED: u32 = u32::MAX;
+        let mut colors = vec![UNCOLORED; n];
+        let mut used = Vec::new(); // used[c] == generation marker
+        let mut generation = 0u32;
+        for &i in &order {
+            generation += 1;
+            for &nb in &neighbors[i as usize] {
+                let c = colors[nb as usize];
+                if c != UNCOLORED {
+                    if used.len() <= c as usize {
+                        used.resize(c as usize + 1, 0);
+                    }
+                    used[c as usize] = generation;
+                }
+            }
+            let mut c = 0u32;
+            while (c as usize) < used.len() && used[c as usize] == generation {
+                c += 1;
+            }
+            colors[i as usize] = c;
+        }
+
+        let num_colors = colors.iter().map(|&c| c + 1).max().unwrap_or(0) as usize;
+        let mut classes: Vec<Vec<u32>> = vec![Vec::new(); num_colors];
+        for (i, &c) in colors.iter().enumerate() {
+            classes[c as usize].push(i as u32);
+        }
+        Self { colors, classes }
+    }
+
+    /// The color of variable `i`.
+    #[inline]
+    pub fn color(&self, i: usize) -> u32 {
+        self.colors[i]
+    }
+
+    /// Number of colors used.
+    pub fn num_colors(&self) -> usize {
+        self.classes.len()
+    }
+
+    /// The color classes: `classes()[c]` lists the variables with color
+    /// `c`, in increasing index order.
+    pub fn classes(&self) -> &[Vec<u32>] {
+        &self.classes
+    }
+
+    /// The variables of color `c`.
+    pub fn class(&self, c: usize) -> &[u32] {
+        &self.classes[c]
+    }
+
+    /// Summary statistics for reports and the metrics surface.
+    pub fn stats(&self) -> ColoringStats {
+        ColoringStats {
+            num_colors: self.num_colors(),
+            largest_class: self.classes.iter().map(Vec::len).max().unwrap_or(0),
+            smallest_class: self.classes.iter().map(Vec::len).min().unwrap_or(0),
+        }
+    }
+
+    /// Check properness against the graph that produced this coloring:
+    /// no factor may touch two variables of the same color.
+    pub fn is_proper(&self, graph: &FactorGraph) -> bool {
+        let mut vars = Vec::new();
+        for f in graph.factors() {
+            vars.clear();
+            f.for_each_var(|v| vars.push(v));
+            for (a, &va) in vars.iter().enumerate() {
+                for &vb in &vars[a + 1..] {
+                    if va != vb && self.colors[va] == self.colors[vb] {
+                        return false;
+                    }
+                }
+            }
+        }
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::models;
+    use crate::graph::FactorGraphBuilder;
+
+    #[test]
+    fn proper_on_paper_ising_and_potts() {
+        // Satellite requirement: no two adjacent variables share a color
+        // on the paper's §B models. Both are complete graphs, so the
+        // greedy coloring must also degenerate to n singleton classes.
+        for g in [models::paper_ising().graph, models::paper_potts().graph] {
+            let c = g.coloring();
+            assert!(c.is_proper(&g));
+            assert_eq!(c.num_colors(), g.n());
+        }
+    }
+
+    #[test]
+    fn grid_uses_two_colors() {
+        // A 4-neighbor grid is bipartite: the greedy coloring on the
+        // degree-ordered visit finds the 2-coloring.
+        let g = models::ising_grid_local(8, 0.4);
+        let c = g.coloring();
+        assert!(c.is_proper(&g));
+        assert_eq!(c.num_colors(), 2);
+        let s = c.stats();
+        assert_eq!(s.num_colors, 2);
+        assert_eq!(s.largest_class + s.smallest_class, g.n());
+    }
+
+    #[test]
+    fn classes_partition_variables() {
+        let g = models::potts_random(60, 3, 8, 0.5, 7);
+        let c = g.coloring();
+        assert!(c.is_proper(&g));
+        let total: usize = c.classes().iter().map(Vec::len).sum();
+        assert_eq!(total, g.n());
+        for (color, class) in c.classes().iter().enumerate() {
+            assert!(!class.is_empty(), "empty color class {color}");
+            for &v in class {
+                assert_eq!(c.color(v as usize), color as u32);
+            }
+        }
+    }
+
+    #[test]
+    fn multipartite_colors_match_parts() {
+        // The parallel bench workload: complete 5-partite graph, one
+        // color per part.
+        let g = models::ising_multipartite(5, 8, 2.0);
+        let c = g.coloring();
+        assert!(c.is_proper(&g));
+        assert_eq!(c.num_colors(), 5);
+        let s = c.stats();
+        assert_eq!((s.largest_class, s.smallest_class), (8, 8));
+    }
+
+    #[test]
+    fn isolated_variables_share_one_color() {
+        // Variables untouched by any factor are mutually non-adjacent.
+        let mut b = FactorGraphBuilder::new(4, 2);
+        b.add_potts_pair(0, 1, 0.5);
+        let g = b.build();
+        let c = g.coloring();
+        assert!(c.is_proper(&g));
+        assert_eq!(c.num_colors(), 2);
+        assert_eq!(c.color(2), c.color(3));
+        assert_ne!(c.color(0), c.color(1));
+    }
+
+    #[test]
+    fn higher_arity_table_factor_separates_all_its_vars() {
+        let mut b = FactorGraphBuilder::new(3, 2);
+        b.add_table(vec![0, 1, 2], vec![0.0; 8]);
+        let g = b.build();
+        let c = g.coloring();
+        assert!(c.is_proper(&g));
+        assert_eq!(c.num_colors(), 3);
+    }
+}

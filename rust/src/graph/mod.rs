@@ -7,13 +7,17 @@
 //! degree Δ) are computed at build time and cached.
 
 pub mod builder;
+pub mod coloring;
 pub mod factor;
 pub mod models;
 pub mod stats;
 
 pub use builder::FactorGraphBuilder;
+pub use coloring::Coloring;
 pub use factor::Factor;
-pub use stats::GraphStats;
+pub use stats::{ColoringStats, GraphStats};
+
+use std::sync::OnceLock;
 
 /// A variable assignment: `state[i] ∈ {0, .., D-1}`.
 pub type State = Vec<u16>;
@@ -30,6 +34,9 @@ pub struct FactorGraph {
     adj_offsets: Vec<u32>,
     adj_factors: Vec<u32>,
     stats: GraphStats,
+    // Lazily computed greedy coloring (chromatic parallel scheduling);
+    // a clone carries the already-computed coloring along.
+    coloring: OnceLock<Coloring>,
 }
 
 impl FactorGraph {
@@ -68,6 +75,7 @@ impl FactorGraph {
             adj_offsets,
             adj_factors,
             stats,
+            coloring: OnceLock::new(),
         }
     }
 
@@ -118,6 +126,13 @@ impl FactorGraph {
     /// Cached Definition-1 statistics (Δ, L, Ψ, per-variable L_i).
     pub fn stats(&self) -> &GraphStats {
         &self.stats
+    }
+
+    /// The greedy variable coloring (computed on first use, then cached).
+    /// Same-color variables share no factor, so a whole color class can
+    /// be resampled concurrently — see [`crate::runtime::parallel`].
+    pub fn coloring(&self) -> &Coloring {
+        self.coloring.get_or_init(|| Coloring::compute(self))
     }
 
     /// Evaluate factor `fid` on `state`.

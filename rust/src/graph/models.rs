@@ -199,6 +199,29 @@ pub fn table1_workload_fixed_psi(n: usize, d: u16, psi_target: f64) -> FactorGra
     b.build()
 }
 
+/// Complete multipartite Ising workload for the chromatic parallel
+/// executor: `parts` blocks of `per_part` variables each, every
+/// cross-block pair connected, no within-block edges. Δ =
+/// (parts − 1)·per_part, and the variable-adjacency coloring has exactly
+/// `parts` classes of `per_part` variables — big color classes over a
+/// high-degree model, the regime where sweeping a class in parallel
+/// pays. Uniform weights scaled so L = `l_target` (Ising M_φ = 2w).
+pub fn ising_multipartite(parts: usize, per_part: usize, l_target: f64) -> FactorGraph {
+    assert!(parts >= 2 && per_part >= 1);
+    let degree = (parts - 1) * per_part;
+    let w = l_target / (2.0 * degree as f64);
+    let n = parts * per_part;
+    let mut b = FactorGraphBuilder::new(n, 2);
+    for i in 0..n as u32 {
+        for j in (i + 1)..n as u32 {
+            if i as usize / per_part != j as usize / per_part {
+                b.add_ising_pair(i, j, w);
+            }
+        }
+    }
+    b.build()
+}
+
 /// Tiny random model with enumerable state space (for the exact-chain
 /// spectral validation): fully connected Potts over `n ≤ 8` variables
 /// with Uniform(0, max_w] weights.
@@ -309,6 +332,17 @@ mod tests {
             assert!((s.psi - 8.0).abs() < 1e-9, "n={n}: psi={}", s.psi);
             assert!((s.l - 16.0 / n as f64).abs() < 1e-9, "n={n}: l={}", s.l);
         }
+    }
+
+    #[test]
+    fn multipartite_degree_and_l() {
+        let g = ising_multipartite(5, 10, 2.0);
+        let s = g.stats();
+        assert_eq!(g.n(), 50);
+        assert_eq!(s.delta, 40);
+        assert!((s.l - 2.0).abs() < 1e-9, "l = {}", s.l);
+        // Every variable sees all 40 cross-part neighbors exactly once.
+        assert_eq!(g.num_factors(), 50 * 40 / 2);
     }
 
     #[test]

@@ -13,6 +13,20 @@ pub struct GraphStats {
     pub per_var_l: Vec<f64>,
 }
 
+/// Summary of a [`crate::graph::Coloring`]: how much chromatic
+/// parallelism the factor structure permits. `num_colors == n` (complete
+/// graphs) means none; few colors with large, balanced classes is the
+/// favorable regime.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ColoringStats {
+    /// Number of color classes.
+    pub num_colors: usize,
+    /// Size of the largest class (the per-sweep parallelism ceiling).
+    pub largest_class: usize,
+    /// Size of the smallest class (where barrier overhead dominates).
+    pub smallest_class: usize,
+}
+
 impl GraphStats {
     pub(crate) fn compute(
         n: usize,

@@ -1,5 +1,13 @@
-//! PJRT runtime: loads the AOT-compiled HLO artifacts produced by
-//! `make artifacts` and executes them from the Rust request path.
+//! Execution runtimes: the PJRT/XLA kernel path and the within-chain
+//! parallel executor.
+//!
+//! * [`parallel`] — the chromatic sweep engine: a scoped `std::thread`
+//!   worker pool that resamples one color class at a time on top of the
+//!   site-addressable sampler surface (no accelerator involved).
+//!
+//! The remaining submodules form the PJRT runtime, which loads the
+//! AOT-compiled HLO artifacts produced by `make artifacts` and executes
+//! them from the Rust request path:
 //!
 //! * [`executor`] — the generic loader: artifact manifest, HLO-text →
 //!   `XlaComputation` → compiled `PjRtLoadedExecutable`, typed run calls.
@@ -13,8 +21,10 @@
 
 pub mod backend;
 pub mod executor;
+pub mod parallel;
 pub mod sampler;
 
 pub use backend::XlaDenseBackend;
 pub use executor::{ArtifactStore, LoadedKernel, XlaExecutor};
+pub use parallel::{ChromaticSweepEngine, SweepCtx};
 pub use sampler::XlaGibbsSampler;

@@ -1,0 +1,494 @@
+//! Within-chain parallel execution: the chromatic sweep engine.
+//!
+//! Built on the site-addressable sampler surface
+//! ([`Sampler::update_site`]): a [`crate::graph::Coloring`] partitions
+//! the variables into classes that share no factor, so every site in a
+//! class has a full conditional that is independent of the others given
+//! the rest of the state — the classic chromatic Gibbs argument. The
+//! engine sweeps the classes in order; within a class the sites are
+//! split statically over a scoped `std::thread` worker pool.
+//!
+//! # Determinism contract
+//!
+//! Results are identical for ANY worker count ≥ 1 (bit-exact states for
+//! deterministic-update samplers like plain Gibbs) because randomness is
+//! keyed to *sites*, not workers: site `i` draws from its own `Pcg64`
+//! stream, split once from the chain stream as `chain_rng.split(i)`.
+//! Within a class the updates commute (conditional independence), so the
+//! worker→site assignment only affects execution order, never values.
+//! Checkpoints persist every per-site stream position, so `--resume`
+//! replays the uninterrupted run bit-exactly too.
+//!
+//! # Protocol
+//!
+//! Workers never share mutable state: each owns a private copy of the
+//! chain state. Per color class, a worker (1) updates its share of the
+//! class against its private state, logging `(site, value)` pairs into
+//! its publish buffer, (2) waits on a barrier, (3) applies everyone
+//! else's published pairs to its private copy, (4) waits again so no one
+//! reuses a buffer that is still being read. The coordinator (the chain
+//! thread) participates in the same barriers, maintains the canonical
+//! state, and runs per-sweep bookkeeping (sinks, progress, checkpoints)
+//! while the workers idle at the round barrier.
+//!
+//! # Iteration accounting
+//!
+//! One "iteration" remains one site update, exactly as in the serial
+//! random-scan path, so `iters`, `sampler_steps_total` and factor-eval
+//! counters mean the same thing in both modes. A full sweep performs
+//! `n` updates (one per site, in class order); if the remaining budget
+//! is smaller than `n`, the final partial sweep stops mid-schedule.
+
+use std::sync::{Arc, Barrier, Mutex};
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::bench::workload::SamplerSpec;
+use crate::graph::FactorGraph;
+use crate::metrics::{labeled, Counter, Gauge, LatencyHistogram, MetricsHub, SamplerMetrics};
+use crate::rng::Pcg64;
+use crate::samplers::Hyperparams;
+
+/// Everything the coordinator callback may inspect at a sweep boundary.
+/// Workers are parked at the round barrier for the lifetime of this
+/// value, so reading the per-site streams here is race-free.
+pub struct SweepCtx<'a> {
+    /// Site updates completed so far, counted from iteration 0 of the
+    /// logical run (i.e. including pre-resume iterations).
+    pub iter: u64,
+    /// Canonical state after this sweep.
+    pub state: &'a [u16],
+    site_rngs: &'a [Mutex<Pcg64>],
+}
+
+impl SweepCtx<'_> {
+    /// The `(state, inc)` position of every per-site stream — what a
+    /// checkpoint must persist for a bit-exact parallel resume.
+    pub fn site_rng_parts(&self) -> Vec<(u128, u128)> {
+        self.site_rngs
+            .iter()
+            .map(|m| m.lock().unwrap().state_parts())
+            .collect()
+    }
+}
+
+/// The within-chain parallel executor for one chain.
+pub struct ChromaticSweepEngine<'g> {
+    graph: &'g FactorGraph,
+    spec: SamplerSpec,
+    workers: usize,
+    hyperparams: Hyperparams,
+    site_rngs: Vec<Mutex<Pcg64>>,
+    metrics: Arc<SamplerMetrics>,
+    sweeps: Arc<Counter>,
+    barrier_lat: Arc<LatencyHistogram>,
+    worker_busy: Vec<Arc<Gauge>>,
+}
+
+impl<'g> ChromaticSweepEngine<'g> {
+    /// Build an engine for `workers` threads, deriving one RNG stream
+    /// per site from the chain stream. Registers the `parallel_*`
+    /// metrics on `hub` labeled with `chain`.
+    pub fn new(
+        graph: &'g FactorGraph,
+        spec: SamplerSpec,
+        workers: usize,
+        chain_rng: &mut Pcg64,
+        metrics: Arc<SamplerMetrics>,
+        hub: &MetricsHub,
+        chain: &str,
+    ) -> Self {
+        assert!(workers >= 1, "parallel engine needs at least one worker");
+        assert!(
+            spec.supports_parallel(),
+            "sampler {spec:?} is not site-local; cannot run chromatically"
+        );
+        let site_rngs = (0..graph.n())
+            .map(|i| Mutex::new(chain_rng.split(i as u64)))
+            .collect();
+        let worker_busy = (0..workers)
+            .map(|w| {
+                hub.gauge(&labeled(
+                    "parallel_worker_busy_ratio",
+                    &[("chain", chain), ("worker", &w.to_string())],
+                ))
+            })
+            .collect();
+        Self {
+            graph,
+            spec,
+            workers,
+            hyperparams: Hyperparams::default(),
+            site_rngs,
+            metrics,
+            sweeps: hub.counter(&labeled("parallel_sweeps_total", &[("chain", chain)])),
+            barrier_lat: hub.latency(&labeled("parallel_color_barrier_ns", &[("chain", chain)])),
+            worker_busy,
+        }
+    }
+
+    /// Reapply checkpointed hyperparameters to every worker's sampler
+    /// (a resumed run may carry controller-tuned values from before).
+    pub fn set_hyperparams(&mut self, h: Hyperparams) {
+        self.hyperparams = h;
+    }
+
+    /// Restore the per-site stream positions saved by a checkpoint.
+    pub fn restore_site_rngs(&mut self, parts: &[(u128, u128)]) -> Result<()> {
+        if parts.len() != self.site_rngs.len() {
+            bail!(
+                "checkpoint has {} site streams, graph has {} variables",
+                parts.len(),
+                self.site_rngs.len()
+            );
+        }
+        for (slot, &(s, inc)) in self.site_rngs.iter_mut().zip(parts) {
+            *slot.get_mut().unwrap() = Pcg64::from_state_parts(s, inc);
+        }
+        Ok(())
+    }
+
+    /// Current per-site stream positions (for a final checkpoint written
+    /// outside [`ChromaticSweepEngine::run`]).
+    pub fn site_rng_parts(&self) -> Vec<(u128, u128)> {
+        self.site_rngs
+            .iter()
+            .map(|m| m.lock().unwrap().state_parts())
+            .collect()
+    }
+
+    /// Execute site updates `start_iter..end_iter` as chromatic sweeps,
+    /// mutating `state` in place. `on_sweep` runs on the chain thread at
+    /// every sweep boundary (workers parked), in ascending `iter` order.
+    pub fn run(
+        &self,
+        state: &mut [u16],
+        start_iter: u64,
+        end_iter: u64,
+        on_sweep: &mut dyn FnMut(SweepCtx<'_>),
+    ) {
+        let n = self.graph.n() as u64;
+        assert_eq!(state.len() as u64, n, "state length mismatch");
+        let total = end_iter.saturating_sub(start_iter);
+        if total == 0 {
+            return;
+        }
+        let classes = self.graph.coloring().classes();
+        let w = self.workers;
+        let full_sweeps = total / n;
+        let tail = total % n;
+        let rounds = full_sweeps + u64::from(tail > 0);
+
+        // One reusable barrier; all parties traverse the identical
+        // sequence of waits, so phases can never interleave.
+        let barrier = Barrier::new(w + 1);
+        let published: Vec<Mutex<Vec<(u32, u16)>>> =
+            (0..w).map(|_| Mutex::new(Vec::new())).collect();
+
+        std::thread::scope(|scope| {
+            for wid in 0..w {
+                let barrier = &barrier;
+                let published = &published;
+                let site_rngs = &self.site_rngs[..];
+                let graph = self.graph;
+                let sspec = self.spec;
+                let hp = self.hyperparams;
+                let metrics = self.metrics.clone();
+                let busy_gauge = self.worker_busy[wid].clone();
+                let init: Vec<u16> = state.to_vec();
+                scope.spawn(move || {
+                    worker_loop(WorkerArgs {
+                        wid,
+                        workers: w,
+                        graph,
+                        spec: sspec,
+                        hyperparams: hp,
+                        metrics,
+                        state: init,
+                        classes,
+                        full_sweeps,
+                        tail,
+                        barrier,
+                        published,
+                        site_rngs,
+                        busy_gauge,
+                    })
+                });
+            }
+
+            // Coordinator: mirrors the workers' barrier schedule and
+            // keeps the canonical state.
+            let mut done = 0u64;
+            for round in 0..rounds {
+                let budget = if round < full_sweeps { n } else { tail };
+                let mut left = budget;
+                for cls in classes {
+                    if left == 0 {
+                        break;
+                    }
+                    let take = (cls.len() as u64).min(left);
+                    left -= take;
+                    let t0 = Instant::now();
+                    barrier.wait(); // all workers published
+                    for buf in published.iter() {
+                        for &(site, val) in buf.lock().unwrap().iter() {
+                            state[site as usize] = val;
+                        }
+                    }
+                    barrier.wait(); // everyone applied; buffers reusable
+                    self.barrier_lat.record(t0.elapsed());
+                }
+                done += budget;
+                self.sweeps.add(1);
+                on_sweep(SweepCtx {
+                    iter: start_iter + done,
+                    state,
+                    site_rngs: &self.site_rngs,
+                });
+                barrier.wait(); // release workers into the next round
+            }
+        });
+    }
+}
+
+struct WorkerArgs<'a, 'g> {
+    wid: usize,
+    workers: usize,
+    graph: &'g FactorGraph,
+    spec: SamplerSpec,
+    hyperparams: Hyperparams,
+    metrics: Arc<SamplerMetrics>,
+    state: Vec<u16>,
+    classes: &'a [Vec<u32>],
+    full_sweeps: u64,
+    tail: u64,
+    barrier: &'a Barrier,
+    published: &'a [Mutex<Vec<(u32, u16)>>],
+    site_rngs: &'a [Mutex<Pcg64>],
+    busy_gauge: Arc<Gauge>,
+}
+
+fn worker_loop(args: WorkerArgs<'_, '_>) {
+    let WorkerArgs {
+        wid,
+        workers,
+        graph,
+        spec,
+        hyperparams,
+        metrics,
+        mut state,
+        classes,
+        full_sweeps,
+        tail,
+        barrier,
+        published,
+        site_rngs,
+        busy_gauge,
+    } = args;
+    let n = graph.n() as u64;
+    let mut sampler = spec.build(graph);
+    if !hyperparams.is_empty() {
+        sampler.set_hyperparams(&hyperparams);
+    }
+    sampler.attach_metrics(metrics);
+    let rounds = full_sweeps + u64::from(tail > 0);
+    let mut mine: Vec<(u32, u16)> = Vec::new();
+    let started = Instant::now();
+    let mut busy = std::time::Duration::ZERO;
+    for round in 0..rounds {
+        let budget = if round < full_sweeps { n } else { tail };
+        let mut left = budget;
+        for cls in classes {
+            if left == 0 {
+                break;
+            }
+            let take = (cls.len() as u64).min(left) as usize;
+            left -= take as u64;
+            // Static contiguous split of the class prefix over workers;
+            // values don't depend on the split (see module docs).
+            let chunk = take.div_ceil(workers);
+            let lo = (wid * chunk).min(take);
+            let hi = (lo + chunk).min(take);
+            let t0 = Instant::now();
+            mine.clear();
+            for &site in &cls[lo..hi] {
+                let site = site as usize;
+                let mut rng = site_rngs[site].lock().unwrap();
+                sampler.update_site(site, &mut state, &mut *rng);
+                mine.push((site as u32, state[site]));
+            }
+            {
+                let mut buf = published[wid].lock().unwrap();
+                buf.clear();
+                buf.extend_from_slice(&mine);
+            }
+            busy += t0.elapsed();
+            barrier.wait(); // all published
+            for (other, buf) in published.iter().enumerate() {
+                if other == wid {
+                    continue;
+                }
+                for &(site, val) in buf.lock().unwrap().iter() {
+                    state[site as usize] = val;
+                }
+            }
+            barrier.wait(); // safe to reuse buffers
+        }
+        barrier.wait(); // coordinator bookkeeping window
+    }
+    let wall = started.elapsed().as_secs_f64();
+    if wall > 0.0 {
+        busy_gauge.set(busy.as_secs_f64() / wall);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::models;
+    use crate::metrics::MetricsHub;
+    use crate::samplers::EnergyPath;
+
+    fn run_engine(workers: usize, iters: u64, seed: u64) -> (Vec<u16>, u64) {
+        let g = models::ising_multipartite(3, 6, 1.5);
+        let hub = MetricsHub::new();
+        let m = SamplerMetrics::register(&hub, &[("chain", "0")]);
+        let mut rng = Pcg64::seeded(seed);
+        let engine = {
+            let mut e = ChromaticSweepEngine::new(
+                &g,
+                SamplerSpec::Gibbs(EnergyPath::Specialized),
+                workers,
+                &mut rng,
+                m.clone(),
+                &hub,
+                "0",
+            );
+            e.set_hyperparams(Hyperparams::default());
+            e
+        };
+        let mut state = vec![0u16; g.n()];
+        let mut sweeps_seen = 0u64;
+        engine.run(&mut state, 0, iters, &mut |ctx| {
+            sweeps_seen += 1;
+            assert!(ctx.iter <= iters);
+            assert_eq!(ctx.site_rng_parts().len(), g.n());
+        });
+        assert_eq!(m.steps.get(), iters, "every site update must be counted");
+        (state, sweeps_seen)
+    }
+
+    #[test]
+    fn worker_count_does_not_change_results() {
+        let (s1, _) = run_engine(1, 18 * 10, 9);
+        let (s4, _) = run_engine(4, 18 * 10, 9);
+        assert_eq!(s1, s4, "chromatic sweeps must be worker-count invariant");
+    }
+
+    #[test]
+    fn partial_final_sweep_counts_exactly() {
+        // 18 sites, 40 iters = 2 full sweeps + a 4-site tail.
+        let (_, sweeps) = run_engine(2, 40, 5);
+        assert_eq!(sweeps, 3);
+    }
+
+    #[test]
+    fn resume_from_site_streams_is_bit_exact() {
+        let g = models::ising_multipartite(3, 4, 1.0);
+        let n = g.n() as u64;
+        let hub = MetricsHub::new();
+        let m = SamplerMetrics::register(&hub, &[("chain", "0")]);
+
+        let build = |rng: &mut Pcg64| {
+            ChromaticSweepEngine::new(
+                &g,
+                SamplerSpec::Gibbs(EnergyPath::Specialized),
+                2,
+                rng,
+                m.clone(),
+                &hub,
+                "0",
+            )
+        };
+
+        // Uninterrupted: 6 sweeps.
+        let mut rng = Pcg64::seeded(77);
+        let engine = build(&mut rng);
+        let mut full = vec![0u16; g.n()];
+        engine.run(&mut full, 0, 6 * n, &mut |_| {});
+
+        // Interrupted at sweep 3, then resumed from saved streams.
+        let mut rng = Pcg64::seeded(77);
+        let engine = build(&mut rng);
+        let mut state = vec![0u16; g.n()];
+        let mut saved: Option<(Vec<u16>, Vec<(u128, u128)>)> = None;
+        engine.run(&mut state, 0, 3 * n, &mut |ctx| {
+            if ctx.iter == 3 * n {
+                saved = Some((ctx.state.to_vec(), ctx.site_rng_parts()));
+            }
+        });
+        let (mut state, parts) = saved.expect("no checkpoint captured");
+        let mut rng = Pcg64::seeded(123); // deliberately different chain stream
+        let mut engine = build(&mut rng);
+        engine.restore_site_rngs(&parts).unwrap();
+        engine.run(&mut state, 3 * n, 6 * n, &mut |_| {});
+
+        assert_eq!(full, state, "site-stream resume must replay bit-exactly");
+    }
+
+    #[test]
+    fn rejects_wrong_stream_count() {
+        let g = models::ising_multipartite(2, 3, 1.0);
+        let hub = MetricsHub::new();
+        let m = SamplerMetrics::register(&hub, &[("chain", "0")]);
+        let mut rng = Pcg64::seeded(1);
+        let mut e = ChromaticSweepEngine::new(
+            &g,
+            SamplerSpec::Gibbs(EnergyPath::Generic),
+            1,
+            &mut rng,
+            m,
+            &hub,
+            "0",
+        );
+        assert!(e.restore_site_rngs(&[(1, 1)]).is_err());
+    }
+
+    #[test]
+    fn parallel_metrics_flow_into_hub() {
+        let g = models::ising_multipartite(3, 6, 1.5);
+        let hub = MetricsHub::new();
+        let m = SamplerMetrics::register(&hub, &[("chain", "0")]);
+        let mut rng = Pcg64::seeded(4);
+        let engine = ChromaticSweepEngine::new(
+            &g,
+            SamplerSpec::Gibbs(EnergyPath::Specialized),
+            2,
+            &mut rng,
+            m,
+            &hub,
+            "0",
+        );
+        let mut state = vec![0u16; g.n()];
+        engine.run(&mut state, 0, 5 * g.n() as u64, &mut |_| {});
+        let snap = hub.snapshot();
+        assert_eq!(
+            snap.counter("parallel_sweeps_total{chain=\"0\"}"),
+            Some(5)
+        );
+        let lat = snap
+            .histogram("parallel_color_barrier_ns{chain=\"0\"}")
+            .expect("barrier latency histogram missing");
+        // 3 color classes × 5 sweeps = 15 barrier phases.
+        assert_eq!(lat.count, 15);
+        for w in 0..2 {
+            let util = snap
+                .gauge(&format!(
+                    "parallel_worker_busy_ratio{{chain=\"0\",worker=\"{w}\"}}"
+                ))
+                .expect("missing utilization gauge");
+            assert!((0.0..=1.0).contains(&util));
+        }
+    }
+}

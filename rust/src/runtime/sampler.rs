@@ -42,10 +42,12 @@ impl XlaGibbsSampler {
 }
 
 impl Sampler for XlaGibbsSampler {
-    fn step(&mut self, state: &mut [u16], rng: &mut dyn Rng) -> StepStats {
+    // Stays non-site-local: each update computes the whole n×D table on
+    // the device, so concurrent per-site dispatch would multiply, not
+    // share, that work.
+    fn update_site(&mut self, i: usize, state: &mut [u16], rng: &mut dyn Rng) -> StepStats {
         let n = self.backend.n();
         let d = self.backend.d();
-        let i = rng.index(n);
         let table = self
             .backend
             .cond_energies_all(state)

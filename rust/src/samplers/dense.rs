@@ -34,9 +34,8 @@ impl<'m> DenseGibbsSampler<'m> {
 }
 
 impl Sampler for DenseGibbsSampler<'_> {
-    fn step(&mut self, state: &mut [u16], rng: &mut dyn Rng) -> StepStats {
+    fn update_site(&mut self, i: usize, state: &mut [u16], rng: &mut dyn Rng) -> StepStats {
         let n = self.model.graph.n();
-        let i = rng.index(n);
         self.model.cond_energies_row(state, i, &mut self.eps);
         let v = sample_categorical_from_energies(rng, &self.eps);
         state[i] = v as u16;
@@ -49,6 +48,10 @@ impl Sampler for DenseGibbsSampler<'_> {
             factor_evals: (n - 1) as u64,
             accepted: true,
         }
+    }
+
+    fn is_site_local(&self) -> bool {
+        true
     }
 
     fn name(&self) -> &'static str {

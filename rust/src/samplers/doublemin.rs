@@ -91,10 +91,11 @@ impl<'g> DoubleMinGibbsSampler<'g> {
 }
 
 impl Sampler for DoubleMinGibbsSampler<'_> {
-    fn step(&mut self, state: &mut [u16], rng: &mut dyn Rng) -> StepStats {
+    // NOT site-local: the cached ξ is global augmented-space state, same
+    // as MIN-Gibbs's ε.
+    fn update_site(&mut self, i: usize, state: &mut [u16], rng: &mut dyn Rng) -> StepStats {
         let g = self.graph;
         let d = g.domain_size() as usize;
-        let i = rng.index(g.n());
         let cur = state[i] as usize;
         let factors = g.factors_of(i);
         let mut evals = 0u64;

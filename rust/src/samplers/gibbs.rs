@@ -62,16 +62,19 @@ impl<'g> GibbsSampler<'g> {
 }
 
 impl Sampler for GibbsSampler<'_> {
-    fn step(&mut self, state: &mut [u16], rng: &mut dyn Rng) -> StepStats {
-        let g = self.graph;
-        let i = match self.scan {
-            ScanOrder::Random => rng.index(g.n()),
+    fn select_site(&mut self, state: &[u16], rng: &mut dyn Rng) -> usize {
+        match self.scan {
+            ScanOrder::Random => rng.index(state.len()),
             ScanOrder::Systematic => {
                 let i = self.cursor;
-                self.cursor = (self.cursor + 1) % g.n();
+                self.cursor = (self.cursor + 1) % self.graph.n();
                 i
             }
-        };
+        }
+    }
+
+    fn update_site(&mut self, i: usize, state: &mut [u16], rng: &mut dyn Rng) -> StepStats {
+        let g = self.graph;
         let d = g.domain_size() as u64;
         let evals = match self.path {
             EnergyPath::Generic => {
@@ -94,6 +97,10 @@ impl Sampler for GibbsSampler<'_> {
             factor_evals: evals,
             accepted: true,
         }
+    }
+
+    fn is_site_local(&self) -> bool {
+        true
     }
 
     fn name(&self) -> &'static str {

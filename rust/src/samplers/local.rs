@@ -63,10 +63,9 @@ impl<'g> LocalMinibatchSampler<'g> {
 }
 
 impl Sampler for LocalMinibatchSampler<'_> {
-    fn step(&mut self, state: &mut [u16], rng: &mut dyn Rng) -> StepStats {
+    fn update_site(&mut self, i: usize, state: &mut [u16], rng: &mut dyn Rng) -> StepStats {
         let g = self.graph;
         let d = g.domain_size() as usize;
-        let i = rng.index(g.n());
         let deg = g.degree(i);
         let b = self.batch.min(deg);
         self.sample_positions(deg, b, rng);
@@ -96,6 +95,10 @@ impl Sampler for LocalMinibatchSampler<'_> {
             factor_evals: (b * d) as u64,
             accepted: true,
         }
+    }
+
+    fn is_site_local(&self) -> bool {
+        true
     }
 
     fn name(&self) -> &'static str {

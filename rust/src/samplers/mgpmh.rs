@@ -74,10 +74,9 @@ impl<'g> MgpmhSampler<'g> {
 }
 
 impl Sampler for MgpmhSampler<'_> {
-    fn step(&mut self, state: &mut [u16], rng: &mut dyn Rng) -> StepStats {
+    fn update_site(&mut self, i: usize, state: &mut [u16], rng: &mut dyn Rng) -> StepStats {
         let g = self.graph;
         let d = g.domain_size() as usize;
-        let i = rng.index(g.n());
         let cur = state[i] as usize;
         let factors = g.factors_of(i);
         let mut evals = 0u64;
@@ -152,6 +151,10 @@ impl Sampler for MgpmhSampler<'_> {
             factor_evals: evals,
             accepted: accept,
         }
+    }
+
+    fn is_site_local(&self) -> bool {
+        true
     }
 
     fn name(&self) -> &'static str {

@@ -54,10 +54,12 @@ impl<'g> MinGibbsSampler<'g> {
 }
 
 impl Sampler for MinGibbsSampler<'_> {
-    fn step(&mut self, state: &mut [u16], rng: &mut dyn Rng) -> StepStats {
+    // NOT site-local (`is_site_local` stays false): the cached ε is
+    // global augmented-space state — every update rewrites it, so
+    // concurrent site updates would race on it semantically.
+    fn update_site(&mut self, i: usize, state: &mut [u16], rng: &mut dyn Rng) -> StepStats {
         let g = self.graph;
         let d = g.domain_size() as usize;
-        let i = rng.index(g.n());
         let cur = state[i] as usize;
         let mut evals = 0u64;
 
@@ -171,10 +173,9 @@ impl<'g> NaiveMinGibbsSampler<'g> {
 }
 
 impl Sampler for NaiveMinGibbsSampler<'_> {
-    fn step(&mut self, state: &mut [u16], rng: &mut dyn Rng) -> StepStats {
+    fn update_site(&mut self, i: usize, state: &mut [u16], rng: &mut dyn Rng) -> StepStats {
         let g = self.graph;
         let d = g.domain_size() as usize;
-        let i = rng.index(g.n());
         let cur = state[i] as usize;
         let mut evals = 0u64;
         let cached = match self.cached_energy {

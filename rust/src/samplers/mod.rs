@@ -89,9 +89,44 @@ impl Hyperparams {
 }
 
 /// A single-site MCMC sampler over a factor graph.
+///
+/// The update surface is **site-addressable**: [`Sampler::select_site`]
+/// is the scan policy (which variable to touch next) and
+/// [`Sampler::update_site`] resamples exactly that variable. The
+/// classic [`Sampler::step`] is a default method composing the two, so
+/// serial callers are unchanged while schedulers — in particular the
+/// chromatic parallel executor in [`crate::runtime::parallel`] — can
+/// drive sites directly.
 pub trait Sampler {
+    /// Resample variable `site` in place, touching only that variable's
+    /// neighborhood (plus any sampler-internal caches). Returns the
+    /// per-step accounting with `variable == site`.
+    fn update_site(&mut self, site: usize, state: &mut [u16], rng: &mut dyn Rng) -> StepStats;
+
+    /// The scan policy: pick the next site to update. The default is the
+    /// random scan every sampler in the paper uses — one uniform draw
+    /// from the RNG stream, exactly the draw the pre-split `step` made
+    /// first, so chains replay bit-identically across the API change.
+    fn select_site(&mut self, state: &[u16], rng: &mut dyn Rng) -> usize {
+        rng.index(state.len())
+    }
+
     /// Advance the chain by one update; `state` is mutated in place.
-    fn step(&mut self, state: &mut [u16], rng: &mut dyn Rng) -> StepStats;
+    /// Default: `select_site` then `update_site`.
+    fn step(&mut self, state: &mut [u16], rng: &mut dyn Rng) -> StepStats {
+        let site = self.select_site(state, rng);
+        self.update_site(site, state, rng)
+    }
+
+    /// Whether `update_site` touches only the site's neighborhood, with
+    /// no sampler-global mutable caches. Only site-local samplers are
+    /// safe under the chromatic parallel executor, which updates many
+    /// conditionally independent sites concurrently. `false` for the
+    /// MIN-Gibbs family: their cached augmented-space energy (ε / ξ) is
+    /// global state serializing every update.
+    fn is_site_local(&self) -> bool {
+        false
+    }
 
     /// Human-readable name, used in reports and CSV output.
     fn name(&self) -> &'static str;

@@ -5,7 +5,7 @@ use std::path::PathBuf;
 
 use mbgibbs::cli;
 use mbgibbs::config::ExperimentConfig;
-use mbgibbs::coordinator::{run_chains, Checkpoint, RunSpec};
+use mbgibbs::coordinator::{run_chains, Checkpoint, RunOptions, RunSpec};
 
 fn tmpdir(name: &str) -> PathBuf {
     let dir = std::env::temp_dir().join(format!("mbgibbs_it_{name}_{}", std::process::id()));
@@ -53,7 +53,7 @@ record_every = 2000
         .control(cfg.control.to_policy().unwrap())
         .build()
         .unwrap();
-    let report = run_chains(&g, &run);
+    let report = run_chains(&g, &run, &RunOptions::default());
     assert_eq!(report.chains.len(), 2);
     for c in &report.chains {
         assert!(c.final_error.is_finite());

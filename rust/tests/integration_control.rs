@@ -6,7 +6,7 @@ use std::sync::Arc;
 
 use mbgibbs::bench::workload::SamplerSpec;
 use mbgibbs::control::ControlPolicy;
-use mbgibbs::coordinator::{run_chains, run_chains_with_metrics, Checkpoint, RunSpec};
+use mbgibbs::coordinator::{run_chains, Checkpoint, RunOptions, RunSpec};
 use mbgibbs::graph::models;
 use mbgibbs::metrics::MetricsHub;
 use mbgibbs::samplers::EnergyPath;
@@ -29,7 +29,7 @@ fn adaptive_mgpmh_recovers_from_bad_lambda_on_degree_1000_ising() {
         .record_every(5_000)
         .build()
         .unwrap();
-    let fixed_report = run_chains(&g, &fixed);
+    let fixed_report = run_chains(&g, &fixed, &RunOptions::default());
     let fixed_evals = fixed_report.chains[0].factor_evals;
 
     let adaptive = RunSpec::builder(SamplerSpec::Mgpmh { lambda: bad_lambda })
@@ -40,7 +40,7 @@ fn adaptive_mgpmh_recovers_from_bad_lambda_on_degree_1000_ising() {
         .build()
         .unwrap();
     let hub = Arc::new(MetricsHub::new());
-    let adaptive_report = run_chains_with_metrics(&g, &adaptive, &hub);
+    let adaptive_report = run_chains(&g, &adaptive, &RunOptions::with_hub(hub.clone()));
     let snap = hub.snapshot();
 
     // The controller actually adjusted something...
@@ -107,7 +107,7 @@ fn plateau_freezes_and_writes_early_checkpoint() {
         .build()
         .unwrap();
     let hub = Arc::new(MetricsHub::new());
-    run_chains_with_metrics(&g, &spec, &hub);
+    run_chains(&g, &spec, &RunOptions::with_hub(hub.clone()));
 
     assert_eq!(
         hub.snapshot().gauge("controller_plateau{chain=\"0\"}"),
@@ -138,7 +138,7 @@ fn gibbs_under_adaptive_policy_is_untouched() {
         .build()
         .unwrap();
     let hub = Arc::new(MetricsHub::new());
-    let report = run_chains_with_metrics(&g, &spec, &hub);
+    let report = run_chains(&g, &spec, &RunOptions::with_hub(hub.clone()));
     assert_eq!(report.chains[0].acceptance, 1.0);
     assert_eq!(
         hub.snapshot().counter("controller_adjustments_total{chain=\"0\"}"),

@@ -7,7 +7,7 @@ use std::sync::Arc;
 
 use mbgibbs::bench::workload::SamplerSpec;
 use mbgibbs::cli;
-use mbgibbs::coordinator::{run_chains_with_metrics, RunSpec};
+use mbgibbs::coordinator::{run_chains, RunOptions, RunSpec};
 use mbgibbs::graph::models;
 use mbgibbs::metrics::{expose, MetricsHub};
 use mbgibbs::samplers::EnergyPath;
@@ -32,7 +32,7 @@ fn gibbs_factor_evals_are_degree_times_iters() {
         .build()
         .unwrap();
     let hub = Arc::new(MetricsHub::new());
-    let report = run_chains_with_metrics(&g, &run, &hub);
+    let report = run_chains(&g, &run, &RunOptions::with_hub(hub.clone()));
 
     let want = (n as u64 - 1) * iters;
     assert_eq!(report.chains[0].factor_evals, want);
@@ -66,12 +66,12 @@ fn resume_round_trip_continues_counters() {
 
     // First leg: 400 iterations, leaving a checkpoint at iteration 400.
     let hub1 = Arc::new(MetricsHub::new());
-    run_chains_with_metrics(&g, &leg(400, false), &hub1);
+    run_chains(&g, &leg(400, false), &RunOptions::with_hub(hub1.clone()));
     assert!(dir.join("chain0.ckpt").exists());
 
     // Second leg: resume and extend to 1000 total iterations.
     let hub2 = Arc::new(MetricsHub::new());
-    let report = run_chains_with_metrics(&g, &leg(1_000, true), &hub2);
+    let report = run_chains(&g, &leg(1_000, true), &RunOptions::with_hub(hub2.clone()));
 
     // Only 600 steps executed in this process...
     assert_eq!(report.chains[0].steps_executed, 600);

@@ -1,0 +1,177 @@
+//! Integration: the chromatic parallel sweep engine through the public
+//! coordinator surface — worker-count invariance, marginal parity, and
+//! bit-exact checkpoint/resume of parallel runs.
+//!
+//! CI runs this suite twice with `MBGIBBS_TEST_WORKERS` ∈ {1, 4}; the
+//! determinism contract (one RNG stream per site) says every assertion
+//! must hold identically at both settings.
+
+use std::path::PathBuf;
+
+use mbgibbs::bench::workload::SamplerSpec;
+use mbgibbs::coordinator::{run_chains, RunOptions, RunSpec};
+use mbgibbs::graph::models;
+use mbgibbs::samplers::EnergyPath;
+
+/// Worker count under test: the CI matrix exports
+/// `MBGIBBS_TEST_WORKERS`; locally the default is 4.
+fn ci_workers() -> usize {
+    std::env::var("MBGIBBS_TEST_WORKERS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(4)
+}
+
+fn tmpdir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("mbgibbs_ip_{name}_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Plain Gibbs: the same graph and seed must produce bit-for-bit
+/// identical states and trajectories at workers = 1 and workers = N —
+/// per-site RNG streams make the schedule and every conditional draw
+/// independent of how sites are sharded over threads.
+#[test]
+fn gibbs_states_bit_exact_across_worker_counts() {
+    let g = models::ising_multipartite(4, 8, 1.5); // n = 32, 4 color classes
+    let n = g.n() as u64;
+    let mk = |w: usize| {
+        RunSpec::builder(SamplerSpec::Gibbs(EnergyPath::Specialized))
+            .iters(n * 40)
+            .seed(71)
+            .record_every(n * 5)
+            .workers(w)
+            .build()
+            .unwrap()
+    };
+    let serial = run_chains(&g, &mk(1), &RunOptions::default());
+    let wide = run_chains(&g, &mk(ci_workers()), &RunOptions::default());
+    assert_eq!(
+        serial.chains[0].final_state, wide.chains[0].final_state,
+        "worker count changed the Gibbs chain"
+    );
+    assert_eq!(
+        serial.chains[0].trajectory, wide.chains[0].trajectory,
+        "worker count changed the recorded marginal-error trajectory"
+    );
+    assert_eq!(serial.chains[0].factor_evals, wide.chains[0].factor_evals);
+}
+
+/// The minibatched site-local samplers (Local, MGPMH) ride the same
+/// contract: identical empirical marginals — asserted through the
+/// recorded error trajectory and the final error — for any worker count.
+#[test]
+fn minibatch_marginals_identical_across_worker_counts() {
+    let g = models::ising_multipartite(3, 8, 1.5); // n = 24, Δ = 16
+    let n = g.n() as u64;
+    let lineup = [
+        SamplerSpec::Local { batch: 8 },
+        SamplerSpec::Mgpmh { lambda: 6.0 },
+    ];
+    for spec in lineup {
+        let mk = |w: usize| {
+            RunSpec::builder(spec)
+                .iters(n * 30)
+                .seed(72)
+                .record_every(n * 5)
+                .workers(w)
+                .build()
+                .unwrap()
+        };
+        let serial = run_chains(&g, &mk(1), &RunOptions::default());
+        let wide = run_chains(&g, &mk(ci_workers()), &RunOptions::default());
+        assert_eq!(
+            serial.chains[0].trajectory, wide.chains[0].trajectory,
+            "{spec:?}: marginal trajectory depends on worker count"
+        );
+        assert_eq!(serial.chains[0].final_error, wide.chains[0].final_error);
+        assert_eq!(serial.chains[0].final_state, wide.chains[0].final_state);
+    }
+}
+
+/// Interrupt + resume of a parallel run replays the exact same chain as
+/// the uninterrupted one: v2 checkpoints persist every per-site stream
+/// position, and parallel checkpoints land on sweep boundaries so the
+/// systematic schedule concatenates seamlessly.
+#[test]
+fn parallel_resume_is_bit_exact() {
+    let g = models::ising_multipartite(3, 6, 1.5); // n = 18
+    let n = g.n() as u64;
+    let dir = tmpdir("resume");
+    let w = ci_workers();
+
+    let uninterrupted = RunSpec::builder(SamplerSpec::Gibbs(EnergyPath::Specialized))
+        .iters(n * 12)
+        .seed(73)
+        .record_every(n * 3)
+        .workers(w)
+        .build()
+        .unwrap();
+    let full = run_chains(&g, &uninterrupted, &RunOptions::default());
+
+    let first_leg = RunSpec::builder(SamplerSpec::Gibbs(EnergyPath::Specialized))
+        .iters(n * 6)
+        .seed(73)
+        .record_every(n * 3)
+        .workers(w)
+        .checkpoint_dir(dir.clone())
+        .checkpoint_every(n * 6)
+        .build()
+        .unwrap();
+    run_chains(&g, &first_leg, &RunOptions::default());
+    assert!(dir.join("chain0.ckpt").exists());
+
+    let second_leg = RunSpec::builder(SamplerSpec::Gibbs(EnergyPath::Specialized))
+        .iters(n * 12)
+        .seed(73)
+        .record_every(n * 3)
+        .workers(w)
+        .checkpoint_dir(dir.clone())
+        .resume(true)
+        .build()
+        .unwrap();
+    let resumed = run_chains(&g, &second_leg, &RunOptions::default());
+
+    assert_eq!(
+        resumed.chains[0].steps_executed,
+        n * 6,
+        "resume should pick up at the checkpointed sweep"
+    );
+    assert_eq!(
+        full.chains[0].final_state, resumed.chains[0].final_state,
+        "resumed parallel chain diverged from the uninterrupted run"
+    );
+    assert_eq!(full.chains[0].factor_evals, resumed.chains[0].factor_evals);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Parallel runs feed the same observability surfaces as serial ones,
+/// plus the engine's own `parallel_*` families.
+#[test]
+fn parallel_metrics_reach_the_report_snapshot() {
+    let g = models::ising_multipartite(3, 6, 1.5);
+    let n = g.n() as u64;
+    let spec = RunSpec::builder(SamplerSpec::Gibbs(EnergyPath::Specialized))
+        .iters(n * 10)
+        .seed(74)
+        .record_every(n * 5)
+        .workers(ci_workers())
+        .build()
+        .unwrap();
+    let report = run_chains(&g, &spec, &RunOptions::default());
+    let snap = &report.metrics;
+    assert_eq!(
+        snap.counter("parallel_sweeps_total{chain=\"0\"}"),
+        Some(10)
+    );
+    assert_eq!(
+        snap.counter("sampler_steps_total{chain=\"0\",sampler=\"gibbs\"}"),
+        Some(n * 10)
+    );
+    let barrier = snap
+        .histogram("parallel_color_barrier_ns{chain=\"0\"}")
+        .expect("barrier latency histogram registered");
+    assert!(barrier.count > 0);
+}

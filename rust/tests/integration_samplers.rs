@@ -2,7 +2,7 @@
 
 use mbgibbs::analysis::diagnostics;
 use mbgibbs::bench::workload::SamplerSpec;
-use mbgibbs::coordinator::{run_chains, RunSpec};
+use mbgibbs::coordinator::{run_chains, RunOptions, RunSpec};
 use mbgibbs::coordinator::{EnergyTraceSink, SampleSink};
 use mbgibbs::graph::models;
 use mbgibbs::rng::Pcg64;
@@ -25,7 +25,7 @@ fn paper_potts_error_decreases_all_samplers() {
             .record_every(5_000)
             .build()
             .unwrap();
-        let report = run_chains(&model.graph, &run);
+        let report = run_chains(&model.graph, &run, &RunOptions::default());
         let c = &report.chains[0];
         let start = c.trajectory.first().unwrap().1;
         let end = c.final_error;
