@@ -1,0 +1,103 @@
+//! Service throughput benchmark: queries/sec against a live daemon on
+//! the degree-1000 multipartite Ising model (n = 1250, Δ = 1000) —
+//! the start of the service perf trajectory (BENCH_service.json).
+//!
+//! Four client threads hammer the NDJSON port with marginal queries
+//! while the pool free-runs; a separate pass measures status queries.
+//! Results land in `bench_out/BENCH_service.json`.
+//!
+//! Run: `cargo bench --bench service [-- --quick]`
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use mbgibbs::bench::workload::SamplerSpec;
+use mbgibbs::graph::models;
+use mbgibbs::samplers::EnergyPath;
+use mbgibbs::service::{PoolConfig, Service, ServiceOptions};
+
+const CLIENTS: usize = 4;
+
+/// One persistent client connection issuing `line` in a loop until
+/// `stop`; counts completed round trips.
+fn client_loop(addr: SocketAddr, line: String, stop: Arc<AtomicBool>, done: Arc<AtomicU64>) {
+    let stream = TcpStream::connect(addr).expect("connect");
+    stream
+        .set_read_timeout(Some(Duration::from_secs(30)))
+        .expect("timeout");
+    let mut reader = BufReader::new(stream.try_clone().expect("clone"));
+    let mut writer = stream;
+    let mut resp = String::new();
+    while !stop.load(Ordering::Relaxed) {
+        writer.write_all(line.as_bytes()).expect("write");
+        writer.write_all(b"\n").expect("write");
+        writer.flush().expect("flush");
+        resp.clear();
+        reader.read_line(&mut resp).expect("read");
+        assert!(resp.contains("\"ok\":true"), "query failed: {resp}");
+        done.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// Measure sustained queries/sec for `line` over `secs` seconds.
+fn measure(addr: SocketAddr, line: &str, secs: f64) -> (u64, f64) {
+    let stop = Arc::new(AtomicBool::new(false));
+    let done = Arc::new(AtomicU64::new(0));
+    let handles: Vec<_> = (0..CLIENTS)
+        .map(|_| {
+            let (line, stop, done) = (line.to_string(), stop.clone(), done.clone());
+            std::thread::spawn(move || client_loop(addr, line, stop, done))
+        })
+        .collect();
+    let t0 = Instant::now();
+    std::thread::sleep(Duration::from_secs_f64(secs));
+    stop.store(true, Ordering::Relaxed);
+    for h in handles {
+        h.join().expect("client thread");
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+    let total = done.load(Ordering::Relaxed);
+    (total, total as f64 / elapsed)
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let secs = if quick { 0.5 } else { 1.5 };
+
+    // The acceptance workload: degree-1000 multipartite Ising.
+    let g = models::ising_multipartite(5, 250, 2.0);
+    let n = g.n();
+    let mut cfg = PoolConfig::new(SamplerSpec::Gibbs(EnergyPath::Specialized), 2);
+    cfg.seed = 13;
+    cfg.record_every = (n as u64) * 4;
+    cfg.publish_every = 4_096;
+    let svc = Service::start(Arc::new(g), cfg, &ServiceOptions::default()).expect("service");
+    let addr = svc.local_addr();
+    // Let the pool publish at least one slice so queries see samples.
+    std::thread::sleep(Duration::from_millis(300));
+
+    let (marginal_n, marginal_qps) = measure(addr, "{\"type\":\"marginal\",\"var\":0}", secs);
+    let (status_n, status_qps) = measure(addr, "{\"type\":\"status\"}", secs);
+
+    println!(
+        "service bench (n = {n}, Δ = 1000, {CLIENTS} clients, 2 chains):\n\
+         \x20 marginal: {marginal_n} queries, {marginal_qps:.0} q/s\n\
+         \x20 status:   {status_n} queries, {status_qps:.0} q/s"
+    );
+
+    let out_dir = std::path::Path::new("bench_out");
+    std::fs::create_dir_all(out_dir).expect("bench_out");
+    let json = format!(
+        "{{\n  \"bench\": \"service\",\n  \"model\": \"ising_multipartite(5, 250, 2.0)\",\n  \
+         \"clients\": {CLIENTS},\n  \"chains\": 2,\n  \"seconds_per_pass\": {secs},\n  \
+         \"marginal_queries\": {marginal_n},\n  \"marginal_qps\": {marginal_qps:.1},\n  \
+         \"status_queries\": {status_n},\n  \"status_qps\": {status_qps:.1}\n}}\n"
+    );
+    std::fs::write(out_dir.join("BENCH_service.json"), json).expect("write BENCH_service.json");
+    println!("wrote bench_out/BENCH_service.json");
+
+    svc.shutdown().expect("shutdown");
+}

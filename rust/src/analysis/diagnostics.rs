@@ -75,6 +75,27 @@ pub fn gelman_rubin(chains: &[Vec<f64>]) -> f64 {
     (var_plus / w).sqrt()
 }
 
+/// Cross-chain convergence summary on per-chain scalar traces (e.g. the
+/// thinned energy series ζ(x)): `(R̂, pooled ESS)`. Traces are truncated
+/// to the shortest chain so mixed-length inputs (resumes, a live pool
+/// mid-publish) still diagnose. `R̂` is `Some` with ≥ 2 chains and ≥ 2
+/// points per chain; pooled ESS (Σ over chains of n/τ) needs only ≥ 2
+/// points per chain.
+pub fn cross_chain_diagnostics(traces: &[&[f64]]) -> (Option<f64>, Option<f64>) {
+    let min_len = traces.iter().map(|t| t.len()).min().unwrap_or(0);
+    if min_len < 2 {
+        return (None, None);
+    }
+    let truncated: Vec<Vec<f64>> = traces.iter().map(|t| t[..min_len].to_vec()).collect();
+    let rhat = if truncated.len() >= 2 {
+        Some(gelman_rubin(&truncated))
+    } else {
+        None
+    };
+    let pooled_ess = Some(truncated.iter().map(|t| effective_sample_size(t)).sum());
+    (rhat, pooled_ess)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -130,6 +151,22 @@ mod tests {
         }
         let r = gelman_rubin(&chains);
         assert!(r > 2.0, "rhat = {r}");
+    }
+
+    #[test]
+    fn cross_chain_handles_short_and_uneven_traces() {
+        assert_eq!(cross_chain_diagnostics(&[]), (None, None));
+        assert_eq!(cross_chain_diagnostics(&[&[1.0]]), (None, None));
+        // One chain: no R̂, but an ESS.
+        let a = iid_series(100, 30);
+        let (rhat, ess) = cross_chain_diagnostics(&[&a]);
+        assert!(rhat.is_none());
+        assert!(ess.unwrap() > 0.0);
+        // Uneven lengths truncate to the shortest.
+        let b = iid_series(60, 31);
+        let (rhat, _) = cross_chain_diagnostics(&[&a, &b]);
+        let (rhat_trunc, _) = cross_chain_diagnostics(&[&a[..60], &b]);
+        assert_eq!(rhat.unwrap(), rhat_trunc.unwrap());
     }
 
     #[test]

@@ -82,6 +82,18 @@ impl MarginalEstimator {
         acc / self.n as f64
     }
 
+    /// Fold another estimator's counts into this one (e.g. pooling
+    /// per-chain estimates into a cross-chain aggregate). Panics if the
+    /// shapes differ.
+    pub fn merge(&mut self, other: &MarginalEstimator) {
+        assert_eq!(self.n, other.n, "merge: variable count mismatch");
+        assert_eq!(self.d, other.d, "merge: domain size mismatch");
+        for (a, &b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += b;
+        }
+        self.samples += other.samples;
+    }
+
     /// Reset all counts.
     pub fn reset(&mut self) {
         self.counts.fill(0);
@@ -133,6 +145,20 @@ mod tests {
         m.update(&[1]);
         let reference = vec![vec![2.0 / 3.0, 1.0 / 3.0]];
         assert!(m.l2_error_vs(&reference) < 1e-12);
+    }
+
+    #[test]
+    fn merge_pools_counts() {
+        let mut a = MarginalEstimator::new(1, 2);
+        a.update(&[0]);
+        let mut b = MarginalEstimator::new(1, 2);
+        b.update(&[1]);
+        b.update(&[1]);
+        a.merge(&b);
+        assert_eq!(a.samples(), 3);
+        let p = a.marginal(0);
+        assert!((p[0] - 1.0 / 3.0).abs() < 1e-12);
+        assert!((p[1] - 2.0 / 3.0).abs() < 1e-12);
     }
 
     #[test]

@@ -11,6 +11,8 @@
 //! mbgibbs check-artifacts               XLA vs native energy parity
 //! mbgibbs info                          paper-model statistics (Δ, L, Ψ)
 //! mbgibbs metrics --snapshot FILE       pretty-print a saved metrics snapshot
+//! mbgibbs serve --config cfg.toml       run the persistent inference service
+//! mbgibbs query --addr HOST:PORT        query a running service
 //! ```
 //!
 //! Common flags: `--iters N`, `--out DIR`, `--seed S`, `--quick`.
@@ -27,6 +29,8 @@
 //! the review cadence. See `docs/ADAPTIVE.md`.
 
 use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Write as IoWrite};
+use std::net::TcpStream;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
@@ -49,6 +53,7 @@ use crate::graph::models;
 use crate::metrics::{expose, MetricsHub, Snapshot, Unit};
 use crate::rng::Pcg64;
 use crate::runtime::{backend::parity_report, ArtifactStore, XlaDenseBackend};
+use crate::service::{PoolConfig, QueryDefaults, Service, ServiceOptions};
 
 /// Parsed command line: subcommand plus `--key value` / `--flag` options.
 #[derive(Clone, Debug, Default)]
@@ -174,6 +179,8 @@ pub fn run(raw: Vec<String>) -> Result<()> {
         "check-artifacts" => cmd_check_artifacts(&args),
         "info" => cmd_info(),
         "metrics" => cmd_metrics(&args),
+        "serve" => cmd_serve(&args),
+        "query" => cmd_query(&args),
         other => bail!("unknown subcommand {other:?} (try `mbgibbs help`)"),
     }
 }
@@ -193,7 +200,13 @@ fn print_help() {
          \x20 validate               numeric validation of Theorems 2 and 4\n\
          \x20 check-artifacts        XLA kernels vs native energies parity check\n\
          \x20 info                   paper-model statistics (Δ, L, Ψ)\n\
-         \x20 metrics --snapshot F   pretty-print a saved metrics snapshot (JSON)\n\n\
+         \x20 metrics --snapshot F   pretty-print a saved metrics snapshot (JSON)\n\
+         \x20 serve --config FILE    persistent inference service (docs/SERVICE.md);\n\
+         \x20                        overrides: --port --pool --workers --seed --resume\n\
+         \x20 query --addr H:P       query a running service; --type status (default) |\n\
+         \x20                        marginal | conditional | metrics | shutdown,\n\
+         \x20                        --var N, --evidence \"i=v,j=v\", --burn-in N,\n\
+         \x20                        --samples N\n\n\
          SAMPLE OBSERVABILITY:\n\
          \x20 --metrics-out PATH     write end-of-run metrics as JSON (+ PATH.prom)\n\
          \x20 --metrics-every SECS   also flush the metrics files periodically\n\
@@ -333,6 +346,16 @@ fn cmd_sample(args: &Args) -> Result<()> {
         "throughput: {:.0} steps/s wall-clock aggregate, {:.0} steps/s mean per chain",
         report.steps_per_sec, report.per_chain_steps_per_sec
     );
+    match (report.rhat, report.pooled_ess) {
+        (Some(rhat), Some(ess)) => {
+            println!("convergence: R-hat = {rhat:.4} ({} chains), pooled ESS = {ess:.0}",
+                report.chains.len());
+        }
+        (None, Some(ess)) => {
+            println!("convergence: pooled ESS = {ess:.0} (run ≥ 2 chains for R-hat)");
+        }
+        _ => {}
+    }
     t.write_csv(&cfg.run.output_dir)?;
 
     if let Some(path) = &metrics_out {
@@ -425,6 +448,157 @@ fn cmd_metrics(args: &Args) -> Result<()> {
         snap.histograms.len()
     );
     print_metrics_tables(&snap);
+    Ok(())
+}
+
+/// `mbgibbs serve --config FILE`: run the persistent inference service
+/// until SIGINT/SIGTERM or a client `shutdown` request.
+fn cmd_serve(args: &Args) -> Result<()> {
+    let config_path = args
+        .options
+        .get("config")
+        .ok_or_else(|| anyhow!("serve requires --config FILE"))?;
+    let cfg = ExperimentConfig::load(Path::new(config_path))?;
+    let (graph, _dense) = cfg.build_model()?;
+    let spec = cfg.sampler_spec(&graph)?;
+    let sc = &cfg.service;
+    let resume = args.has_flag("resume");
+
+    let mut pool_cfg = PoolConfig::new(spec, args.opt_u64("pool", sc.pool as u64)? as usize);
+    pool_cfg.seed = args.opt_u64("seed", cfg.run.seed)?;
+    pool_cfg.workers = args.opt_u64("workers", sc.workers as u64)? as usize;
+    pool_cfg.record_every = cfg.run.record_every;
+    pool_cfg.publish_every = sc.publish_every;
+    pool_cfg.burn_in = sc.burn_in;
+    pool_cfg.window = sc.window;
+    pool_cfg.resume = resume;
+    if sc.checkpoint_on_shutdown || resume {
+        pool_cfg.checkpoint_dir = Some(cfg.run.output_dir.join("checkpoints"));
+        pool_cfg.checkpoint_on_shutdown = sc.checkpoint_on_shutdown;
+    }
+
+    let port = args.opt_u64("port", sc.port as u64)?;
+    if port > u16::MAX as u64 {
+        bail!("--port must fit in a u16, got {port}");
+    }
+    let opts = ServiceOptions {
+        host: sc.host.clone(),
+        port: port as u16,
+        query: QueryDefaults {
+            burn_in: sc.query_burn_in,
+            samples: sc.query_samples,
+        },
+        ..ServiceOptions::default()
+    };
+
+    println!(
+        "model: {} (n = {}, D = {}, Δ = {})",
+        cfg.model.kind,
+        graph.n(),
+        graph.domain_size(),
+        graph.stats().delta,
+    );
+    println!("sampler: {}", spec.label(&graph));
+    let chains = pool_cfg.chains;
+    let workers = pool_cfg.workers;
+    let svc = Service::start(Arc::new(graph), pool_cfg, &opts)?;
+    println!(
+        "serving on {} ({chains} chains, {workers} workers/chain{})",
+        svc.local_addr(),
+        if resume { ", resumed" } else { "" },
+    );
+    svc.run_until_shutdown()
+}
+
+/// Build the NDJSON request line for `mbgibbs query` from its flags.
+fn build_query_line(args: &Args) -> Result<String> {
+    let qtype = match args.options.get("type") {
+        Some(t) => t.as_str(),
+        None => "status",
+    };
+    let required_u64 = |key: &str| -> Result<u64> {
+        let v = args
+            .options
+            .get(key)
+            .ok_or_else(|| anyhow!("query --type {qtype} requires --{key} N"))?;
+        v.parse()
+            .with_context(|| format!("--{key} must be a non-negative integer, got {v:?}"))
+    };
+    Ok(match qtype {
+        "status" => "{\"type\":\"status\"}".to_string(),
+        "metrics" => "{\"type\":\"metrics\"}".to_string(),
+        "shutdown" => "{\"type\":\"shutdown\"}".to_string(),
+        "marginal" => format!("{{\"type\":\"marginal\",\"var\":{}}}", required_u64("var")?),
+        "conditional" => {
+            let var = required_u64("var")?;
+            let spec = args.options.get("evidence").map(String::as_str).unwrap_or("");
+            let evidence = parse_evidence(spec)?;
+            let pairs: Vec<String> = evidence
+                .iter()
+                .map(|(site, value)| format!("\"{site}\":{value}"))
+                .collect();
+            let mut line = format!(
+                "{{\"type\":\"conditional\",\"var\":{var},\"evidence\":{{{}}}",
+                pairs.join(",")
+            );
+            if args.options.contains_key("burn-in") {
+                line.push_str(&format!(",\"burn_in\":{}", required_u64("burn-in")?));
+            }
+            if args.options.contains_key("samples") {
+                line.push_str(&format!(",\"samples\":{}", required_u64("samples")?));
+            }
+            line.push('}');
+            line
+        }
+        other => bail!(
+            "unknown query type {other:?} (expected status | marginal | conditional | \
+             metrics | shutdown)"
+        ),
+    })
+}
+
+/// Parse `--evidence "0=1,3=2"` into `(site, value)` pairs.
+fn parse_evidence(spec: &str) -> Result<Vec<(u64, u64)>> {
+    let mut out = Vec::new();
+    for part in spec.split(',').filter(|p| !p.trim().is_empty()) {
+        let (site, value) = part
+            .split_once('=')
+            .ok_or_else(|| anyhow!("evidence entries look like SITE=VALUE, got {part:?}"))?;
+        let site = site
+            .trim()
+            .parse()
+            .with_context(|| format!("bad evidence site {:?}", site.trim()))?;
+        let value = value
+            .trim()
+            .parse()
+            .with_context(|| format!("bad evidence value {:?}", value.trim()))?;
+        out.push((site, value));
+    }
+    Ok(out)
+}
+
+/// `mbgibbs query --addr HOST:PORT [--type ...]`: one NDJSON round trip
+/// against a running service; prints the raw response line.
+fn cmd_query(args: &Args) -> Result<()> {
+    let addr = args
+        .options
+        .get("addr")
+        .map(String::as_str)
+        .unwrap_or("127.0.0.1:7171");
+    let line = build_query_line(args)?;
+    let stream = TcpStream::connect(addr).with_context(|| format!("connecting to {addr}"))?;
+    stream.set_read_timeout(Some(Duration::from_secs(60)))?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = stream;
+    writer.write_all(line.as_bytes())?;
+    writer.write_all(b"\n")?;
+    writer.flush()?;
+    let mut resp = String::new();
+    reader.read_line(&mut resp)?;
+    if resp.is_empty() {
+        bail!("service at {addr} closed the connection without responding");
+    }
+    println!("{}", resp.trim_end());
     Ok(())
 }
 
@@ -664,6 +838,55 @@ mod tests {
     #[test]
     fn unknown_subcommand_fails() {
         assert!(run(vec!["frobnicate".to_string()]).is_err());
+    }
+
+    #[test]
+    fn evidence_spec_parses() {
+        assert_eq!(parse_evidence("0=1, 3=2").unwrap(), vec![(0, 1), (3, 2)]);
+        assert_eq!(parse_evidence("").unwrap(), vec![]);
+        assert!(parse_evidence("0:1").is_err());
+        assert!(parse_evidence("x=1").is_err());
+        assert!(parse_evidence("0=y").is_err());
+    }
+
+    #[test]
+    fn query_lines_are_built_correctly() {
+        let a = parse(&["query"]);
+        assert_eq!(build_query_line(&a).unwrap(), "{\"type\":\"status\"}");
+
+        let a = parse(&["query", "--type", "marginal", "--var", "4"]);
+        assert_eq!(
+            build_query_line(&a).unwrap(),
+            "{\"type\":\"marginal\",\"var\":4}"
+        );
+
+        let a = parse(&[
+            "query",
+            "--type",
+            "conditional",
+            "--var",
+            "2",
+            "--evidence",
+            "0=1,3=2",
+            "--samples",
+            "100",
+        ]);
+        assert_eq!(
+            build_query_line(&a).unwrap(),
+            "{\"type\":\"conditional\",\"var\":2,\"evidence\":{\"0\":1,\"3\":2},\"samples\":100}"
+        );
+
+        // Marginal without --var, and unknown types, are errors.
+        let a = parse(&["query", "--type", "marginal"]);
+        assert!(build_query_line(&a).is_err());
+        let a = parse(&["query", "--type", "nope"]);
+        assert!(build_query_line(&a).is_err());
+    }
+
+    #[test]
+    fn serve_requires_config() {
+        let err = run(vec!["serve".to_string()]).unwrap_err();
+        assert!(err.to_string().contains("--config"));
     }
 
     #[test]

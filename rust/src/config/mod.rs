@@ -12,5 +12,6 @@ pub mod toml;
 pub use json::JsonValue;
 pub use schema::{
     ControlConfig, ExperimentConfig, ModelConfig, ParallelConfig, RunConfig, SamplerConfig,
+    ServiceConfig,
 };
 pub use toml::{TomlDoc, TomlValue};

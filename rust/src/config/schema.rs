@@ -29,7 +29,16 @@
 //!
 //! [parallel]
 //! workers = 4            # 0 = serial random-scan (default)
+//!
+//! [service]
+//! port = 7171            # `mbgibbs serve` listener (0 = ephemeral)
+//! pool = 4               # background chains
+//! workers = 0            # within-chain workers per pool chain
+//! checkpoint_on_shutdown = true
 //! ```
+//!
+//! Model `type = "uai"` loads a factor graph from a UAI MARKOV file via
+//! `path = "model.uai"` instead of generating one.
 
 use std::path::{Path, PathBuf};
 
@@ -60,6 +69,8 @@ pub struct ModelConfig {
     pub degree: usize,
     /// Seed (random models).
     pub seed: u64,
+    /// Path to a `.uai` file (`type = "uai"` only).
+    pub path: Option<PathBuf>,
 }
 
 /// Sampler section.
@@ -164,6 +175,51 @@ pub struct ParallelConfig {
     pub workers: usize,
 }
 
+/// Service section: the `mbgibbs serve` daemon (see `docs/SERVICE.md`).
+#[derive(Clone, Debug)]
+pub struct ServiceConfig {
+    /// Bind host for the NDJSON/Prometheus listener.
+    pub host: String,
+    /// Bind port (0 = ephemeral; the bound port is printed on startup).
+    pub port: u16,
+    /// Number of background chains in the pool.
+    pub pool: usize,
+    /// Within-chain worker threads per pool chain (0 = serial random
+    /// scan; ≥ 1 = chromatic sweeps, parallel-capable samplers only).
+    pub workers: usize,
+    /// Chains fold local samples into the live estimator every this many
+    /// iterations.
+    pub publish_every: u64,
+    /// Iterations discarded before a chain contributes samples.
+    pub burn_in: u64,
+    /// Per-chain energy-trace window for live R̂ / pooled-ESS.
+    pub window: usize,
+    /// Flush v2 chain checkpoints to `run.output_dir/checkpoints/` on
+    /// shutdown, enabling bit-exact `--resume`.
+    pub checkpoint_on_shutdown: bool,
+    /// Default re-burn-in steps for conditional queries.
+    pub query_burn_in: u64,
+    /// Default estimation steps for conditional queries.
+    pub query_samples: u64,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        Self {
+            host: "127.0.0.1".to_string(),
+            port: 7171,
+            pool: 2,
+            workers: 0,
+            publish_every: 4_096,
+            burn_in: 0,
+            window: 4_096,
+            checkpoint_on_shutdown: true,
+            query_burn_in: 2_000,
+            query_samples: 4_000,
+        }
+    }
+}
+
 /// A full experiment description.
 #[derive(Clone, Debug)]
 pub struct ExperimentConfig {
@@ -177,6 +233,8 @@ pub struct ExperimentConfig {
     pub control: ControlConfig,
     /// Within-chain parallelism.
     pub parallel: ParallelConfig,
+    /// Inference-service parameters.
+    pub service: ServiceConfig,
 }
 
 impl ExperimentConfig {
@@ -220,6 +278,7 @@ impl ExperimentConfig {
             gamma: get_f64("model", "gamma", 1.5)?,
             degree: get_u64("model", "degree", 8)? as usize,
             seed: get_u64("model", "seed", 0)?,
+            path: gets("model", "path").and_then(|v| v.as_str()).map(PathBuf::from),
         };
         let sampler = SamplerConfig {
             algorithm: gets("sampler", "algorithm")
@@ -257,12 +316,42 @@ impl ExperimentConfig {
         let parallel = ParallelConfig {
             workers: get_u64("parallel", "workers", 0)? as usize,
         };
+        let get_bool = |sec: &str, key: &str, default: bool| -> Result<bool> {
+            match gets(sec, key) {
+                None => Ok(default),
+                Some(v) => v
+                    .as_bool()
+                    .ok_or_else(|| anyhow!("{sec}.{key} must be true or false")),
+            }
+        };
+        let sd = ServiceConfig::default();
+        let port = get_u64("service", "port", sd.port as u64)?;
+        if port > u16::MAX as u64 {
+            bail!("service.port must fit in a u16, got {port}");
+        }
+        let service = ServiceConfig {
+            host: gets("service", "host").and_then(|v| v.as_str()).unwrap_or(&sd.host).to_string(),
+            port: port as u16,
+            pool: get_u64("service", "pool", sd.pool as u64)? as usize,
+            workers: get_u64("service", "workers", sd.workers as u64)? as usize,
+            publish_every: get_u64("service", "publish_every", sd.publish_every)?,
+            burn_in: get_u64("service", "burn_in", sd.burn_in)?,
+            window: get_u64("service", "window", sd.window as u64)? as usize,
+            checkpoint_on_shutdown: get_bool(
+                "service",
+                "checkpoint_on_shutdown",
+                sd.checkpoint_on_shutdown,
+            )?,
+            query_burn_in: get_u64("service", "query_burn_in", sd.query_burn_in)?,
+            query_samples: get_u64("service", "query_samples", sd.query_samples)?,
+        };
         Ok(Self {
             model,
             sampler,
             run,
             control,
             parallel,
+            service,
         })
     }
 
@@ -284,6 +373,13 @@ impl ExperimentConfig {
                 models::potts_random(m.grid_n * m.grid_n, m.d, m.degree, m.beta, m.seed),
                 None,
             ),
+            "uai" => {
+                let path = m
+                    .path
+                    .as_ref()
+                    .ok_or_else(|| anyhow!("model.type = \"uai\" requires model.path"))?;
+                (crate::graph::io::load_uai(path)?, None)
+            }
             other => bail!("unknown model type {other:?}"),
         })
     }
@@ -404,6 +500,46 @@ seed = 9
             }
             _ => panic!("wrong spec"),
         }
+    }
+
+    #[test]
+    fn service_section_parses() {
+        let cfg = ExperimentConfig::from_doc(&doc("")).unwrap();
+        assert_eq!(cfg.service.port, 7171);
+        assert_eq!(cfg.service.pool, 2);
+        assert!(cfg.service.checkpoint_on_shutdown);
+
+        let cfg = ExperimentConfig::from_doc(&doc(
+            "[service]\nport = 0\npool = 3\ncheckpoint_on_shutdown = false\nquery_samples = 128",
+        ))
+        .unwrap();
+        assert_eq!(cfg.service.port, 0);
+        assert_eq!(cfg.service.pool, 3);
+        assert!(!cfg.service.checkpoint_on_shutdown);
+        assert_eq!(cfg.service.query_samples, 128);
+
+        assert!(ExperimentConfig::from_doc(&doc("[service]\nport = 70000")).is_err());
+        assert!(
+            ExperimentConfig::from_doc(&doc("[service]\ncheckpoint_on_shutdown = 3")).is_err()
+        );
+    }
+
+    #[test]
+    fn uai_model_loads_from_path() {
+        let dir = std::env::temp_dir().join(format!("mbgibbs_cfg_uai_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let g = crate::graph::models::tiny_random(3, 2, 0.5, 5);
+        let path = dir.join("m.uai");
+        std::fs::write(&path, crate::graph::io::write_uai(&g)).unwrap();
+        let toml = format!("[model]\ntype = \"uai\"\npath = \"{}\"", path.display());
+        let cfg = ExperimentConfig::from_doc(&doc(&toml)).unwrap();
+        let (loaded, dense) = cfg.build_model().unwrap();
+        assert_eq!(loaded.n(), 3);
+        assert!(dense.is_none());
+        // Missing path is a config error, not a panic.
+        let cfg = ExperimentConfig::from_doc(&doc("[model]\ntype = \"uai\"")).unwrap();
+        assert!(cfg.build_model().is_err());
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -32,7 +32,7 @@ use crate::runtime::parallel::ChromaticSweepEngine;
 use crate::samplers::Sampler;
 
 use super::checkpoint::Checkpoint;
-use super::sink::MarginalTrajectorySink;
+use super::sink::{EnergyTraceSink, MarginalTrajectorySink};
 
 /// What to run. Construct with [`RunSpec::builder`]; the fields stay
 /// public for reading (reports, figure harness, tests).
@@ -251,6 +251,9 @@ pub struct ChainReport {
     pub final_state: Vec<u16>,
     /// Retained trace events (empty unless `trace_capacity > 0`).
     pub trace: Vec<TraceEvent>,
+    /// Thinned total-energy series ζ(x) sampled every `record_every`
+    /// iterations — the scalar the cross-chain diagnostics run on.
+    pub energy_trace: Vec<f64>,
 }
 
 /// Aggregated results.
@@ -269,6 +272,15 @@ pub struct RunReport {
     pub per_chain_steps_per_sec: f64,
     /// Mean factor evaluations per iteration.
     pub evals_per_iter: f64,
+    /// Cross-chain Gelman–Rubin R̂ on the thinned energy series
+    /// (`Some` with ≥ 2 chains and ≥ 2 recorded points per chain;
+    /// traces are truncated to the shortest chain so mixed-resume runs
+    /// still diagnose). R̂ ≈ 1 indicates the chains agree.
+    pub rhat: Option<f64>,
+    /// Pooled effective sample size: Σ over chains of n/τ on the same
+    /// thinned energy series (`Some` when every chain recorded ≥ 2
+    /// points).
+    pub pooled_ess: Option<f64>,
     /// End-of-run snapshot of every metric the run touched.
     pub metrics: Snapshot,
 }
@@ -278,6 +290,13 @@ impl RunReport {
     pub fn mean_final_error(&self) -> f64 {
         self.chains.iter().map(|c| c.final_error).sum::<f64>() / self.chains.len() as f64
     }
+}
+
+/// Cross-chain convergence diagnostics on the thinned energy traces:
+/// (R̂, pooled ESS) per the field docs on [`RunReport`].
+pub(crate) fn energy_diagnostics(chains: &[ChainReport]) -> (Option<f64>, Option<f64>) {
+    let traces: Vec<&[f64]> = chains.iter().map(|c| c.energy_trace.as_slice()).collect();
+    crate::analysis::diagnostics::cross_chain_diagnostics(&traces)
 }
 
 /// Caller-side options orthogonal to *what* runs (that is [`RunSpec`]'s
@@ -336,11 +355,14 @@ pub fn run_chains(graph: &FactorGraph, spec: &RunSpec, opts: &RunOptions) -> Run
         .map(|r| r.steps_executed as f64 / r.seconds.max(1e-12))
         .sum::<f64>()
         / reports.len() as f64;
+    let (rhat, pooled_ess) = energy_diagnostics(&reports);
     RunReport {
         steps_per_sec: executed_steps as f64 / wall_secs.max(1e-12),
         per_chain_steps_per_sec,
         evals_per_iter: total_evals as f64 / logical_steps as f64,
         chains: reports,
+        rhat,
+        pooled_ess,
         metrics: hub.snapshot(),
     }
 }
@@ -451,6 +473,7 @@ fn run_one_chain(
     }
 
     let mut sink = MarginalTrajectorySink::new(n, d, spec.record_every);
+    let mut energy_sink = EnergyTraceSink::new(graph, spec.record_every);
     let start = Instant::now();
     for it in start_iter..spec.iters {
         if it % LATENCY_SAMPLE == 0 {
@@ -463,6 +486,7 @@ fn run_one_chain(
         }
         use super::sink::SampleSink;
         sink.on_sample(it, &state);
+        energy_sink.on_sample(it, &state);
         if spec.progress_every > 0 && (it + 1) % spec.progress_every == 0 {
             let done = it + 1 - start_iter;
             let rate = done as f64 / start.elapsed().as_secs_f64().max(1e-9);
@@ -508,6 +532,7 @@ fn run_one_chain(
         seconds,
         final_state: state,
         trace: trace_buf.events_in_order(),
+        energy_trace: energy_sink.trace,
     }
 }
 
@@ -587,6 +612,7 @@ fn run_one_chain_parallel(
     }
 
     let mut sink = MarginalTrajectorySink::new(n, d, spec.record_every);
+    let mut energy_sink = EnergyTraceSink::new(graph, spec.record_every);
     let start = Instant::now();
     // A boundary at `iter` fires cadence `every` if it is the first
     // boundary at or past a multiple of `every` since `prev`.
@@ -595,6 +621,7 @@ fn run_one_chain_parallel(
     engine.run(&mut state, start_iter, spec.iters, &mut |ctx| {
         use super::sink::SampleSink;
         sink.on_sample(ctx.iter, ctx.state);
+        energy_sink.on_sample(ctx.iter, ctx.state);
         if spec.progress_every > 0 && crossed(prev_iter, ctx.iter, spec.progress_every) {
             let done = ctx.iter - start_iter;
             let rate = done as f64 / start.elapsed().as_secs_f64().max(1e-9);
@@ -641,6 +668,7 @@ fn run_one_chain_parallel(
         seconds,
         final_state: state,
         trace: trace_buf.events_in_order(),
+        energy_trace: energy_sink.trace,
     }
 }
 
@@ -762,6 +790,40 @@ mod tests {
                 .counter("sampler_steps_total{chain=\"0\",sampler=\"gibbs\"}"),
             Some(n * 50)
         );
+    }
+
+    /// Multi-chain runs surface cross-chain R̂ and pooled ESS computed
+    /// on the thinned energy traces.
+    #[test]
+    fn report_carries_convergence_diagnostics() {
+        let g = models::tiny_random(4, 3, 0.8, 5);
+        let spec = RunSpec::builder(SamplerSpec::Gibbs(EnergyPath::Specialized))
+            .iters(20_000)
+            .chains(3)
+            .record_every(100)
+            .build()
+            .unwrap();
+        let report = run_chains(&g, &spec, &RunOptions::default());
+        for c in &report.chains {
+            assert_eq!(c.energy_trace.len(), 200, "one ζ sample per record_every");
+        }
+        let rhat = report.rhat.expect("3 chains must produce an R̂");
+        assert!(
+            (rhat - 1.0).abs() < 0.25,
+            "well-mixed tiny model should have R̂ near 1, got {rhat}"
+        );
+        let ess = report.pooled_ess.expect("pooled ESS must be present");
+        assert!(ess > 3.0 && ess <= 600.0, "pooled ESS out of range: {ess}");
+
+        // A single chain has no cross-chain R̂ but still reports ESS.
+        let spec1 = RunSpec::builder(SamplerSpec::Gibbs(EnergyPath::Specialized))
+            .iters(5_000)
+            .record_every(100)
+            .build()
+            .unwrap();
+        let r1 = run_chains(&g, &spec1, &RunOptions::default());
+        assert!(r1.rhat.is_none());
+        assert!(r1.pooled_ess.is_some());
     }
 
     #[test]

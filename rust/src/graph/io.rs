@@ -1,0 +1,286 @@
+//! Graph I/O: the UAI competition file format.
+//!
+//! The UAI format describes a Markov network as a preamble (variable
+//! cardinalities and factor scopes) followed by one dense potential
+//! table per factor:
+//!
+//! ```text
+//! MARKOV
+//! 3                 # variables
+//! 2 2 2             # cardinalities
+//! 2                 # factors
+//! 2 0 1             # scope: arity, then variable ids
+//! 2 1 2
+//!
+//! 4                 # table size, then D^arity values (last var fastest)
+//!  1.0 0.5 0.5 1.0
+//! 4
+//!  1.0 2.0 2.0 1.0
+//! ```
+//!
+//! UAI potentials are *multiplicative* (π ∝ Π θ_φ); this crate's
+//! [`FactorGraph`] wants non-negative *energies* with π ∝ exp(Σ φ). The
+//! loader takes φ = ln θ and shifts each table by −min ln θ so entries
+//! are non-negative — a per-factor constant that cancels in π. Zero
+//! potentials (hard constraints) would need −∞ energies and are
+//! rejected.
+//!
+//! Restrictions inherited from the substrate: every variable must share
+//! one cardinality D (the paper's model class), and factor arity is
+//! capped at 4 (the [`FactorGraphBuilder`] table limit).
+
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::{FactorGraph, FactorGraphBuilder};
+
+/// Parse a UAI `MARKOV` document into a [`FactorGraph`].
+pub fn parse_uai(text: &str) -> Result<FactorGraph> {
+    // Strip `#`/`//`-to-end-of-line comments (not part of the official
+    // grammar, but common in hand-written files), then tokenize.
+    let cleaned: String = text
+        .lines()
+        .map(|l| {
+            let l = l.split('#').next().unwrap_or("");
+            l.split("//").next().unwrap_or("")
+        })
+        .collect::<Vec<_>>()
+        .join("\n");
+    let mut toks = cleaned.split_whitespace();
+    let mut next = |what: &str| {
+        toks.next()
+            .ok_or_else(|| anyhow!("unexpected end of file while reading {what}"))
+    };
+
+    let header = next("header")?;
+    if !header.eq_ignore_ascii_case("MARKOV") {
+        bail!("unsupported UAI network type {header:?} (only MARKOV)");
+    }
+    let n: usize = next("variable count")?
+        .parse()
+        .context("bad variable count")?;
+    if n == 0 {
+        bail!("UAI file declares zero variables");
+    }
+    let mut cards = Vec::with_capacity(n);
+    for i in 0..n {
+        let c: u16 = next("cardinality")?
+            .parse()
+            .with_context(|| format!("bad cardinality for variable {i}"))?;
+        cards.push(c);
+    }
+    let d = cards[0];
+    if d < 2 {
+        bail!("domain size must be >= 2, got {d}");
+    }
+    if cards.iter().any(|&c| c != d) {
+        bail!(
+            "variables must share one cardinality (found {cards:?}); the \
+             factor-graph substrate uses a single domain D"
+        );
+    }
+    let m: usize = next("factor count")?.parse().context("bad factor count")?;
+    if m == 0 {
+        bail!("UAI file declares zero factors");
+    }
+    let mut scopes: Vec<Vec<u32>> = Vec::with_capacity(m);
+    for f in 0..m {
+        let arity: usize = next("factor arity")?
+            .parse()
+            .with_context(|| format!("bad arity for factor {f}"))?;
+        if arity == 0 || arity > 4 {
+            bail!("factor {f} has arity {arity}; supported range is 1..=4");
+        }
+        let mut vars = Vec::with_capacity(arity);
+        for _ in 0..arity {
+            let v: u32 = next("scope variable")?
+                .parse()
+                .with_context(|| format!("bad scope variable in factor {f}"))?;
+            if v as usize >= n {
+                bail!("factor {f} references variable {v}, but n = {n}");
+            }
+            vars.push(v);
+        }
+        scopes.push(vars);
+    }
+
+    let mut b = FactorGraphBuilder::new(n, d);
+    for (f, vars) in scopes.into_iter().enumerate() {
+        let want = (d as usize).pow(vars.len() as u32);
+        let len: usize = next("table size")?
+            .parse()
+            .with_context(|| format!("bad table size for factor {f}"))?;
+        if len != want {
+            bail!("factor {f} table size {len} != D^arity = {want}");
+        }
+        let mut energies = Vec::with_capacity(len);
+        for t in 0..len {
+            let v: f64 = next("table value")?
+                .parse()
+                .with_context(|| format!("bad table value {t} in factor {f}"))?;
+            if !(v.is_finite() && v > 0.0) {
+                bail!(
+                    "factor {f} has potential {v}; UAI potentials must be finite and > 0 \
+                     (zero potentials need -inf energies, which the substrate rejects)"
+                );
+            }
+            energies.push(v.ln());
+        }
+        // Shift to non-negative energies; a per-factor constant cancels in π.
+        let min = energies.iter().cloned().fold(f64::INFINITY, f64::min);
+        for e in energies.iter_mut() {
+            *e -= min;
+        }
+        b.add_table(vars, energies);
+    }
+    if toks.next().is_some() {
+        bail!("trailing tokens after the last factor table");
+    }
+    Ok(b.build())
+}
+
+/// Render a [`FactorGraph`] as a UAI `MARKOV` document (potentials are
+/// `exp` of the stored energies, so `parse_uai(write_uai(g))` defines the
+/// same distribution π as `g`).
+pub fn write_uai(g: &FactorGraph) -> String {
+    let n = g.n();
+    let d = g.domain_size() as usize;
+    let mut out = String::new();
+    out.push_str("MARKOV\n");
+    out.push_str(&format!("{n}\n"));
+    let cards: Vec<String> = (0..n).map(|_| d.to_string()).collect();
+    out.push_str(&cards.join(" "));
+    out.push('\n');
+    out.push_str(&format!("{}\n", g.num_factors()));
+
+    let mut scopes: Vec<Vec<u32>> = Vec::with_capacity(g.num_factors());
+    for f in g.factors() {
+        let mut vars = Vec::new();
+        f.for_each_var(|v| vars.push(v as u32));
+        out.push_str(&format!("{} ", vars.len()));
+        let toks: Vec<String> = vars.iter().map(|v| v.to_string()).collect();
+        out.push_str(&toks.join(" "));
+        out.push('\n');
+        scopes.push(vars);
+    }
+    out.push('\n');
+
+    let mut scratch = vec![0u16; n];
+    for (fid, vars) in scopes.iter().enumerate() {
+        let len = d.pow(vars.len() as u32);
+        out.push_str(&format!("{len}\n"));
+        let mut vals = Vec::with_capacity(len);
+        for idx in 0..len {
+            // Decode idx over the scope, last variable fastest.
+            let mut rem = idx;
+            for &v in vars.iter().rev() {
+                scratch[v as usize] = (rem % d) as u16;
+                rem /= d;
+            }
+            vals.push(format!("{}", g.value(fid, &scratch).exp()));
+        }
+        out.push_str(&vals.join(" "));
+        out.push('\n');
+    }
+    out
+}
+
+/// Load a UAI model from a file.
+pub fn load_uai(path: &Path) -> Result<FactorGraph> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading UAI model {}", path.display()))?;
+    parse_uai(&text).with_context(|| format!("in {}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::exact_distribution;
+
+    /// A 3-variable chain with one unary and two pairwise potentials.
+    const HAND_WRITTEN: &str = "\
+MARKOV
+3
+2 2 2
+3
+1 0
+2 0 1
+2 1 2
+
+2
+ 2.0 0.5
+4
+ 1.0 0.25 0.25 1.0
+4
+ 3.0 1.0 1.0 3.0
+";
+
+    #[test]
+    fn parses_hand_written_file() {
+        let g = parse_uai(HAND_WRITTEN).unwrap();
+        assert_eq!(g.n(), 3);
+        assert_eq!(g.domain_size(), 2);
+        assert_eq!(g.num_factors(), 3);
+        assert_eq!(g.factors_of(1), &[1, 2]);
+        // Factor 1 on (x0, x1): energies ln([1, .25, .25, 1]) shifted to
+        // [ln 4, 0, 0, ln 4].
+        let want = 4.0f64.ln();
+        assert!((g.value(1, &[0, 0, 0]) - want).abs() < 1e-12);
+        assert!(g.value(1, &[0, 1, 0]).abs() < 1e-12);
+    }
+
+    /// parse → write → parse defines the same distribution π (energies
+    /// differ by per-factor constants, π does not).
+    #[test]
+    fn roundtrip_preserves_distribution() {
+        let g1 = parse_uai(HAND_WRITTEN).unwrap();
+        let text = write_uai(&g1);
+        let g2 = parse_uai(&text).unwrap();
+        assert_eq!(g1.n(), g2.n());
+        assert_eq!(g1.num_factors(), g2.num_factors());
+        let (p1, p2) = (exact_distribution(&g1), exact_distribution(&g2));
+        for (a, b) in p1.iter().zip(p2.iter()) {
+            assert!((a - b).abs() < 1e-12, "π diverged: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("mbgibbs_uai_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("model.uai");
+        std::fs::write(&path, HAND_WRITTEN).unwrap();
+        let g = load_uai(&path).unwrap();
+        assert_eq!(g.n(), 3);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn exported_builtin_model_roundtrips() {
+        let g1 = crate::graph::models::tiny_random(4, 3, 0.8, 17);
+        let g2 = parse_uai(&write_uai(&g1)).unwrap();
+        let (p1, p2) = (exact_distribution(&g1), exact_distribution(&g2));
+        for (a, b) in p1.iter().zip(p2.iter()) {
+            assert!((a - b).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn rejects_malformed_documents() {
+        // wrong network type
+        assert!(parse_uai("BAYES\n1\n2\n1\n1 0\n2\n1 1\n").is_err());
+        // mixed cardinalities (substrate wants one shared D)
+        assert!(parse_uai("MARKOV\n2\n2 3\n1\n2 0 1\n6\n1 1 1 1 1 1\n").is_err());
+        // zero potential (hard constraint)
+        assert!(parse_uai("MARKOV\n1\n2\n1\n1 0\n2\n1.0 0.0\n").is_err());
+        // table size mismatch
+        assert!(parse_uai("MARKOV\n2\n2 2\n1\n2 0 1\n3\n1 1 1\n").is_err());
+        // scope out of range
+        assert!(parse_uai("MARKOV\n2\n2 2\n1\n2 0 5\n4\n1 1 1 1\n").is_err());
+        // truncated
+        assert!(parse_uai("MARKOV\n2\n2 2\n1\n2 0 1\n4\n1 1\n").is_err());
+        // trailing garbage
+        assert!(parse_uai("MARKOV\n1\n2\n1\n1 0\n2\n1 2\n99\n").is_err());
+    }
+}

@@ -9,6 +9,7 @@
 pub mod builder;
 pub mod coloring;
 pub mod factor;
+pub mod io;
 pub mod models;
 pub mod stats;
 

@@ -42,4 +42,5 @@ pub mod metrics;
 pub mod rng;
 pub mod runtime;
 pub mod samplers;
+pub mod service;
 pub mod testutil;

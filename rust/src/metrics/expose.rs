@@ -27,8 +27,9 @@ use anyhow::{anyhow, Context, Result};
 use super::{HistogramSnapshot, Snapshot, Unit};
 
 /// Escape a string for embedding in a JSON document. Metric names carry
-/// `{k="v"}` label quotes, so this is not optional.
-fn esc(s: &str) -> String {
+/// `{k="v"}` label quotes, so this is not optional. Shared with the
+/// service layer's hand-rolled NDJSON responses.
+pub(crate) fn esc(s: &str) -> String {
     let mut out = String::with_capacity(s.len() + 2);
     for c in s.chars() {
         match c {

@@ -1,0 +1,210 @@
+//! Shared live estimates the chain pool publishes into and queries read
+//! from.
+//!
+//! Locking is deliberately light: one mutex per chain slot. A chain
+//! thread accumulates samples into a thread-local
+//! [`MarginalEstimator`] and only takes its own slot's lock once per
+//! publish slice (a few thousand iterations), so chains never contend
+//! with each other. Queries lock slots one at a time, each for the
+//! duration of a counts merge — microseconds against the pool's
+//! steady-state throughput.
+
+use std::sync::Mutex;
+
+use crate::analysis::diagnostics::cross_chain_diagnostics;
+use crate::analysis::MarginalEstimator;
+
+/// One chain's published position.
+struct Slot {
+    marginals: MarginalEstimator,
+    /// Thinned total-energy series ζ(x) — the scalar the cross-chain
+    /// R̂ / pooled-ESS diagnostics run on. Bounded to the newest
+    /// `window` points.
+    energy: Vec<f64>,
+    /// Iteration of the most recent publish.
+    iter: u64,
+    /// State at the most recent publish; empty before the first one.
+    state: Vec<u16>,
+}
+
+/// Per-chain slots of running marginals, energy traces, and last-seen
+/// states, merged on demand into pooled answers.
+pub struct LiveEstimator {
+    slots: Vec<Mutex<Slot>>,
+    n: usize,
+    d: usize,
+    window: usize,
+}
+
+impl LiveEstimator {
+    /// For `chains` chains over `n` variables with domain size `d`,
+    /// keeping at most `window` energy points per chain.
+    pub fn new(n: usize, d: usize, chains: usize, window: usize) -> Self {
+        assert!(chains > 0, "need at least one chain slot");
+        assert!(window >= 2, "diagnostics need an energy window of >= 2");
+        let slots = (0..chains)
+            .map(|_| {
+                Mutex::new(Slot {
+                    marginals: MarginalEstimator::new(n, d),
+                    energy: Vec::new(),
+                    iter: 0,
+                    state: Vec::new(),
+                })
+            })
+            .collect();
+        Self { slots, n, d, window }
+    }
+
+    /// Number of variables n.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Domain size D.
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    /// Number of chain slots.
+    pub fn chains(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Fold a chain's local slice into its slot: merge marginal counts,
+    /// append energies (keeping the newest `window`), and record the
+    /// chain's position. Called by chain threads only, each with its own
+    /// `chain` index.
+    pub fn publish(
+        &self,
+        chain: usize,
+        local: &MarginalEstimator,
+        energies: &[f64],
+        iter: u64,
+        state: &[u16],
+    ) {
+        let mut slot = self.slots[chain].lock().unwrap();
+        slot.marginals.merge(local);
+        slot.energy.extend_from_slice(energies);
+        if slot.energy.len() > self.window {
+            let drop = slot.energy.len() - self.window;
+            slot.energy.drain(..drop);
+        }
+        slot.iter = iter;
+        slot.state.clear();
+        slot.state.extend_from_slice(state);
+    }
+
+    /// Cross-chain pooled estimator (counts summed over every chain).
+    pub fn pooled(&self) -> MarginalEstimator {
+        let mut acc = MarginalEstimator::new(self.n, self.d);
+        for s in &self.slots {
+            acc.merge(&s.lock().unwrap().marginals);
+        }
+        acc
+    }
+
+    /// Pooled marginal of variable `i` plus the sample count behind it.
+    /// `None` if `i` is out of range.
+    pub fn marginal(&self, i: usize) -> Option<(Vec<f64>, u64)> {
+        if i >= self.n {
+            return None;
+        }
+        let pooled = self.pooled();
+        Some((pooled.marginal(i), pooled.samples()))
+    }
+
+    /// Total samples across chains.
+    pub fn total_samples(&self) -> u64 {
+        self.slots
+            .iter()
+            .map(|s| s.lock().unwrap().marginals.samples())
+            .sum()
+    }
+
+    /// Each chain's last published iteration.
+    pub fn chain_iters(&self) -> Vec<u64> {
+        self.slots.iter().map(|s| s.lock().unwrap().iter).collect()
+    }
+
+    /// Cross-chain `(R̂, pooled ESS)` over the windowed energy traces.
+    pub fn diagnostics(&self) -> (Option<f64>, Option<f64>) {
+        let traces: Vec<Vec<f64>> = self
+            .slots
+            .iter()
+            .map(|s| s.lock().unwrap().energy.clone())
+            .collect();
+        let views: Vec<&[f64]> = traces.iter().map(|t| t.as_slice()).collect();
+        cross_chain_diagnostics(&views)
+    }
+
+    /// The most advanced chain's `(state, iter)` — the warmest start for
+    /// a conditional query's re-burn-in. `None` before any publish.
+    pub fn freshest_state(&self) -> Option<(Vec<u16>, u64)> {
+        let mut best: Option<(Vec<u16>, u64)> = None;
+        for s in &self.slots {
+            let slot = s.lock().unwrap();
+            if slot.state.is_empty() {
+                continue;
+            }
+            let newer = match &best {
+                None => true,
+                Some((_, it)) => slot.iter > *it,
+            };
+            if newer {
+                best = Some((slot.state.clone(), slot.iter));
+            }
+        }
+        best
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn publish_merges_and_pools() {
+        let live = LiveEstimator::new(2, 2, 2, 16);
+        let mut a = MarginalEstimator::new(2, 2);
+        a.update(&[0, 1]);
+        a.update(&[0, 1]);
+        live.publish(0, &a, &[1.0, 2.0], 2, &[0, 1]);
+        let mut b = MarginalEstimator::new(2, 2);
+        b.update(&[1, 1]);
+        live.publish(1, &b, &[3.0], 1, &[1, 1]);
+
+        assert_eq!(live.total_samples(), 3);
+        let (dist, samples) = live.marginal(0).unwrap();
+        assert_eq!(samples, 3);
+        assert!((dist[0] - 2.0 / 3.0).abs() < 1e-12);
+        assert!(live.marginal(7).is_none());
+        assert_eq!(live.chain_iters(), vec![2, 1]);
+        let (state, iter) = live.freshest_state().unwrap();
+        assert_eq!((state, iter), (vec![0, 1], 2));
+    }
+
+    #[test]
+    fn energy_window_is_bounded() {
+        let live = LiveEstimator::new(1, 2, 1, 4);
+        let empty = MarginalEstimator::new(1, 2);
+        live.publish(0, &empty, &[1.0, 2.0, 3.0], 3, &[0]);
+        live.publish(0, &empty, &[4.0, 5.0, 6.0], 6, &[0]);
+        // Window of 4 keeps the newest 4 points; a single chain yields
+        // ESS but no R̂.
+        let (rhat, ess) = live.diagnostics();
+        assert!(rhat.is_none());
+        assert!(ess.unwrap() <= 4.0 + 1e-9);
+    }
+
+    #[test]
+    fn diagnostics_need_two_points() {
+        let live = LiveEstimator::new(1, 2, 2, 16);
+        assert_eq!(live.diagnostics(), (None, None));
+        let empty = MarginalEstimator::new(1, 2);
+        live.publish(0, &empty, &[1.0, 2.0, 1.5], 3, &[0]);
+        live.publish(1, &empty, &[1.1, 2.2, 1.4], 3, &[1]);
+        let (rhat, ess) = live.diagnostics();
+        assert!(rhat.is_some());
+        assert!(ess.unwrap() > 0.0);
+    }
+}

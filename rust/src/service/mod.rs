@@ -1,0 +1,48 @@
+//! Persistent inference service: a daemon that keeps Markov chains warm
+//! and answers marginal/conditional queries over TCP.
+//!
+//! The batch coordinator ([`crate::coordinator`]) runs chains for a
+//! fixed iteration budget and exits. This module flips that around for
+//! long-lived deployments: a [`ChainPool`] owns N background chains —
+//! serial chains replicating `coordinator::runner`'s per-chain
+//! discipline bit-for-bit, or chromatic parallel chains driving
+//! [`crate::runtime::parallel::ChromaticSweepEngine`] — and each chain
+//! periodically folds its samples into a shared [`LiveEstimator`]
+//! (running marginals plus windowed cross-chain R̂ / pooled-ESS
+//! diagnostics). A [`QueryEngine`] answers point-in-time questions from
+//! those live estimates:
+//!
+//! * `marginal(var)` — pooled running marginal, no extra sampling;
+//! * `conditional(var | evidence)` — pins the evidence sites, warm-starts
+//!   from the freshest published chain state, and runs a targeted
+//!   re-burn-in + estimation sweep on the connection thread;
+//! * `status` / `metrics` — pool positions, convergence diagnostics, and
+//!   the full metrics snapshot.
+//!
+//! [`Service`] is the front door: a std-only TCP listener speaking
+//! newline-delimited JSON, with a minimal HTTP `GET` path so Prometheus
+//! can scrape the same port. Shutdown — SIGINT/SIGTERM via [`signal`],
+//! or a client `shutdown` request — drains the chains and flushes v2
+//! checkpoints, so a restarted service resumes bit-exactly where the
+//! previous one stopped.
+//!
+//! ## Parity contract
+//!
+//! A pool chain paused at iteration `t` has *exactly* the state, RNG
+//! position, and counters the batch runner would have after `t`
+//! iterations with the same seed and sampler: RNG streams come from the
+//! same master-split order, and `Sampler::step` is the only RNG
+//! consumer on the hot loop. Pause watermarks in parallel mode round up
+//! to whole chromatic sweeps, mirroring the sweep engine's iteration
+//! accounting.
+
+pub mod estimator;
+pub mod pool;
+pub mod query;
+pub mod server;
+pub mod signal;
+
+pub use estimator::LiveEstimator;
+pub use pool::{ChainPool, PoolConfig, RUN_FOREVER};
+pub use query::{QueryDefaults, QueryEngine, Request};
+pub use server::{Service, ServiceOptions};

@@ -1,0 +1,712 @@
+//! The chain pool: N background chains feeding the shared
+//! [`LiveEstimator`].
+//!
+//! Each chain replays the coordinator's per-chain discipline exactly —
+//! the same master-seed split order, the same `attach_metrics` →
+//! `reset` → `restore_aux_energy` sequence, and a step loop whose only
+//! RNG consumer is `sampler.step` — so a pool chain paused at iteration
+//! N is bit-identical to a batch [`run_chains`](crate::coordinator)
+//! chain run for N iterations with the same seed. That equivalence is
+//! what lets the service answer queries that match batch estimates and
+//! resume batch-written v2 checkpoints (and vice versa).
+//!
+//! Control plane: a shared `pause_at` watermark (`u64::MAX` = run
+//! forever) and a `stop` flag. Chains poll both; at the watermark they
+//! flush their pending slice into the estimator and idle, which gives
+//! tests and drain-style shutdowns a deterministic iteration count.
+//!
+//! With `workers >= 1` a chain runs chromatic systematic sweeps on the
+//! [`ChromaticSweepEngine`]; slice and pause boundaries are rounded up
+//! to whole sweeps (n site updates) because intermediate states only
+//! materialize at sweep boundaries.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::analysis::MarginalEstimator;
+use crate::bench::workload::SamplerSpec;
+use crate::coordinator::Checkpoint;
+use crate::graph::FactorGraph;
+use crate::metrics::{MetricsHub, SamplerMetrics};
+use crate::rng::Pcg64;
+use crate::runtime::parallel::ChromaticSweepEngine;
+use crate::samplers::Sampler;
+
+use super::estimator::LiveEstimator;
+
+/// `pause_at` value meaning "never pause".
+pub const RUN_FOREVER: u64 = u64::MAX;
+
+/// How a pool runs its chains. Mirrors the coordinator's
+/// [`RunSpec`](crate::coordinator::RunSpec) minus the fixed iteration
+/// count — a pool runs until told otherwise.
+#[derive(Clone, Debug)]
+pub struct PoolConfig {
+    /// Sampler to instantiate per chain.
+    pub sampler: SamplerSpec,
+    /// Number of background chains.
+    pub chains: usize,
+    /// Master seed; chain k gets the same split stream as batch chain k.
+    pub seed: u64,
+    /// Within-chain parallel workers; 0 = serial random scan.
+    pub workers: usize,
+    /// Energy-trace thinning: record ζ(x) every this many iterations.
+    pub record_every: u64,
+    /// Iterations accumulated locally before merging into the shared
+    /// estimator (the lock cadence).
+    pub publish_every: u64,
+    /// Iterations before samples start counting toward the marginals
+    /// (the energy trace is gated the same way). Does not perturb the
+    /// RNG stream, so bit-exactness with batch runs holds for any value.
+    pub burn_in: u64,
+    /// Newest energy points kept per chain for R̂ / ESS.
+    pub window: usize,
+    /// Where checkpoints live (same `chain<k>.ckpt` files and v2 format
+    /// as the batch runner).
+    pub checkpoint_dir: Option<PathBuf>,
+    /// Flush a checkpoint per chain when the pool stops.
+    pub checkpoint_on_shutdown: bool,
+    /// Resume from `checkpoint_dir/chain<k>.ckpt` where present.
+    pub resume: bool,
+    /// Initial pause watermark; [`RUN_FOREVER`] starts free-running,
+    /// a finite value starts the pool in a drained-at-N state (tests,
+    /// fixed-budget warm-up).
+    pub pause_at: u64,
+}
+
+impl PoolConfig {
+    /// A pool of `chains` serial chains of `sampler`, free-running.
+    pub fn new(sampler: SamplerSpec, chains: usize) -> Self {
+        Self {
+            sampler,
+            chains,
+            seed: 42,
+            workers: 0,
+            record_every: 1_000,
+            publish_every: 4_096,
+            burn_in: 0,
+            window: 4_096,
+            checkpoint_dir: None,
+            checkpoint_on_shutdown: false,
+            resume: false,
+            pause_at: RUN_FOREVER,
+        }
+    }
+}
+
+/// Shared control plane between the pool handle and its chain threads.
+struct Control {
+    stop: AtomicBool,
+    pause_at: AtomicU64,
+}
+
+/// Owns the chain threads and the estimator they feed.
+pub struct ChainPool {
+    handles: Vec<JoinHandle<Result<()>>>,
+    live: Arc<LiveEstimator>,
+    control: Arc<Control>,
+    cfg: PoolConfig,
+    /// Sweep length for watermark alignment in parallel mode.
+    n: u64,
+}
+
+impl ChainPool {
+    /// Validate the config and launch the chain threads.
+    pub fn start(
+        graph: Arc<FactorGraph>,
+        cfg: PoolConfig,
+        hub: Arc<MetricsHub>,
+    ) -> Result<ChainPool> {
+        if cfg.chains == 0 {
+            bail!("pool needs at least one chain");
+        }
+        if cfg.record_every == 0 || cfg.publish_every == 0 {
+            bail!("record_every and publish_every must be > 0");
+        }
+        if cfg.workers > 0 && !cfg.sampler.supports_parallel() {
+            bail!(
+                "workers > 0 needs a site-local sampler (Gibbs, Local, MGPMH); \
+                 {:?} carries global augmented-space state",
+                cfg.sampler
+            );
+        }
+        if cfg.resume && cfg.checkpoint_dir.is_none() {
+            bail!("resume requires a checkpoint_dir");
+        }
+        if cfg.checkpoint_on_shutdown && cfg.checkpoint_dir.is_none() {
+            bail!("checkpoint_on_shutdown requires a checkpoint_dir");
+        }
+
+        let n = graph.n() as u64;
+        let live = Arc::new(LiveEstimator::new(
+            graph.n(),
+            graph.domain_size() as usize,
+            cfg.chains,
+            cfg.window.max(2),
+        ));
+        let control = Arc::new(Control {
+            stop: AtomicBool::new(false),
+            pause_at: AtomicU64::new(cfg.pause_at),
+        });
+
+        // Same stream derivation as run_chains: split the master in
+        // chain order, so pool chain k == batch chain k.
+        let mut master = Pcg64::seeded(cfg.seed);
+        let mut handles = Vec::with_capacity(cfg.chains);
+        for k in 0..cfg.chains {
+            let rng = master.split(k as u64);
+            let graph = graph.clone();
+            let cfg = cfg.clone();
+            let live = live.clone();
+            let control = control.clone();
+            let hub = hub.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("mbgibbs-chain-{k}"))
+                .spawn(move || chain_main(&graph, &cfg, k, rng, &live, &control, &hub))
+                .context("spawning pool chain thread")?;
+            handles.push(handle);
+        }
+        Ok(ChainPool {
+            handles,
+            live,
+            control,
+            cfg,
+            n,
+        })
+    }
+
+    /// The shared estimator queries read from.
+    pub fn live(&self) -> &Arc<LiveEstimator> {
+        &self.live
+    }
+
+    /// The pool's configuration.
+    pub fn config(&self) -> &PoolConfig {
+        &self.cfg
+    }
+
+    /// Move the pause watermark: chains run up to iteration `iter`
+    /// (rounded up to a whole sweep in parallel mode), flush, and idle.
+    /// [`RUN_FOREVER`] resumes free-running.
+    pub fn pause_at(&self, iter: u64) {
+        self.control.pause_at.store(iter, Ordering::Relaxed);
+    }
+
+    /// The watermark every chain must reach for
+    /// [`ChainPool::wait_until_paused`], accounting for sweep rounding.
+    fn aligned_watermark(&self) -> u64 {
+        let pause = self.control.pause_at.load(Ordering::Relaxed);
+        if pause == RUN_FOREVER || self.cfg.workers == 0 {
+            return pause;
+        }
+        pause.div_ceil(self.n) * self.n
+    }
+
+    /// Block until every chain has published at or past the current
+    /// watermark (no-op when free-running). After this returns, the
+    /// estimator reflects every iteration up to the watermark.
+    pub fn wait_until_paused(&self) {
+        let target = self.aligned_watermark();
+        if target == RUN_FOREVER {
+            return;
+        }
+        loop {
+            if self.live.chain_iters().iter().all(|&it| it >= target) {
+                return;
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    }
+
+    /// Stop the chains, flush shutdown checkpoints (if configured), and
+    /// join the threads. Returns the first chain error, if any.
+    pub fn stop(self) -> Result<()> {
+        self.control.stop.store(true, Ordering::Relaxed);
+        let mut first_err = None;
+        for h in self.handles {
+            match h.join() {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => first_err = first_err.or(Some(e)),
+                Err(_) => first_err = first_err.or_else(|| Some(anyhow!("chain thread panicked"))),
+            }
+        }
+        match first_err {
+            None => Ok(()),
+            Some(e) => Err(e),
+        }
+    }
+}
+
+fn chain_main(
+    graph: &FactorGraph,
+    cfg: &PoolConfig,
+    k: usize,
+    rng: Pcg64,
+    live: &LiveEstimator,
+    control: &Control,
+    hub: &MetricsHub,
+) -> Result<()> {
+    if cfg.workers > 0 {
+        chain_main_parallel(graph, cfg, k, rng, live, control, hub)
+    } else {
+        chain_main_serial(graph, cfg, k, rng, live, control, hub)
+    }
+}
+
+/// Load `chain<k>.ckpt` if resuming and present, seeding the metric
+/// counters with the saved totals. Returns
+/// `(start_iter, rng_parts, site_rng_parts, aux_energy, hyperparams_applied)`
+/// with the state written in place.
+#[allow(clippy::type_complexity)]
+fn maybe_resume(
+    cfg: &PoolConfig,
+    k: usize,
+    n: usize,
+    state: &mut Vec<u16>,
+    sampler: &mut dyn Sampler,
+    m: &SamplerMetrics,
+) -> Result<(u64, Option<(u128, u128)>, Option<Vec<(u128, u128)>>, Option<f64>)> {
+    if !cfg.resume {
+        return Ok((0, None, None, None));
+    }
+    let dir = cfg.checkpoint_dir.as_ref().expect("validated in start()");
+    let path = dir.join(format!("chain{k}.ckpt"));
+    if !path.exists() {
+        return Ok((0, None, None, None));
+    }
+    let ckpt = Checkpoint::load(&path)?;
+    if ckpt.seed != cfg.seed {
+        bail!("resume: checkpoint seed {} != pool seed {}", ckpt.seed, cfg.seed);
+    }
+    if ckpt.chain != k {
+        bail!("resume: checkpoint chain {} != {}", ckpt.chain, k);
+    }
+    if ckpt.state.len() != n {
+        bail!(
+            "resume: checkpoint has {} variables, graph has {n}",
+            ckpt.state.len()
+        );
+    }
+    *state = ckpt.state;
+    m.steps.add(ckpt.iter);
+    m.factor_evals.add(ckpt.factor_evals);
+    m.accepts.add(ckpt.accepted);
+    m.proposals.add(ckpt.proposed);
+    if !ckpt.hyperparams.is_empty() {
+        sampler.set_hyperparams(&ckpt.hyperparams);
+    }
+    Ok((ckpt.iter, ckpt.rng, ckpt.site_rngs, ckpt.aux_energy))
+}
+
+/// Write a v2 checkpoint in the batch runner's format/location.
+#[allow(clippy::too_many_arguments)]
+fn flush_checkpoint(
+    dir: &Path,
+    cfg: &PoolConfig,
+    k: usize,
+    iter: u64,
+    state: &[u16],
+    m: &SamplerMetrics,
+    rng: &Pcg64,
+    site_rngs: Option<Vec<(u128, u128)>>,
+    sampler: &dyn Sampler,
+) -> Result<()> {
+    std::fs::create_dir_all(dir)
+        .with_context(|| format!("creating checkpoint dir {}", dir.display()))?;
+    let ckpt = Checkpoint {
+        iter,
+        seed: cfg.seed,
+        chain: k,
+        factor_evals: m.factor_evals.get(),
+        accepted: m.accepts.get(),
+        proposed: m.proposals.get(),
+        rng: Some(rng.state_parts()),
+        hyperparams: sampler.hyperparams(),
+        aux_energy: sampler.aux_energy(),
+        site_rngs,
+        state: state.to_vec(),
+    };
+    ckpt.save(&dir.join(format!("chain{k}.ckpt")))
+}
+
+fn chain_main_serial(
+    graph: &FactorGraph,
+    cfg: &PoolConfig,
+    k: usize,
+    mut rng: Pcg64,
+    live: &LiveEstimator,
+    control: &Control,
+    hub: &MetricsHub,
+) -> Result<()> {
+    let n = graph.n();
+    let d = graph.domain_size() as usize;
+    let mut state = vec![0u16; n];
+    let mut sampler = cfg.sampler.build(graph);
+
+    let chain_label = k.to_string();
+    let m = SamplerMetrics::register(hub, &[("chain", &chain_label), ("sampler", sampler.name())]);
+
+    let (start_iter, rng_parts, _, restored_aux) =
+        maybe_resume(cfg, k, n, &mut state, sampler.as_mut(), &m)?;
+    if let Some((s, inc)) = rng_parts {
+        rng = Pcg64::from_state_parts(s, inc);
+    }
+    // Same order as the batch runner: attach, reset, then restore the
+    // augmented-space cache the reset just recomputed from scratch.
+    sampler.attach_metrics(m.clone());
+    sampler.reset(&state, &mut rng);
+    if let Some(e) = restored_aux {
+        sampler.restore_aux_energy(e);
+    }
+
+    let mut it = start_iter;
+    let mut local = MarginalEstimator::new(n, d);
+    let mut local_energy: Vec<f64> = Vec::new();
+    // Sentinel forces a flush at the first pause even if nothing ran.
+    let mut published_at = u64::MAX;
+    loop {
+        if control.stop.load(Ordering::Relaxed) {
+            break;
+        }
+        if it >= control.pause_at.load(Ordering::Relaxed) {
+            if published_at != it {
+                live.publish(k, &local, &local_energy, it, &state);
+                local.reset();
+                local_energy.clear();
+                published_at = it;
+            }
+            std::thread::sleep(Duration::from_millis(1));
+            continue;
+        }
+        sampler.step(&mut state, &mut rng);
+        if it >= cfg.burn_in {
+            local.update(&state);
+            if it % cfg.record_every == 0 {
+                local_energy.push(graph.total_energy(&state));
+            }
+        }
+        it += 1;
+        if it % cfg.publish_every == 0 {
+            live.publish(k, &local, &local_energy, it, &state);
+            local.reset();
+            local_energy.clear();
+            published_at = it;
+        }
+    }
+    live.publish(k, &local, &local_energy, it, &state);
+    if cfg.checkpoint_on_shutdown {
+        if let Some(dir) = &cfg.checkpoint_dir {
+            flush_checkpoint(dir, cfg, k, it, &state, &m, &rng, None, sampler.as_ref())?;
+        }
+    }
+    Ok(())
+}
+
+fn chain_main_parallel(
+    graph: &FactorGraph,
+    cfg: &PoolConfig,
+    k: usize,
+    mut rng: Pcg64,
+    live: &LiveEstimator,
+    control: &Control,
+    hub: &MetricsHub,
+) -> Result<()> {
+    let n = graph.n();
+    let nn = n as u64;
+    let mut state = vec![0u16; n];
+    // The probe never steps: it carries the name and the
+    // (possibly checkpoint-restored) hyperparameters, like the batch
+    // parallel path. Sampling instances live in the engine's workers.
+    let mut probe = cfg.sampler.build(graph);
+
+    let chain_label = k.to_string();
+    let m = SamplerMetrics::register(hub, &[("chain", &chain_label), ("sampler", probe.name())]);
+
+    let (start_iter, _, saved_site_rngs, _) =
+        maybe_resume(cfg, k, n, &mut state, probe.as_mut(), &m)?;
+
+    let engine = {
+        let mut e = ChromaticSweepEngine::new(
+            graph,
+            cfg.sampler,
+            cfg.workers,
+            &mut rng,
+            m.clone(),
+            hub,
+            &chain_label,
+        );
+        e.set_hyperparams(probe.hyperparams());
+        if let Some(parts) = &saved_site_rngs {
+            e.restore_site_rngs(parts)
+                .context("resume: checkpoint site streams do not match this graph")?;
+        }
+        e
+    };
+
+    // Advance in whole sweeps so states materialize at the same
+    // boundaries as the batch parallel path.
+    let slice = cfg.publish_every.div_ceil(nn).max(1) * nn;
+    let mut it = start_iter;
+    let mut local = MarginalEstimator::new(n, graph.domain_size() as usize);
+    let mut local_energy: Vec<f64> = Vec::new();
+    let mut published_at = u64::MAX;
+    loop {
+        if control.stop.load(Ordering::Relaxed) {
+            break;
+        }
+        let pause = control.pause_at.load(Ordering::Relaxed);
+        let pause_aligned = if pause == RUN_FOREVER {
+            RUN_FOREVER
+        } else {
+            pause.div_ceil(nn).saturating_mul(nn)
+        };
+        if it >= pause_aligned {
+            if published_at != it {
+                live.publish(k, &local, &local_energy, it, &state);
+                local.reset();
+                local_energy.clear();
+                published_at = it;
+            }
+            std::thread::sleep(Duration::from_millis(1));
+            continue;
+        }
+        let end = pause_aligned.min(it.saturating_add(slice));
+        engine.run(&mut state, it, end, &mut |ctx| {
+            if ctx.iter > cfg.burn_in {
+                local.update(ctx.state);
+                if ctx.iter % cfg.record_every == 0 {
+                    local_energy.push(graph.total_energy(ctx.state));
+                }
+            }
+        });
+        it = end;
+        live.publish(k, &local, &local_energy, it, &state);
+        local.reset();
+        local_energy.clear();
+        published_at = it;
+    }
+    live.publish(k, &local, &local_energy, it, &state);
+    if cfg.checkpoint_on_shutdown {
+        if let Some(dir) = &cfg.checkpoint_dir {
+            let site_rngs = Some(engine.site_rng_parts());
+            flush_checkpoint(dir, cfg, k, it, &state, &m, &rng, site_rngs, probe.as_ref())?;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::models;
+    use crate::rng::Rng;
+    use crate::samplers::EnergyPath;
+
+    fn gibbs() -> SamplerSpec {
+        SamplerSpec::Gibbs(EnergyPath::Specialized)
+    }
+
+    /// A pool chain paused at iteration N must be bit-identical to a
+    /// hand-rolled replica of the batch per-chain loop run N steps.
+    #[test]
+    fn pool_matches_batch_discipline_bit_exactly() {
+        let g = Arc::new(models::tiny_random(4, 3, 0.8, 21));
+        let (chains, iters, seed) = (2usize, 6_000u64, 99u64);
+
+        let mut cfg = PoolConfig::new(gibbs(), chains);
+        cfg.seed = seed;
+        cfg.record_every = 500;
+        cfg.publish_every = 512;
+        cfg.pause_at = iters;
+        let pool = ChainPool::start(g.clone(), cfg, Arc::new(MetricsHub::new())).unwrap();
+        pool.wait_until_paused();
+
+        // Replica of run_chains' per-chain loop.
+        let mut reference = MarginalEstimator::new(g.n(), g.domain_size() as usize);
+        let mut master = Pcg64::seeded(seed);
+        for k in 0..chains {
+            let mut rng = master.split(k as u64);
+            let mut state = vec![0u16; g.n()];
+            let mut sampler = gibbs().build(&g);
+            sampler.reset(&state, &mut rng);
+            for _ in 0..iters {
+                sampler.step(&mut state, &mut rng);
+                reference.update(&state);
+            }
+        }
+
+        let pooled = pool.live().pooled();
+        assert_eq!(pooled.samples(), reference.samples());
+        for i in 0..g.n() {
+            assert_eq!(
+                pooled.marginal(i),
+                reference.marginal(i),
+                "pooled marginal {i} diverged from the batch replica"
+            );
+        }
+        pool.stop().unwrap();
+    }
+
+    #[test]
+    fn watermark_can_be_raised() {
+        let g = Arc::new(models::tiny_random(3, 2, 0.5, 22));
+        let mut cfg = PoolConfig::new(gibbs(), 1);
+        cfg.publish_every = 64;
+        cfg.pause_at = 128;
+        let pool = ChainPool::start(g, cfg, Arc::new(MetricsHub::new())).unwrap();
+        pool.wait_until_paused();
+        assert_eq!(pool.live().chain_iters(), vec![128]);
+        assert_eq!(pool.live().total_samples(), 128);
+        pool.pause_at(256);
+        pool.wait_until_paused();
+        assert_eq!(pool.live().total_samples(), 256);
+        pool.stop().unwrap();
+    }
+
+    #[test]
+    fn rejects_bad_configs() {
+        let g = Arc::new(models::tiny_random(3, 2, 0.5, 23));
+        let hub = Arc::new(MetricsHub::new());
+        let mut cfg = PoolConfig::new(gibbs(), 0);
+        assert!(ChainPool::start(g.clone(), cfg.clone(), hub.clone()).is_err());
+        cfg.chains = 1;
+        cfg.resume = true;
+        assert!(
+            ChainPool::start(g.clone(), cfg.clone(), hub.clone()).is_err(),
+            "resume without a checkpoint dir"
+        );
+        cfg.resume = false;
+        cfg.sampler = SamplerSpec::MinGibbs { lambda: 10.0 };
+        cfg.workers = 2;
+        assert!(
+            ChainPool::start(g, cfg, hub).is_err(),
+            "MIN-Gibbs carries global state; parallel must be rejected"
+        );
+    }
+
+    /// Shutdown at a watermark, resume, run to 2N: the final checkpoint
+    /// must equal an uninterrupted pool run to 2N — and both must equal
+    /// the batch runner's chain — state AND rng position.
+    #[test]
+    fn shutdown_resume_is_bit_exact() {
+        let g = Arc::new(models::tiny_random(4, 3, 0.8, 24));
+        let dir = std::env::temp_dir().join(format!("mbgibbs_pool_resume_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let seed = 7u64;
+
+        let mk = |resume: bool, pause: u64| {
+            let mut cfg = PoolConfig::new(SamplerSpec::MinGibbs { lambda: 40.0 }, 1);
+            cfg.seed = seed;
+            cfg.publish_every = 256;
+            cfg.checkpoint_dir = Some(dir.clone());
+            cfg.checkpoint_on_shutdown = true;
+            cfg.resume = resume;
+            cfg.pause_at = pause;
+            cfg
+        };
+
+        // Leg 1: run to 1000, stop (flushes chain0.ckpt at 1000).
+        let pool = ChainPool::start(g.clone(), mk(false, 1_000), Arc::new(MetricsHub::new()))
+            .unwrap();
+        pool.wait_until_paused();
+        pool.stop().unwrap();
+        let mid = Checkpoint::load(&dir.join("chain0.ckpt")).unwrap();
+        assert_eq!(mid.iter, 1_000);
+        assert!(mid.rng.is_some());
+
+        // Leg 2: resume to 2000.
+        let pool = ChainPool::start(g.clone(), mk(true, 2_000), Arc::new(MetricsHub::new()))
+            .unwrap();
+        pool.wait_until_paused();
+        pool.stop().unwrap();
+        let resumed = Checkpoint::load(&dir.join("chain0.ckpt")).unwrap();
+        assert_eq!(resumed.iter, 2_000);
+
+        // Uninterrupted pool to 2000 in a fresh dir.
+        let dir2 = std::env::temp_dir()
+            .join(format!("mbgibbs_pool_resume2_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir2).ok();
+        let mut cfg = mk(false, 2_000);
+        cfg.checkpoint_dir = Some(dir2.clone());
+        let pool = ChainPool::start(g, cfg, Arc::new(MetricsHub::new())).unwrap();
+        pool.wait_until_paused();
+        pool.stop().unwrap();
+        let full = Checkpoint::load(&dir2.join("chain0.ckpt")).unwrap();
+
+        assert_eq!(resumed.state, full.state, "resume diverged from uninterrupted");
+        assert_eq!(resumed.rng, full.rng, "rng position diverged");
+        assert_eq!(resumed.factor_evals, full.factor_evals);
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::remove_dir_all(&dir2).ok();
+    }
+
+    /// Parallel pool chains pause at sweep-aligned watermarks and their
+    /// state matches a batch parallel run of the same length.
+    #[test]
+    fn parallel_pool_matches_batch_engine() {
+        let g = Arc::new(models::ising_multipartite(3, 6, 1.5));
+        let n = g.n() as u64;
+        let iters = n * 40;
+
+        let mut cfg = PoolConfig::new(gibbs(), 1);
+        cfg.seed = 5;
+        cfg.workers = 2;
+        cfg.record_every = n * 5;
+        cfg.publish_every = n * 10;
+        cfg.pause_at = iters;
+        let dir = std::env::temp_dir().join(format!("mbgibbs_pool_par_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        cfg.checkpoint_dir = Some(dir.clone());
+        cfg.checkpoint_on_shutdown = true;
+        let pool = ChainPool::start(g.clone(), cfg, Arc::new(MetricsHub::new())).unwrap();
+        pool.wait_until_paused();
+        pool.stop().unwrap();
+        let ckpt = Checkpoint::load(&dir.join("chain0.ckpt")).unwrap();
+        assert_eq!(ckpt.iter, iters);
+        assert!(ckpt.site_rngs.is_some(), "parallel checkpoint needs site streams");
+
+        let spec = crate::coordinator::RunSpec::builder(gibbs())
+            .iters(iters)
+            .seed(5)
+            .record_every(n * 5)
+            .workers(2)
+            .build()
+            .unwrap();
+        let report =
+            crate::coordinator::run_chains(&g, &spec, &crate::coordinator::RunOptions::default());
+        assert_eq!(
+            ckpt.state, report.chains[0].final_state,
+            "parallel pool diverged from the batch engine"
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Burn-in gates what the estimator sees without perturbing the
+    /// chain: totals only count post-burn-in samples.
+    #[test]
+    fn burn_in_gates_samples() {
+        let g = Arc::new(models::tiny_random(3, 2, 0.5, 25));
+        let mut cfg = PoolConfig::new(gibbs(), 1);
+        cfg.burn_in = 100;
+        cfg.publish_every = 64;
+        cfg.pause_at = 300;
+        let pool = ChainPool::start(g, cfg, Arc::new(MetricsHub::new())).unwrap();
+        pool.wait_until_paused();
+        assert_eq!(pool.live().total_samples(), 200);
+        pool.stop().unwrap();
+    }
+
+    /// Master-split streams are deterministic — the parity tests above
+    /// rely on replaying the exact split order.
+    #[test]
+    fn split_streams_are_deterministic() {
+        let mut a = Pcg64::seeded(3);
+        let mut b = Pcg64::seeded(3);
+        assert_eq!(a.split(0).next_u64(), b.split(0).next_u64());
+    }
+}

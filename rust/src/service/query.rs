@@ -1,0 +1,578 @@
+//! The query engine: turns NDJSON request lines into NDJSON response
+//! lines against the live pool state.
+//!
+//! Requests (one JSON object per line):
+//!
+//! ```text
+//! {"type":"marginal","var":3}
+//! {"type":"conditional","var":3,"evidence":{"0":1,"17":0},"burn_in":2000,"samples":4000}
+//! {"type":"status"}
+//! {"type":"metrics"}
+//! {"type":"shutdown"}
+//! ```
+//!
+//! `marginal` reads the pooled running estimate — O(D) after a
+//! per-chain counts merge, no sampling. `conditional` clones the most
+//! advanced chain's state, pins the evidence sites, and runs a targeted
+//! re-burn-in plus sample pass over the *free* sites only, on the query
+//! thread — the pool's chains never stall for a query. Evidence pinning
+//! restricts the random scan to free sites, which leaves the conditional
+//! distribution π(x_free | x_evidence) invariant for every sampler in
+//! the crate (Gibbs resamples exact conditionals; the minibatch MH
+//! kernels are π-reversible per site).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::bench::workload::SamplerSpec;
+use crate::config::json::JsonValue;
+use crate::graph::FactorGraph;
+use crate::metrics::expose::esc;
+use crate::metrics::{labeled, MetricsHub};
+use crate::rng::{Pcg64, Rng};
+use crate::samplers::{Sampler, StepStats};
+
+use super::estimator::LiveEstimator;
+
+/// A parsed request line.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Request {
+    /// Pooled running marginal of one variable.
+    Marginal {
+        /// Variable index.
+        var: usize,
+    },
+    /// Conditional marginal given pinned evidence.
+    Conditional {
+        /// Variable index to estimate.
+        var: usize,
+        /// `(site, value)` pins, deduplicated, sorted by site.
+        evidence: Vec<(usize, u16)>,
+        /// Re-burn-in steps (default: the engine's configured value).
+        burn_in: Option<u64>,
+        /// Recorded sample steps (default: the engine's configured value).
+        samples: Option<u64>,
+    },
+    /// Pool status: per-chain iterations, sample totals, R̂/ESS.
+    Status,
+    /// Full metrics snapshot as embedded JSON.
+    Metrics,
+    /// Ask the service to shut down (checkpoints flush on the way out).
+    Shutdown,
+}
+
+/// Parse one NDJSON request line.
+pub fn parse_request(line: &str) -> Result<Request> {
+    let doc = JsonValue::parse(line).map_err(|e| anyhow!("invalid JSON: {e}"))?;
+    let ty = doc
+        .get("type")
+        .and_then(|v| v.as_str())
+        .context("request needs a string \"type\" field")?;
+    let get_index = |key: &str| -> Result<usize> {
+        let v = doc
+            .get(key)
+            .and_then(|v| v.as_f64())
+            .with_context(|| format!("{ty:?} request needs a numeric {key:?} field"))?;
+        if v < 0.0 || v.fract() != 0.0 {
+            bail!("{key} must be a non-negative integer, got {v}");
+        }
+        Ok(v as usize)
+    };
+    let get_opt_u64 = |key: &str| -> Result<Option<u64>> {
+        match doc.get(key) {
+            None => Ok(None),
+            Some(v) => {
+                let f = v
+                    .as_f64()
+                    .with_context(|| format!("{key} must be a number"))?;
+                if f < 0.0 || f.fract() != 0.0 {
+                    bail!("{key} must be a non-negative integer, got {f}");
+                }
+                Ok(Some(f as u64))
+            }
+        }
+    };
+    match ty {
+        "marginal" => Ok(Request::Marginal {
+            var: get_index("var")?,
+        }),
+        "conditional" => {
+            let var = get_index("var")?;
+            let obj = doc
+                .get("evidence")
+                .and_then(|v| v.as_object())
+                .context("conditional request needs an \"evidence\" object {\"site\": value}")?;
+            let mut evidence = Vec::with_capacity(obj.len());
+            for (key, val) in obj {
+                let site: usize = key
+                    .parse()
+                    .with_context(|| format!("evidence key {key:?} is not a variable index"))?;
+                let v = val
+                    .as_f64()
+                    .with_context(|| format!("evidence value for site {site} must be a number"))?;
+                if v < 0.0 || v.fract() != 0.0 {
+                    bail!("evidence value for site {site} must be a non-negative integer");
+                }
+                evidence.push((site, v as u16));
+            }
+            // BTreeMap keys iterate in string order; re-sort numerically.
+            evidence.sort_unstable();
+            Ok(Request::Conditional {
+                var,
+                evidence,
+                burn_in: get_opt_u64("burn_in")?,
+                samples: get_opt_u64("samples")?,
+            })
+        }
+        "status" => Ok(Request::Status),
+        "metrics" => Ok(Request::Metrics),
+        "shutdown" => Ok(Request::Shutdown),
+        other => bail!("unknown request type {other:?}"),
+    }
+}
+
+/// Wraps any crate sampler so the random scan only visits free
+/// (non-evidence) sites; pinned sites are never selected, so their
+/// values persist and the chain targets π(x_free | x_evidence).
+struct EvidenceSampler<'g> {
+    inner: Box<dyn Sampler + 'g>,
+    free: Vec<usize>,
+}
+
+impl Sampler for EvidenceSampler<'_> {
+    fn update_site(&mut self, site: usize, state: &mut [u16], rng: &mut dyn Rng) -> StepStats {
+        self.inner.update_site(site, state, rng)
+    }
+
+    fn select_site(&mut self, _state: &[u16], rng: &mut dyn Rng) -> usize {
+        self.free[rng.index(self.free.len())]
+    }
+
+    fn name(&self) -> &'static str {
+        "evidence"
+    }
+
+    fn reset(&mut self, state: &[u16], rng: &mut dyn Rng) {
+        self.inner.reset(state, rng);
+    }
+}
+
+/// Conditional-query defaults (per-request overrides win).
+#[derive(Clone, Copy, Debug)]
+pub struct QueryDefaults {
+    /// Re-burn-in steps over the free sites after pinning evidence.
+    pub burn_in: u64,
+    /// Recorded sample steps.
+    pub samples: u64,
+}
+
+impl Default for QueryDefaults {
+    fn default() -> Self {
+        Self {
+            burn_in: 2_000,
+            samples: 4_000,
+        }
+    }
+}
+
+/// Answers queries against the live estimator and graph.
+pub struct QueryEngine {
+    graph: Arc<FactorGraph>,
+    live: Arc<LiveEstimator>,
+    hub: Arc<MetricsHub>,
+    sampler: SamplerSpec,
+    seed: u64,
+    defaults: QueryDefaults,
+    seq: AtomicU64,
+}
+
+/// Render a one-line error response.
+pub fn error_response(msg: &str) -> String {
+    format!("{{\"ok\":false,\"error\":\"{}\"}}", esc(msg))
+}
+
+fn json_dist(dist: &[f64]) -> String {
+    let toks: Vec<String> = dist
+        .iter()
+        .map(|v| {
+            if v.is_finite() {
+                format!("{v}")
+            } else {
+                "null".to_string()
+            }
+        })
+        .collect();
+    format!("[{}]", toks.join(","))
+}
+
+fn json_opt(v: Option<f64>) -> String {
+    match v {
+        Some(x) if x.is_finite() => format!("{x}"),
+        _ => "null".to_string(),
+    }
+}
+
+impl QueryEngine {
+    /// Wire up against a pool's estimator. `sampler`/`seed` must match
+    /// the pool so conditional chains run the same kernel family.
+    pub fn new(
+        graph: Arc<FactorGraph>,
+        live: Arc<LiveEstimator>,
+        hub: Arc<MetricsHub>,
+        sampler: SamplerSpec,
+        seed: u64,
+        defaults: QueryDefaults,
+    ) -> Self {
+        Self {
+            graph,
+            live,
+            hub,
+            sampler,
+            seed,
+            defaults,
+            seq: AtomicU64::new(0),
+        }
+    }
+
+    /// Handle one raw request line. Returns the one-line response and
+    /// whether the request asked for shutdown.
+    pub fn handle_line(&self, line: &str) -> (String, bool) {
+        let t0 = Instant::now();
+        let (resp, ty, shutdown) = match parse_request(line) {
+            Err(e) => (error_response(&format!("{e:#}")), "invalid", false),
+            Ok(req) => {
+                let ty = match &req {
+                    Request::Marginal { .. } => "marginal",
+                    Request::Conditional { .. } => "conditional",
+                    Request::Status => "status",
+                    Request::Metrics => "metrics",
+                    Request::Shutdown => "shutdown",
+                };
+                let shutdown = req == Request::Shutdown;
+                let resp = match self.handle(&req) {
+                    Ok(r) => r,
+                    Err(e) => error_response(&format!("{e:#}")),
+                };
+                (resp, ty, shutdown)
+            }
+        };
+        self.hub
+            .counter(&labeled("service_queries_total", &[("type", ty)]))
+            .add(1);
+        self.hub
+            .latency(&labeled("service_query_latency_ns", &[("type", ty)]))
+            .record(t0.elapsed());
+        (resp, shutdown)
+    }
+
+    /// Handle a parsed request.
+    pub fn handle(&self, req: &Request) -> Result<String> {
+        match req {
+            Request::Marginal { var } => self.marginal(*var),
+            Request::Conditional {
+                var,
+                evidence,
+                burn_in,
+                samples,
+            } => self.conditional(*var, evidence, *burn_in, *samples),
+            Request::Status => Ok(self.status()),
+            Request::Metrics => Ok(self.metrics()),
+            Request::Shutdown => Ok("{\"ok\":true,\"type\":\"shutdown\"}".to_string()),
+        }
+    }
+
+    fn marginal(&self, var: usize) -> Result<String> {
+        let (dist, samples) = self
+            .live
+            .marginal(var)
+            .with_context(|| format!("var {var} out of range (n = {})", self.graph.n()))?;
+        Ok(format!(
+            "{{\"ok\":true,\"type\":\"marginal\",\"var\":{var},\"dist\":{},\"samples\":{samples}}}",
+            json_dist(&dist)
+        ))
+    }
+
+    fn conditional(
+        &self,
+        var: usize,
+        evidence: &[(usize, u16)],
+        burn_in: Option<u64>,
+        samples: Option<u64>,
+    ) -> Result<String> {
+        let n = self.graph.n();
+        let d = self.graph.domain_size() as usize;
+        if var >= n {
+            bail!("var {var} out of range (n = {n})");
+        }
+        let mut pinned = vec![false; n];
+        for &(site, val) in evidence {
+            if site >= n {
+                bail!("evidence site {site} out of range (n = {n})");
+            }
+            if (val as usize) >= d {
+                bail!("evidence value {val} for site {site} out of range (D = {d})");
+            }
+            if pinned[site] {
+                bail!("evidence pins site {site} twice");
+            }
+            pinned[site] = true;
+        }
+
+        // Pinning the query variable makes the answer a point mass.
+        if pinned[var] {
+            let val = evidence.iter().find(|(s, _)| *s == var).unwrap().1;
+            let mut dist = vec![0.0; d];
+            dist[val as usize] = 1.0;
+            return Ok(format!(
+                "{{\"ok\":true,\"type\":\"conditional\",\"var\":{var},\"dist\":{},\
+                 \"samples\":0,\"burn_in\":0,\"pinned\":true}}",
+                json_dist(&dist)
+            ));
+        }
+        let free: Vec<usize> = (0..n).filter(|&i| !pinned[i]).collect();
+
+        // Warm start from the most advanced chain (all zeros before any
+        // publish), then pin the evidence.
+        let mut state = match self.live.freshest_state() {
+            Some((s, _)) => s,
+            None => vec![0u16; n],
+        };
+        for &(site, val) in evidence {
+            state[site] = val;
+        }
+
+        let burn = burn_in.unwrap_or(self.defaults.burn_in);
+        let keep = samples.unwrap_or(self.defaults.samples).max(1);
+        // Deterministic per-process: each query gets its own stream off
+        // the pool seed.
+        let seq = self.seq.fetch_add(1, Ordering::Relaxed);
+        let mut rng = Pcg64::with_stream(self.seed, 0x5EED_C0DE ^ seq);
+        let mut sampler = EvidenceSampler {
+            inner: self.sampler.build(&self.graph),
+            free,
+        };
+        sampler.reset(&state, &mut rng);
+        for _ in 0..burn {
+            sampler.step(&mut state, &mut rng);
+        }
+        let mut counts = vec![0u64; d];
+        for _ in 0..keep {
+            sampler.step(&mut state, &mut rng);
+            counts[state[var] as usize] += 1;
+        }
+        let dist: Vec<f64> = counts.iter().map(|&c| c as f64 / keep as f64).collect();
+        Ok(format!(
+            "{{\"ok\":true,\"type\":\"conditional\",\"var\":{var},\"dist\":{},\
+             \"samples\":{keep},\"burn_in\":{burn}}}",
+            json_dist(&dist)
+        ))
+    }
+
+    fn status(&self) -> String {
+        let iters = self.live.chain_iters();
+        let (rhat, ess) = self.live.diagnostics();
+        let iter_toks: Vec<String> = iters.iter().map(|i| i.to_string()).collect();
+        format!(
+            "{{\"ok\":true,\"type\":\"status\",\"chains\":{},\"iters\":[{}],\
+             \"samples\":{},\"rhat\":{},\"pooled_ess\":{},\
+             \"model\":{{\"n\":{},\"d\":{},\"factors\":{}}},\"sampler\":\"{}\"}}",
+            self.live.chains(),
+            iter_toks.join(","),
+            self.live.total_samples(),
+            json_opt(rhat),
+            json_opt(ess),
+            self.graph.n(),
+            self.graph.domain_size(),
+            self.graph.num_factors(),
+            esc(&self.sampler.label(&self.graph)),
+        )
+    }
+
+    fn metrics(&self) -> String {
+        // The exposition JSON is multi-line; raw newlines only occur as
+        // token separators (strings escape theirs), so flattening them
+        // to spaces keeps the document valid and the response one line.
+        let snap = crate::metrics::expose::to_json(&self.hub.snapshot());
+        let flat = snap.replace('\n', " ");
+        format!(
+            "{{\"ok\":true,\"type\":\"metrics\",\"snapshot\":{}}}",
+            flat.trim()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::{exact_distribution, StateSpace};
+    use crate::graph::models;
+    use crate::samplers::EnergyPath;
+
+    fn engine_over(g: Arc<FactorGraph>, chains: usize) -> (QueryEngine, Arc<LiveEstimator>) {
+        let live = Arc::new(LiveEstimator::new(g.n(), g.domain_size() as usize, chains, 64));
+        let engine = QueryEngine::new(
+            g,
+            live.clone(),
+            Arc::new(MetricsHub::new()),
+            SamplerSpec::Gibbs(EnergyPath::Specialized),
+            11,
+            QueryDefaults::default(),
+        );
+        (engine, live)
+    }
+
+    #[test]
+    fn parses_requests() {
+        assert_eq!(
+            parse_request("{\"type\":\"marginal\",\"var\":3}").unwrap(),
+            Request::Marginal { var: 3 }
+        );
+        let line = "{\"type\":\"conditional\",\"var\":1,\"evidence\":{\"0\":1,\"2\":0}}";
+        let req = parse_request(line).unwrap();
+        assert_eq!(
+            req,
+            Request::Conditional {
+                var: 1,
+                evidence: vec![(0, 1), (2, 0)],
+                burn_in: None,
+                samples: None,
+            }
+        );
+        assert_eq!(parse_request("{\"type\":\"status\"}").unwrap(), Request::Status);
+        assert_eq!(parse_request("{\"type\":\"shutdown\"}").unwrap(), Request::Shutdown);
+        assert!(parse_request("not json").is_err());
+        assert!(parse_request("{\"type\":\"nope\"}").is_err());
+        assert!(parse_request("{\"type\":\"marginal\",\"var\":-1}").is_err());
+        assert!(parse_request("{\"type\":\"marginal\",\"var\":1.5}").is_err());
+        assert!(parse_request("{\"type\":\"conditional\",\"var\":0}").is_err());
+    }
+
+    #[test]
+    fn marginal_reads_live_counts() {
+        let g = Arc::new(models::tiny_random(2, 2, 0.5, 31));
+        let (engine, live) = engine_over(g, 1);
+        let mut local = crate::analysis::MarginalEstimator::new(2, 2);
+        local.update(&[0, 1]);
+        local.update(&[1, 1]);
+        live.publish(0, &local, &[], 2, &[1, 1]);
+        let resp = engine.handle(&Request::Marginal { var: 0 }).unwrap();
+        assert!(resp.contains("\"ok\":true"), "{resp}");
+        assert!(resp.contains("\"samples\":2"), "{resp}");
+        assert!(resp.contains("\"dist\":[0.5,0.5]"), "{resp}");
+        assert!(engine.handle(&Request::Marginal { var: 9 }).is_err());
+    }
+
+    /// The conditional sampler must converge to the exact enumerated
+    /// conditional π(x_var | evidence) on a tiny model.
+    #[test]
+    fn conditional_matches_enumeration() {
+        let g = Arc::new(models::tiny_random(4, 3, 0.9, 32));
+        let (engine, _) = engine_over(g.clone(), 1);
+        let evidence = vec![(0usize, 2u16), (3usize, 1u16)];
+        let var = 1usize;
+
+        // Exact conditional by enumeration.
+        let space = StateSpace::for_graph(&g);
+        let pi = exact_distribution(&g);
+        let d = g.domain_size() as usize;
+        let mut num = vec![0.0f64; d];
+        let mut den = 0.0f64;
+        for idx in 0..space.len() {
+            let s = space.state(idx);
+            if evidence.iter().all(|&(site, val)| s[site] == val) {
+                num[s[var] as usize] += pi[idx];
+                den += pi[idx];
+            }
+        }
+        let exact: Vec<f64> = num.iter().map(|&x| x / den).collect();
+
+        let resp = engine
+            .handle(&Request::Conditional {
+                var,
+                evidence,
+                burn_in: Some(2_000),
+                samples: Some(60_000),
+            })
+            .unwrap();
+        // Pull the dist array back out of the response line.
+        let doc = JsonValue::parse(&resp).unwrap();
+        let dist: Vec<f64> = doc
+            .get("dist")
+            .and_then(|v| v.as_array())
+            .unwrap()
+            .iter()
+            .map(|v| v.as_f64().unwrap())
+            .collect();
+        for (u, (&got, &want)) in dist.iter().zip(exact.iter()).enumerate() {
+            assert!(
+                (got - want).abs() < 0.02,
+                "conditional[{u}] = {got}, exact = {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn conditional_on_pinned_var_is_point_mass() {
+        let g = Arc::new(models::tiny_random(3, 2, 0.5, 33));
+        let (engine, _) = engine_over(g, 1);
+        let resp = engine
+            .handle(&Request::Conditional {
+                var: 0,
+                evidence: vec![(0, 1)],
+                burn_in: None,
+                samples: None,
+            })
+            .unwrap();
+        assert!(resp.contains("\"dist\":[0,1]"), "{resp}");
+        assert!(resp.contains("\"pinned\":true"), "{resp}");
+    }
+
+    #[test]
+    fn conditional_validates_evidence() {
+        let g = Arc::new(models::tiny_random(3, 2, 0.5, 34));
+        let (engine, _) = engine_over(g, 1);
+        let bad_site = Request::Conditional {
+            var: 0,
+            evidence: vec![(9, 0)],
+            burn_in: None,
+            samples: None,
+        };
+        assert!(engine.handle(&bad_site).is_err());
+        let bad_val = Request::Conditional {
+            var: 0,
+            evidence: vec![(1, 7)],
+            burn_in: None,
+            samples: None,
+        };
+        assert!(engine.handle(&bad_val).is_err());
+    }
+
+    #[test]
+    fn status_and_metrics_render_valid_json() {
+        let g = Arc::new(models::tiny_random(3, 2, 0.5, 35));
+        let (engine, live) = engine_over(g, 2);
+        let empty = crate::analysis::MarginalEstimator::new(3, 2);
+        live.publish(0, &empty, &[1.0, 2.0], 10, &[0, 0, 0]);
+        let (resp, shutdown) = engine.handle_line("{\"type\":\"status\"}");
+        assert!(!shutdown);
+        let doc = JsonValue::parse(&resp).unwrap();
+        assert_eq!(doc.get("chains").and_then(|v| v.as_f64()), Some(2.0));
+        assert!(!resp.contains('\n'));
+
+        let (resp, _) = engine.handle_line("{\"type\":\"metrics\"}");
+        let doc = JsonValue::parse(&resp).unwrap();
+        assert!(doc.get("snapshot").is_some(), "{resp}");
+        assert!(!resp.contains('\n'));
+
+        let (resp, shutdown) = engine.handle_line("{\"type\":\"shutdown\"}");
+        assert!(shutdown);
+        assert!(resp.contains("\"ok\":true"));
+
+        let (resp, shutdown) = engine.handle_line("garbage");
+        assert!(!shutdown);
+        assert!(resp.contains("\"ok\":false"));
+    }
+}

@@ -1,0 +1,339 @@
+//! The TCP front door: newline-delimited JSON queries plus a minimal
+//! HTTP `GET` so Prometheus can scrape the same port.
+//!
+//! Protocol sniffing happens on the first line of each connection: a
+//! line starting with `GET ` is treated as an HTTP/1.x request (headers
+//! drained, one `text/plain` response with the Prometheus rendering of
+//! the metrics hub, connection closed); anything else enters the NDJSON
+//! loop — one request per line, one response line per request, until
+//! EOF, a read timeout, or a `shutdown` request.
+//!
+//! Everything is std-only: a nonblocking accept loop polled against the
+//! shutdown flag, one detached handler thread per connection with a
+//! read timeout so stale clients can't pin the process.
+
+use std::io::{BufRead, BufReader, BufWriter, ErrorKind, Write as IoWrite};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::graph::FactorGraph;
+use crate::metrics::{expose, MetricsHub};
+
+use super::pool::{ChainPool, PoolConfig};
+use super::query::{error_response, QueryDefaults, QueryEngine};
+use super::signal;
+
+/// Front-door options orthogonal to the pool.
+#[derive(Clone, Debug)]
+pub struct ServiceOptions {
+    /// Bind host.
+    pub host: String,
+    /// Bind port; 0 = ephemeral (the bound port is in
+    /// [`Service::local_addr`]).
+    pub port: u16,
+    /// Per-connection read timeout; idle clients are dropped after it.
+    pub read_timeout: Duration,
+    /// Conditional-query defaults.
+    pub query: QueryDefaults,
+}
+
+impl Default for ServiceOptions {
+    fn default() -> Self {
+        Self {
+            host: "127.0.0.1".to_string(),
+            port: 0,
+            read_timeout: Duration::from_secs(30),
+            query: QueryDefaults::default(),
+        }
+    }
+}
+
+/// A running inference service: chain pool + query engine + listener.
+pub struct Service {
+    addr: SocketAddr,
+    accept_handle: JoinHandle<()>,
+    pool: ChainPool,
+    engine: Arc<QueryEngine>,
+    shutdown: Arc<AtomicBool>,
+}
+
+impl Service {
+    /// Start the pool and the listener. The returned handle owns both;
+    /// call [`Service::shutdown`] (or [`Service::run_until_shutdown`])
+    /// to stop them and flush checkpoints.
+    pub fn start(
+        graph: Arc<FactorGraph>,
+        pool_cfg: PoolConfig,
+        opts: &ServiceOptions,
+    ) -> Result<Service> {
+        let hub = Arc::new(MetricsHub::new());
+        let pool = ChainPool::start(graph.clone(), pool_cfg, hub.clone())?;
+        let engine = Arc::new(QueryEngine::new(
+            graph,
+            pool.live().clone(),
+            hub.clone(),
+            pool.config().sampler,
+            pool.config().seed,
+            opts.query,
+        ));
+
+        let listener = TcpListener::bind((opts.host.as_str(), opts.port))
+            .with_context(|| format!("binding {}:{}", opts.host, opts.port))?;
+        listener
+            .set_nonblocking(true)
+            .context("setting the listener nonblocking")?;
+        let addr = listener.local_addr().context("reading the bound address")?;
+
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let accept_handle = {
+            let engine = engine.clone();
+            let shutdown = shutdown.clone();
+            let hub = hub.clone();
+            let read_timeout = opts.read_timeout;
+            std::thread::Builder::new()
+                .name("mbgibbs-accept".to_string())
+                .spawn(move || accept_loop(listener, engine, shutdown, hub, read_timeout))
+                .context("spawning the accept loop")?
+        };
+        Ok(Service {
+            addr,
+            accept_handle,
+            pool,
+            engine,
+            shutdown,
+        })
+    }
+
+    /// The bound address (resolves port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// The pool, for watermark control in tests and drain flows.
+    pub fn pool(&self) -> &ChainPool {
+        &self.pool
+    }
+
+    /// The query engine (in-process queries without a socket).
+    pub fn engine(&self) -> &Arc<QueryEngine> {
+        &self.engine
+    }
+
+    /// Has a client sent `{"type":"shutdown"}`?
+    pub fn shutdown_requested(&self) -> bool {
+        self.shutdown.load(Ordering::Relaxed)
+    }
+
+    /// Stop accepting, stop the chains (flushing shutdown checkpoints
+    /// where configured), and join the accept loop.
+    pub fn shutdown(self) -> Result<()> {
+        let Service {
+            accept_handle,
+            pool,
+            shutdown,
+            ..
+        } = self;
+        shutdown.store(true, Ordering::Relaxed);
+        let _ = accept_handle.join();
+        pool.stop()
+    }
+
+    /// Serve until SIGINT/SIGTERM or a client `shutdown` request, then
+    /// shut down. This is the CLI `serve` loop.
+    pub fn run_until_shutdown(self) -> Result<()> {
+        signal::install();
+        while !self.shutdown_requested() && !signal::triggered() {
+            std::thread::sleep(Duration::from_millis(100));
+        }
+        eprintln!("[mbgibbs] service shutting down");
+        self.shutdown()
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    engine: Arc<QueryEngine>,
+    shutdown: Arc<AtomicBool>,
+    hub: Arc<MetricsHub>,
+    read_timeout: Duration,
+) {
+    let connections = hub.counter("service_connections_total");
+    loop {
+        if shutdown.load(Ordering::Relaxed) {
+            return;
+        }
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                connections.add(1);
+                let engine = engine.clone();
+                let shutdown = shutdown.clone();
+                let hub = hub.clone();
+                let _ = std::thread::Builder::new()
+                    .name("mbgibbs-conn".to_string())
+                    .spawn(move || {
+                        let _ = handle_connection(stream, &engine, &shutdown, &hub, read_timeout);
+                    });
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(5)),
+        }
+    }
+}
+
+fn handle_connection(
+    stream: TcpStream,
+    engine: &QueryEngine,
+    shutdown: &AtomicBool,
+    hub: &MetricsHub,
+    read_timeout: Duration,
+) -> std::io::Result<()> {
+    stream.set_nonblocking(false)?;
+    stream.set_read_timeout(Some(read_timeout))?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = BufWriter::new(stream);
+    let mut line = String::new();
+    loop {
+        line.clear();
+        let nread = match reader.read_line(&mut line) {
+            Ok(n) => n,
+            Err(e) if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut => {
+                let _ = writer.write_all(error_response("read timeout").as_bytes());
+                let _ = writer.write_all(b"\n");
+                let _ = writer.flush();
+                return Ok(());
+            }
+            Err(e) => return Err(e),
+        };
+        if nread == 0 {
+            return Ok(()); // EOF: client closed.
+        }
+        let trimmed = line.trim();
+        if trimmed.is_empty() {
+            continue;
+        }
+        if trimmed.starts_with("GET ") {
+            // Minimal HTTP: drain headers, answer with the Prometheus
+            // text rendering, close.
+            loop {
+                line.clear();
+                let n = reader.read_line(&mut line)?;
+                if n == 0 || line.trim().is_empty() {
+                    break;
+                }
+            }
+            let body = expose::to_prometheus(&hub.snapshot());
+            write!(
+                writer,
+                "HTTP/1.1 200 OK\r\nContent-Type: text/plain; version=0.0.4\r\n\
+                 Content-Length: {}\r\nConnection: close\r\n\r\n{}",
+                body.len(),
+                body
+            )?;
+            writer.flush()?;
+            return Ok(());
+        }
+        let (resp, wants_shutdown) = engine.handle_line(trimmed);
+        writer.write_all(resp.as_bytes())?;
+        writer.write_all(b"\n")?;
+        writer.flush()?;
+        if wants_shutdown {
+            shutdown.store(true, Ordering::Relaxed);
+            return Ok(());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench::workload::SamplerSpec;
+    use crate::graph::models;
+    use crate::samplers::EnergyPath;
+
+    fn tiny_service() -> Service {
+        let g = Arc::new(models::tiny_random(3, 2, 0.5, 41));
+        let mut cfg = PoolConfig::new(SamplerSpec::Gibbs(EnergyPath::Specialized), 1);
+        cfg.publish_every = 64;
+        cfg.pause_at = 256;
+        Service::start(g, cfg, &ServiceOptions::default()).unwrap()
+    }
+
+    fn roundtrip(addr: SocketAddr, line: &str) -> String {
+        let stream = TcpStream::connect(addr).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut writer = stream;
+        writer.write_all(line.as_bytes()).unwrap();
+        writer.write_all(b"\n").unwrap();
+        let mut resp = String::new();
+        reader.read_line(&mut resp).unwrap();
+        resp
+    }
+
+    #[test]
+    fn ndjson_round_trip_over_tcp() {
+        let svc = tiny_service();
+        svc.pool().wait_until_paused();
+        let addr = svc.local_addr();
+
+        let resp = roundtrip(addr, "{\"type\":\"marginal\",\"var\":0}");
+        assert!(resp.contains("\"ok\":true"), "{resp}");
+        assert!(resp.contains("\"samples\":256"), "{resp}");
+
+        let resp = roundtrip(addr, "{\"type\":\"status\"}");
+        assert!(resp.contains("\"chains\":1"), "{resp}");
+
+        let resp = roundtrip(addr, "not json at all");
+        assert!(resp.contains("\"ok\":false"), "{resp}");
+
+        svc.shutdown().unwrap();
+    }
+
+    #[test]
+    fn prometheus_get_served_on_same_port() {
+        let svc = tiny_service();
+        svc.pool().wait_until_paused();
+        let stream = TcpStream::connect(svc.local_addr()).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut writer = stream;
+        writer
+            .write_all(b"GET /metrics HTTP/1.1\r\nHost: localhost\r\n\r\n")
+            .unwrap();
+        let mut response = String::new();
+        loop {
+            let mut l = String::new();
+            if reader.read_line(&mut l).unwrap() == 0 {
+                break;
+            }
+            response.push_str(&l);
+        }
+        assert!(response.starts_with("HTTP/1.1 200 OK"), "{response}");
+        assert!(
+            response.contains("sampler_steps_total"),
+            "missing sampler counters: {response}"
+        );
+        svc.shutdown().unwrap();
+    }
+
+    #[test]
+    fn client_shutdown_request_trips_the_flag() {
+        let svc = tiny_service();
+        let resp = roundtrip(svc.local_addr(), "{\"type\":\"shutdown\"}");
+        assert!(resp.contains("\"ok\":true"), "{resp}");
+        // The handler thread sets the flag right after responding.
+        for _ in 0..500 {
+            if svc.shutdown_requested() {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        assert!(svc.shutdown_requested());
+        svc.shutdown().unwrap();
+    }
+}

@@ -1,0 +1,235 @@
+//! Integration: the persistent inference service end to end — concurrent
+//! NDJSON queries over TCP against live chains, marginal parity with a
+//! batch replica of the pool discipline, and checkpoint-on-shutdown →
+//! bit-exact resume across a full service restart.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+use mbgibbs::analysis::MarginalEstimator;
+use mbgibbs::bench::workload::SamplerSpec;
+use mbgibbs::config::JsonValue;
+use mbgibbs::coordinator::Checkpoint;
+use mbgibbs::graph::models;
+use mbgibbs::rng::Pcg64;
+use mbgibbs::samplers::EnergyPath;
+use mbgibbs::service::{PoolConfig, Service, ServiceOptions};
+
+fn gibbs() -> SamplerSpec {
+    SamplerSpec::Gibbs(EnergyPath::Specialized)
+}
+
+/// Worker count under test (CI matrix exports `MBGIBBS_TEST_WORKERS`).
+fn ci_workers() -> usize {
+    std::env::var("MBGIBBS_TEST_WORKERS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(4)
+}
+
+fn tmpdir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("mbgibbs_is_{name}_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// One NDJSON round trip; panics on transport errors, returns the parsed
+/// response.
+fn query(addr: SocketAddr, line: &str) -> JsonValue {
+    let stream = TcpStream::connect(addr).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut writer = stream;
+    writer.write_all(line.as_bytes()).unwrap();
+    writer.write_all(b"\n").unwrap();
+    writer.flush().unwrap();
+    let mut resp = String::new();
+    reader.read_line(&mut resp).unwrap();
+    JsonValue::parse(resp.trim()).unwrap()
+}
+
+fn assert_ok(resp: &JsonValue) {
+    assert_eq!(
+        resp.get("ok"),
+        Some(&JsonValue::Bool(true)),
+        "request failed: {resp:?}"
+    );
+}
+
+fn dist_of(resp: &JsonValue) -> Vec<f64> {
+    resp.get("dist")
+        .and_then(|v| v.as_array())
+        .expect("response carries a dist array")
+        .iter()
+        .map(|v| v.as_f64().unwrap())
+        .collect()
+}
+
+/// Concurrent clients hammer a paused service with marginal, conditional,
+/// status, and metrics queries. Marginals must match a hand-rolled batch
+/// replica of the pool's per-chain discipline exactly — same master-split
+/// streams, same step loop — because the daemon's chains ARE batch chains.
+#[test]
+fn concurrent_queries_match_batch_estimates() {
+    let g = models::tiny_random(4, 3, 0.8, 31);
+    let (chains, iters, seed) = (2usize, 4_000u64, 17u64);
+    let mut cfg = PoolConfig::new(gibbs(), chains);
+    cfg.seed = seed;
+    cfg.publish_every = 256;
+    cfg.pause_at = iters;
+    let svc = Service::start(Arc::new(g.clone()), cfg, &ServiceOptions::default()).unwrap();
+    svc.pool().wait_until_paused();
+    let addr = svc.local_addr();
+
+    // Batch replica: what `run_chains` would have estimated.
+    let mut reference = MarginalEstimator::new(g.n(), g.domain_size() as usize);
+    let mut master = Pcg64::seeded(seed);
+    for k in 0..chains {
+        let mut rng = master.split(k as u64);
+        let mut state = vec![0u16; g.n()];
+        let mut sampler = gibbs().build(&g);
+        sampler.reset(&state, &mut rng);
+        for _ in 0..iters {
+            sampler.step(&mut state, &mut rng);
+            reference.update(&state);
+        }
+    }
+
+    let mut handles = Vec::new();
+    for i in 0..g.n() {
+        let expected = reference.marginal(i);
+        handles.push(std::thread::spawn(move || {
+            let resp = query(addr, &format!("{{\"type\":\"marginal\",\"var\":{i}}}"));
+            assert_ok(&resp);
+            assert_eq!(
+                resp.get("samples").and_then(|v| v.as_f64()),
+                Some((iters * chains as u64) as f64)
+            );
+            let dist = dist_of(&resp);
+            assert_eq!(dist.len(), expected.len());
+            for (got, want) in dist.iter().zip(&expected) {
+                assert!(
+                    (got - want).abs() < 1e-12,
+                    "marginal({i}) diverged from the batch replica: {got} vs {want}"
+                );
+            }
+        }));
+    }
+    handles.push(std::thread::spawn(move || {
+        let resp = query(
+            addr,
+            "{\"type\":\"conditional\",\"var\":1,\"evidence\":{\"0\":2},\
+             \"burn_in\":200,\"samples\":500}",
+        );
+        assert_ok(&resp);
+        let dist = dist_of(&resp);
+        let total: f64 = dist.iter().sum();
+        assert!((total - 1.0).abs() < 1e-9, "conditional dist not normalized");
+    }));
+    handles.push(std::thread::spawn(move || {
+        let resp = query(addr, "{\"type\":\"status\"}");
+        assert_ok(&resp);
+        assert_eq!(resp.get("chains").and_then(|v| v.as_f64()), Some(2.0));
+    }));
+    handles.push(std::thread::spawn(move || {
+        let resp = query(addr, "{\"type\":\"metrics\"}");
+        assert_ok(&resp);
+        assert!(resp.get("snapshot").is_some());
+    }));
+    for h in handles {
+        h.join().unwrap();
+    }
+    svc.shutdown().unwrap();
+}
+
+/// Stop a service (flushing checkpoints), start a fresh one with
+/// `resume`, run on — the restarted daemon's chain must be bit-identical
+/// to a single uninterrupted chain: same state AND same RNG position.
+#[test]
+fn shutdown_then_restart_resumes_bit_exact() {
+    let g = models::tiny_random(4, 3, 0.8, 33);
+    let dir = tmpdir("resume");
+    let seed = 11u64;
+    let mk = |resume: bool, pause: u64| {
+        let mut cfg = PoolConfig::new(gibbs(), 1);
+        cfg.seed = seed;
+        cfg.publish_every = 128;
+        cfg.checkpoint_dir = Some(dir.clone());
+        cfg.checkpoint_on_shutdown = true;
+        cfg.resume = resume;
+        cfg.pause_at = pause;
+        cfg
+    };
+
+    // Leg 1: serve to 1000, shut down over the wire.
+    let svc = Service::start(Arc::new(g.clone()), mk(false, 1_000), &ServiceOptions::default())
+        .unwrap();
+    svc.pool().wait_until_paused();
+    let resp = query(svc.local_addr(), "{\"type\":\"shutdown\"}");
+    assert_ok(&resp);
+    svc.shutdown().unwrap();
+    let mid = Checkpoint::load(&dir.join("chain0.ckpt")).unwrap();
+    assert_eq!(mid.iter, 1_000);
+
+    // Leg 2: a fresh service resumes and runs to 2000.
+    let svc = Service::start(Arc::new(g.clone()), mk(true, 2_000), &ServiceOptions::default())
+        .unwrap();
+    svc.pool().wait_until_paused();
+    svc.shutdown().unwrap();
+    let resumed = Checkpoint::load(&dir.join("chain0.ckpt")).unwrap();
+    assert_eq!(resumed.iter, 2_000);
+
+    // Uninterrupted replica of the same chain, straight to 2000.
+    let mut master = Pcg64::seeded(seed);
+    let mut rng = master.split(0);
+    let mut state = vec![0u16; g.n()];
+    let mut sampler = gibbs().build(&g);
+    sampler.reset(&state, &mut rng);
+    for _ in 0..2_000 {
+        sampler.step(&mut state, &mut rng);
+    }
+    assert_eq!(resumed.state, state, "restart diverged from the uninterrupted chain");
+    assert_eq!(
+        resumed.rng,
+        Some(rng.state_parts()),
+        "RNG position diverged across the restart"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The service also fronts parallel (chromatic-sweep) pool chains; the
+/// query surface is identical and watermarks land on sweep boundaries.
+#[test]
+fn parallel_pool_serves_queries() {
+    let g = models::ising_multipartite(3, 6, 1.5);
+    let n = g.n() as u64;
+    let mut cfg = PoolConfig::new(gibbs(), 1);
+    cfg.seed = 3;
+    cfg.workers = ci_workers();
+    cfg.record_every = n * 5;
+    cfg.publish_every = n * 10;
+    cfg.pause_at = n * 20;
+    let svc = Service::start(Arc::new(g.clone()), cfg, &ServiceOptions::default()).unwrap();
+    svc.pool().wait_until_paused();
+
+    let resp = query(svc.local_addr(), "{\"type\":\"marginal\",\"var\":0}");
+    assert_ok(&resp);
+    let dist = dist_of(&resp);
+    assert_eq!(dist.len(), g.domain_size() as usize);
+    assert!((dist.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+
+    let resp = query(svc.local_addr(), "{\"type\":\"status\"}");
+    assert_ok(&resp);
+    assert_eq!(
+        resp.get("iters")
+            .and_then(|v| v.as_array())
+            .map(|a| a[0].as_f64().unwrap()),
+        Some((n * 20) as f64),
+        "parallel watermark should land exactly on the requested sweep boundary"
+    );
+    svc.shutdown().unwrap();
+}
