@@ -80,19 +80,28 @@ pub fn gelman_rubin(chains: &[Vec<f64>]) -> f64 {
 /// to the shortest chain so mixed-length inputs (resumes, a live pool
 /// mid-publish) still diagnose. `R̂` is `Some` with ≥ 2 chains and ≥ 2
 /// points per chain; pooled ESS (Σ over chains of n/τ) needs only ≥ 2
-/// points per chain.
+/// points per chain. Degenerate windows — a non-finite energy point,
+/// zero cross-chain variance, too few chains — yield `None` rather than
+/// NaN, so NDJSON/Prometheus consumers see `null`, never `NaN`.
 pub fn cross_chain_diagnostics(traces: &[&[f64]]) -> (Option<f64>, Option<f64>) {
     let min_len = traces.iter().map(|t| t.len()).min().unwrap_or(0);
     if min_len < 2 {
         return (None, None);
     }
     let truncated: Vec<Vec<f64>> = traces.iter().map(|t| t[..min_len].to_vec()).collect();
+    // A single non-finite point would NaN-poison every moment below (or
+    // worse, sneak a finite-but-meaningless τ through `max`); the whole
+    // window is undiagnosable.
+    if truncated.iter().any(|t| t.iter().any(|v| !v.is_finite())) {
+        return (None, None);
+    }
     let rhat = if truncated.len() >= 2 {
-        Some(gelman_rubin(&truncated))
+        Some(gelman_rubin(&truncated)).filter(|v| v.is_finite())
     } else {
         None
     };
-    let pooled_ess = Some(truncated.iter().map(|t| effective_sample_size(t)).sum());
+    let pooled_ess = Some(truncated.iter().map(|t| effective_sample_size(t)).sum::<f64>())
+        .filter(|v| v.is_finite());
     (rhat, pooled_ess)
 }
 
@@ -167,6 +176,34 @@ mod tests {
         let (rhat, _) = cross_chain_diagnostics(&[&a, &b]);
         let (rhat_trunc, _) = cross_chain_diagnostics(&[&a[..60], &b]);
         assert_eq!(rhat.unwrap(), rhat_trunc.unwrap());
+    }
+
+    /// Degenerate windows must come back as `None` (→ JSON `null`), not
+    /// NaN: a zero-variance window keeps R̂ = 1 by the `w == 0` guard,
+    /// and any non-finite energy point poisons both statistics.
+    #[test]
+    fn cross_chain_never_emits_nan() {
+        // Constant (zero-variance) traces: R̂ hits the w == 0 guard.
+        let flat = vec![2.5f64; 50];
+        let (rhat, ess) = cross_chain_diagnostics(&[&flat, &flat]);
+        assert_eq!(rhat, Some(1.0));
+        assert!(ess.unwrap().is_finite());
+
+        // A NaN energy point (e.g. an overflowed ζ(x)) poisons the
+        // window; both statistics must clamp to None.
+        let mut poisoned = iid_series(50, 40);
+        poisoned[7] = f64::NAN;
+        let clean = iid_series(50, 41);
+        let (rhat, ess) = cross_chain_diagnostics(&[&poisoned, &clean]);
+        assert_eq!(rhat, None, "NaN window must not leak an R̂");
+        assert_eq!(ess, None, "NaN window must not leak an ESS");
+
+        // Same for infinities.
+        let mut inf = iid_series(50, 42);
+        inf[3] = f64::INFINITY;
+        let (rhat, ess) = cross_chain_diagnostics(&[&inf, &clean]);
+        assert_eq!(rhat, None);
+        assert_eq!(ess, None);
     }
 
     #[test]

@@ -23,10 +23,12 @@
 //! during the run, `--progress N` prints per-chain progress lines, and
 //! `--resume` continues from `output_dir/checkpoints/`.
 //!
-//! Adaptive control flags for `sample`: `--adapt [POLICY]` turns on the
-//! per-chain controller (policies: `target-accept`, `eval-budget`),
-//! `--target-accept X` sets the acceptance target, and `--adapt-every N`
-//! the review cadence. See `docs/ADAPTIVE.md`.
+//! Adaptive control flags for `sample` and `serve`: `--adapt [POLICY]`
+//! turns on the per-chain controller (policies: `target-accept`,
+//! `eval-budget`), `--target-accept X` sets the acceptance target, and
+//! `--adapt-every N` the review cadence. `sample` layers them over the
+//! `[control]` section, `serve` over `[service.adapt]`. See
+//! `docs/ADAPTIVE.md`.
 
 use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, Write as IoWrite};
@@ -53,7 +55,7 @@ use crate::graph::models;
 use crate::metrics::{expose, MetricsHub, Snapshot, Unit};
 use crate::rng::Pcg64;
 use crate::runtime::{backend::parity_report, ArtifactStore, XlaDenseBackend};
-use crate::service::{PoolConfig, QueryDefaults, Service, ServiceOptions};
+use crate::service::{PoolConfig, QueryCacheConfig, QueryDefaults, Service, ServiceOptions};
 
 /// Parsed command line: subcommand plus `--key value` / `--flag` options.
 #[derive(Clone, Debug, Default)]
@@ -202,11 +204,14 @@ fn print_help() {
          \x20 info                   paper-model statistics (Δ, L, Ψ)\n\
          \x20 metrics --snapshot F   pretty-print a saved metrics snapshot (JSON)\n\
          \x20 serve --config FILE    persistent inference service (docs/SERVICE.md);\n\
-         \x20                        overrides: --port --pool --workers --seed --resume\n\
+         \x20                        overrides: --port --pool --workers --seed --resume;\n\
+         \x20                        adaptive pool chains: --adapt [POLICY]\n\
+         \x20                        --target-accept X --adapt-every N\n\
          \x20 query --addr H:P       query a running service; --type status (default) |\n\
          \x20                        marginal | conditional | metrics | shutdown,\n\
          \x20                        --var N, --evidence \"i=v,j=v\", --burn-in N,\n\
-         \x20                        --samples N\n\n\
+         \x20                        --samples N, --no-cache (bypass the\n\
+         \x20                        conditional-result cache)\n\n\
          SAMPLE OBSERVABILITY:\n\
          \x20 --metrics-out PATH     write end-of-run metrics as JSON (+ PATH.prom)\n\
          \x20 --metrics-every SECS   also flush the metrics files periodically\n\
@@ -226,7 +231,15 @@ fn print_help() {
 /// overridden by `--adapt [POLICY]`, `--target-accept X` (which implies
 /// target-acceptance when no policy is active) and `--adapt-every N`.
 fn control_policy_from(args: &Args, cfg: &ExperimentConfig) -> Result<ControlPolicy> {
-    let mut policy = cfg.control.to_policy()?;
+    apply_adapt_flags(args, cfg.control.to_policy()?)
+}
+
+/// Layer the shared `--adapt` / `--target-accept` / `--adapt-every`
+/// flags over a config-derived base policy. `sample` starts from
+/// `[control]`, `serve` from `[service.adapt]`; the flags behave
+/// identically on both.
+fn apply_adapt_flags(args: &Args, base: ControlPolicy) -> Result<ControlPolicy> {
+    let mut policy = base;
     if let Some(name) = args.options.get("adapt") {
         policy = ControlPolicy::from_name(name)?;
     } else if args.has_flag("adapt") && policy.is_off() {
@@ -472,6 +485,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     pool_cfg.burn_in = sc.burn_in;
     pool_cfg.window = sc.window;
     pool_cfg.resume = resume;
+    pool_cfg.adapt = apply_adapt_flags(args, sc.adapt.to_policy()?)?;
     if sc.checkpoint_on_shutdown || resume {
         pool_cfg.checkpoint_dir = Some(cfg.run.output_dir.join("checkpoints"));
         pool_cfg.checkpoint_on_shutdown = sc.checkpoint_on_shutdown;
@@ -488,6 +502,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
             burn_in: sc.query_burn_in,
             samples: sc.query_samples,
         },
+        query_cache: QueryCacheConfig {
+            enabled: sc.query_cache.enabled,
+            ttl: Duration::from_millis(sc.query_cache.ttl_ms),
+            capacity: sc.query_cache.capacity,
+        },
         ..ServiceOptions::default()
     };
 
@@ -499,6 +518,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
         graph.stats().delta,
     );
     println!("sampler: {}", spec.label(&graph));
+    if !pool_cfg.adapt.is_off() {
+        println!("control: {}", pool_cfg.adapt);
+    }
     let chains = pool_cfg.chains;
     let workers = pool_cfg.workers;
     let svc = Service::start(Arc::new(graph), pool_cfg, &opts)?;
@@ -546,6 +568,9 @@ fn build_query_line(args: &Args) -> Result<String> {
             }
             if args.options.contains_key("samples") {
                 line.push_str(&format!(",\"samples\":{}", required_u64("samples")?));
+            }
+            if args.has_flag("no-cache") {
+                line.push_str(",\"no_cache\":true");
             }
             line.push('}');
             line
@@ -876,11 +901,46 @@ mod tests {
             "{\"type\":\"conditional\",\"var\":2,\"evidence\":{\"0\":1,\"3\":2},\"samples\":100}"
         );
 
+        // --no-cache rides along as a JSON field.
+        let a = parse(&["query", "--type", "conditional", "--var", "1", "--no-cache"]);
+        assert_eq!(
+            build_query_line(&a).unwrap(),
+            "{\"type\":\"conditional\",\"var\":1,\"evidence\":{},\"no_cache\":true}"
+        );
+
         // Marginal without --var, and unknown types, are errors.
         let a = parse(&["query", "--type", "marginal"]);
         assert!(build_query_line(&a).is_err());
         let a = parse(&["query", "--type", "nope"]);
         assert!(build_query_line(&a).is_err());
+    }
+
+    #[test]
+    fn serve_adapt_flags_layer_over_service_section() {
+        let cfg = ExperimentConfig::from_doc(
+            &crate::config::TomlDoc::parse(
+                "[service.adapt]\npolicy = \"target-accept\"\ntarget_accept = 0.55",
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        // No flags: the section's policy stands.
+        let a = parse(&["serve"]);
+        match apply_adapt_flags(&a, cfg.service.adapt.to_policy().unwrap()).unwrap() {
+            ControlPolicy::TargetAcceptance { target, .. } => assert_eq!(target, 0.55),
+            other => panic!("wrong policy {other:?}"),
+        }
+        // Flags override the section.
+        let a = parse(&["serve", "--adapt", "off"]);
+        assert!(apply_adapt_flags(&a, cfg.service.adapt.to_policy().unwrap())
+            .unwrap()
+            .is_off());
+        // --adapt-every layers onto the section's policy.
+        let a = parse(&["serve", "--adapt-every", "750"]);
+        match apply_adapt_flags(&a, cfg.service.adapt.to_policy().unwrap()).unwrap() {
+            ControlPolicy::TargetAcceptance { adapt_every, .. } => assert_eq!(adapt_every, 750),
+            other => panic!("wrong policy {other:?}"),
+        }
     }
 
     #[test]

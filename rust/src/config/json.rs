@@ -52,6 +52,14 @@ impl JsonValue {
         }
     }
 
+    /// As bool.
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            JsonValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
     /// As number.
     pub fn as_f64(&self) -> Option<f64> {
         match self {

@@ -11,7 +11,7 @@ pub mod toml;
 
 pub use json::JsonValue;
 pub use schema::{
-    ControlConfig, ExperimentConfig, ModelConfig, ParallelConfig, RunConfig, SamplerConfig,
-    ServiceConfig,
+    ControlConfig, ExperimentConfig, ModelConfig, ParallelConfig, QueryCacheSettings, RunConfig,
+    SamplerConfig, ServiceConfig,
 };
 pub use toml::{TomlDoc, TomlValue};

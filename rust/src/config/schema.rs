@@ -35,6 +35,15 @@
 //! pool = 4               # background chains
 //! workers = 0            # within-chain workers per pool chain
 //! checkpoint_on_shutdown = true
+//!
+//! [service.adapt]
+//! policy = "target-accept"   # pool chains retune λ/B online (docs/SERVICE.md)
+//! adapt_every = 1000
+//!
+//! [service.query_cache]
+//! enabled = true         # coalesce + cache conditional queries
+//! ttl_ms = 2000
+//! capacity = 64
 //! ```
 //!
 //! Model `type = "uai"` loads a factor graph from a UAI MARKOV file via
@@ -201,6 +210,36 @@ pub struct ServiceConfig {
     pub query_burn_in: u64,
     /// Default estimation steps for conditional queries.
     pub query_samples: u64,
+    /// Adaptive-control policy for pool chains (`[service.adapt]`;
+    /// independent of the batch `[control]` section). The CLI
+    /// `serve --adapt` flags override it.
+    pub adapt: ControlConfig,
+    /// Conditional-query coalescing/cache knobs
+    /// (`[service.query_cache]`).
+    pub query_cache: QueryCacheSettings,
+}
+
+/// `[service.query_cache]`: the conditional-result cache behind the
+/// query engine's request coalescing (see `docs/SERVICE.md`).
+#[derive(Clone, Debug)]
+pub struct QueryCacheSettings {
+    /// Cache completed conditional results (coalescing of in-flight
+    /// identical requests stays on either way).
+    pub enabled: bool,
+    /// Freshness window for cached results, in milliseconds.
+    pub ttl_ms: u64,
+    /// Maximum distinct evidence keys held at once.
+    pub capacity: usize,
+}
+
+impl Default for QueryCacheSettings {
+    fn default() -> Self {
+        Self {
+            enabled: true,
+            ttl_ms: 2_000,
+            capacity: 64,
+        }
+    }
 }
 
 impl Default for ServiceConfig {
@@ -216,6 +255,8 @@ impl Default for ServiceConfig {
             checkpoint_on_shutdown: true,
             query_burn_in: 2_000,
             query_samples: 4_000,
+            adapt: ControlConfig::default(),
+            query_cache: QueryCacheSettings::default(),
         }
     }
 }
@@ -304,15 +345,20 @@ impl ExperimentConfig {
             progress_every: get_u64("run", "progress_every", 0)?,
         };
         let control_defaults = ControlConfig::default();
-        let control = ControlConfig {
-            policy: gets("control", "policy")
-                .and_then(|v| v.as_str())
-                .unwrap_or(&control_defaults.policy)
-                .to_string(),
-            target_accept: get_f64("control", "target_accept", control_defaults.target_accept)?,
-            band: get_f64("control", "band", control_defaults.band)?,
-            adapt_every: get_u64("control", "adapt_every", control_defaults.adapt_every)?,
+        // `[control]` steers batch runs; `[service.adapt]` steers pool
+        // chains — same shape, parsed independently.
+        let parse_control = |sec: &str| -> Result<ControlConfig> {
+            Ok(ControlConfig {
+                policy: gets(sec, "policy")
+                    .and_then(|v| v.as_str())
+                    .unwrap_or(&control_defaults.policy)
+                    .to_string(),
+                target_accept: get_f64(sec, "target_accept", control_defaults.target_accept)?,
+                band: get_f64(sec, "band", control_defaults.band)?,
+                adapt_every: get_u64(sec, "adapt_every", control_defaults.adapt_every)?,
+            })
         };
+        let control = parse_control("control")?;
         let parallel = ParallelConfig {
             workers: get_u64("parallel", "workers", 0)? as usize,
         };
@@ -344,6 +390,16 @@ impl ExperimentConfig {
             )?,
             query_burn_in: get_u64("service", "query_burn_in", sd.query_burn_in)?,
             query_samples: get_u64("service", "query_samples", sd.query_samples)?,
+            adapt: parse_control("service.adapt")?,
+            query_cache: QueryCacheSettings {
+                enabled: get_bool("service.query_cache", "enabled", sd.query_cache.enabled)?,
+                ttl_ms: get_u64("service.query_cache", "ttl_ms", sd.query_cache.ttl_ms)?,
+                capacity: get_u64(
+                    "service.query_cache",
+                    "capacity",
+                    sd.query_cache.capacity as u64,
+                )? as usize,
+            },
         };
         Ok(Self {
             model,
@@ -522,6 +578,43 @@ seed = 9
         assert!(
             ExperimentConfig::from_doc(&doc("[service]\ncheckpoint_on_shutdown = 3")).is_err()
         );
+    }
+
+    #[test]
+    fn service_adapt_and_query_cache_parse() {
+        let cfg = ExperimentConfig::from_doc(&doc("")).unwrap();
+        assert_eq!(cfg.service.adapt.policy, "off");
+        assert!(cfg.service.adapt.to_policy().unwrap().is_off());
+        assert!(cfg.service.query_cache.enabled);
+        assert_eq!(cfg.service.query_cache.ttl_ms, 2_000);
+        assert_eq!(cfg.service.query_cache.capacity, 64);
+
+        let cfg = ExperimentConfig::from_doc(&doc(
+            "[service.adapt]\npolicy = \"target-accept\"\ntarget_accept = 0.6\nadapt_every = 250\n\
+             \n[service.query_cache]\nenabled = false\nttl_ms = 500\ncapacity = 8",
+        ))
+        .unwrap();
+        // `[service.adapt]` is independent of the batch `[control]` section.
+        assert!(cfg.control.to_policy().unwrap().is_off());
+        match cfg.service.adapt.to_policy().unwrap() {
+            ControlPolicy::TargetAcceptance {
+                target,
+                adapt_every,
+                ..
+            } => {
+                assert_eq!(target, 0.6);
+                assert_eq!(adapt_every, 250);
+            }
+            other => panic!("wrong policy {other:?}"),
+        }
+        assert!(!cfg.service.query_cache.enabled);
+        assert_eq!(cfg.service.query_cache.ttl_ms, 500);
+        assert_eq!(cfg.service.query_cache.capacity, 8);
+
+        assert!(ExperimentConfig::from_doc(&doc("[service.query_cache]\nttl_ms = -5")).is_err());
+        let cfg =
+            ExperimentConfig::from_doc(&doc("[service.adapt]\npolicy = \"nope\"")).unwrap();
+        assert!(cfg.service.adapt.to_policy().is_err());
     }
 
     #[test]

@@ -160,6 +160,16 @@ impl Controller {
         !self.frozen && completed > 0 && completed % self.every == 0
     }
 
+    /// The sweep-aligned variant of [`Controller::due`]: whether a
+    /// review boundary (a multiple of `adapt_every`) lies in
+    /// `(prev, now]`. Chromatic engines advance in whole-sweep slices,
+    /// so a slice end need not land exactly on a multiple; a review
+    /// fires at the first sweep barrier on or after each boundary.
+    /// Never fires once a plateau froze the controller.
+    pub fn due_crossing(&self, prev: u64, now: u64) -> bool {
+        !self.frozen && now > prev && now / self.every > prev / self.every
+    }
+
     /// Mirror the sampler's current hyperparameters into the controller
     /// gauges (called once at chain start and after every adjustment).
     pub fn publish(&self, sampler: &dyn Sampler) {
@@ -498,6 +508,21 @@ mod tests {
                 .unwrap()
                 > 0
         );
+    }
+
+    /// Sweep-aligned reviews fire once per crossed `adapt_every`
+    /// boundary, even when slice ends are rounded to whole sweeps.
+    #[test]
+    fn due_crossing_fires_on_boundary_crossings() {
+        let (g, hub, policy) =
+            harness(ControlPolicy::target_acceptance(0.7).with_adapt_every(100));
+        let m = SamplerMetrics::register(&hub, &[("chain", "0"), ("sampler", "mgpmh")]);
+        let c = Controller::new(&policy, &hub, "0", m, g.stats()).unwrap();
+        assert!(c.due_crossing(90, 108), "boundary 100 lies in (90, 108]");
+        assert!(c.due_crossing(99, 100), "exact landing still fires");
+        assert!(!c.due_crossing(100, 108), "boundary 100 already consumed");
+        assert!(!c.due_crossing(10, 90), "no boundary crossed");
+        assert!(!c.due_crossing(108, 108), "empty slice never fires");
     }
 
     #[test]

@@ -196,6 +196,29 @@ mod tests {
         assert!(ess.unwrap() <= 4.0 + 1e-9);
     }
 
+    /// Degenerate energy windows — zero variance across chains, or a
+    /// NaN point from an overflowed ζ(x) — must never surface NaN to
+    /// the status/metrics JSON; `None` (→ `null`) is the contract.
+    #[test]
+    fn diagnostics_clamp_degenerate_windows() {
+        let live = LiveEstimator::new(1, 2, 2, 16);
+        let empty = MarginalEstimator::new(1, 2);
+        live.publish(0, &empty, &[2.0, 2.0, 2.0], 3, &[0]);
+        live.publish(1, &empty, &[2.0, 2.0, 2.0], 3, &[1]);
+        let (rhat, ess) = live.diagnostics();
+        assert_eq!(rhat, Some(1.0), "zero-variance window pins R̂ at 1");
+        assert!(ess.unwrap().is_finite());
+
+        let poisoned = LiveEstimator::new(1, 2, 2, 16);
+        poisoned.publish(0, &empty, &[1.0, f64::NAN, 2.0], 3, &[0]);
+        poisoned.publish(1, &empty, &[1.0, 1.5, 2.0], 3, &[1]);
+        assert_eq!(
+            poisoned.diagnostics(),
+            (None, None),
+            "NaN energy must clamp both diagnostics to null"
+        );
+    }
+
     #[test]
     fn diagnostics_need_two_points() {
         let live = LiveEstimator::new(1, 2, 2, 16);

@@ -15,7 +15,9 @@
 //! * `marginal(var)` — pooled running marginal, no extra sampling;
 //! * `conditional(var | evidence)` — pins the evidence sites, warm-starts
 //!   from the freshest published chain state, and runs a targeted
-//!   re-burn-in + estimation sweep on the connection thread;
+//!   re-burn-in + estimation sweep on the connection thread; identical
+//!   concurrent keys coalesce behind one run and completed results are
+//!   served from a TTL'd cache (see [`query`]);
 //! * `status` / `metrics` — pool positions, convergence diagnostics, and
 //!   the full metrics snapshot.
 //!
@@ -35,6 +37,13 @@
 //! consumer on the hot loop. Pause watermarks in parallel mode round up
 //! to whole chromatic sweeps, mirroring the sweep engine's iteration
 //! accounting.
+//!
+//! With a [`PoolConfig::adapt`] policy, each chain additionally carries
+//! the batch runner's adaptive
+//! [`Controller`](crate::control::Controller) — λ/λ²/B retune online
+//! from live acceptance and evals-per-ESS counters, reviews land at
+//! sweep barriers in parallel mode, and tuned values ride the v2
+//! checkpoints so adaptive serving resumes bit-exact (see [`pool`]).
 
 pub mod estimator;
 pub mod pool;
@@ -44,5 +53,5 @@ pub mod signal;
 
 pub use estimator::LiveEstimator;
 pub use pool::{ChainPool, PoolConfig, RUN_FOREVER};
-pub use query::{QueryDefaults, QueryEngine, Request};
-pub use server::{Service, ServiceOptions};
+pub use query::{QueryCacheConfig, QueryDefaults, QueryEngine, Request, MAX_QUERY_STEPS};
+pub use server::{Service, ServiceOptions, MAX_REQUEST_BYTES};

@@ -19,6 +19,20 @@
 //! [`ChromaticSweepEngine`]; slice and pause boundaries are rounded up
 //! to whole sweeps (n site updates) because intermediate states only
 //! materialize at sweep boundaries.
+//!
+//! With a non-[`Off`](crate::control::ControlPolicy::Off) `adapt`
+//! policy, each chain carries its own [`Controller`] and retunes λ/λ²/B
+//! online from its live acceptance-rate and evals-per-ESS counters.
+//! Serial chains review every `adapt_every` iterations like the batch
+//! runner. Parallel chains review at the first *sweep barrier* on or
+//! after each `adapt_every` boundary: workers apply hyperparameters at
+//! slice start, so adjustments only take effect between engine slices,
+//! and keying reviews to absolute iteration boundaries (not slice
+//! counts) keeps the adaptation schedule invariant under worker count
+//! and publish cadence. Tuned values ride in the v2 checkpoint flush;
+//! a resume whose checkpoint landed on a review boundary (pause at a
+//! multiple of `adapt_every`, sweep-aligned in parallel mode) replays
+//! bit-exactly under the target-accept policy.
 
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -30,6 +44,7 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use crate::analysis::MarginalEstimator;
 use crate::bench::workload::SamplerSpec;
+use crate::control::{ControlPolicy, Controller};
 use crate::coordinator::Checkpoint;
 use crate::graph::FactorGraph;
 use crate::metrics::{MetricsHub, SamplerMetrics};
@@ -77,6 +92,10 @@ pub struct PoolConfig {
     /// a finite value starts the pool in a drained-at-N state (tests,
     /// fixed-budget warm-up).
     pub pause_at: u64,
+    /// Adaptive-control policy: [`ControlPolicy::Off`] (default) runs
+    /// fixed hyperparameters; anything else gives each chain its own
+    /// [`Controller`] (parallel chains review at sweep barriers).
+    pub adapt: ControlPolicy,
 }
 
 impl PoolConfig {
@@ -95,6 +114,7 @@ impl PoolConfig {
             checkpoint_on_shutdown: false,
             resume: false,
             pause_at: RUN_FOREVER,
+            adapt: ControlPolicy::Off,
         }
     }
 }
@@ -141,6 +161,7 @@ impl ChainPool {
         if cfg.checkpoint_on_shutdown && cfg.checkpoint_dir.is_none() {
             bail!("checkpoint_on_shutdown requires a checkpoint_dir");
         }
+        cfg.adapt.validate()?;
 
         let n = graph.n() as u64;
         let live = Arc::new(LiveEstimator::new(
@@ -364,6 +385,20 @@ fn chain_main_serial(
         sampler.restore_aux_energy(e);
     }
 
+    // Adaptive control, wired exactly like the batch runner: the
+    // controller snapshots the (possibly resume-seeded) counters at
+    // construction so its first window covers only iterations it saw.
+    let mut controller = Controller::new(&cfg.adapt, hub, &chain_label, m.clone(), graph.stats());
+    if let Some(c) = &controller {
+        c.publish(sampler.as_ref());
+    }
+    // Cumulative marginal-error trajectory for plateau detection — the
+    // same (iteration, ℓ₂-error-vs-uniform) checkpoints as the batch
+    // runner's trajectory sink, recorded every `record_every`. Only
+    // maintained when a controller is active; it never touches the RNG.
+    let mut traj_est = controller.as_ref().map(|_| MarginalEstimator::new(n, d));
+    let mut trajectory: Vec<(u64, f64)> = Vec::new();
+
     let mut it = start_iter;
     let mut local = MarginalEstimator::new(n, d);
     let mut local_energy: Vec<f64> = Vec::new();
@@ -384,6 +419,12 @@ fn chain_main_serial(
             continue;
         }
         sampler.step(&mut state, &mut rng);
+        if let Some(est) = traj_est.as_mut() {
+            est.update(&state);
+            if it % cfg.record_every == 0 {
+                trajectory.push((it, est.l2_error_vs_uniform()));
+            }
+        }
         if it >= cfg.burn_in {
             local.update(&state);
             if it % cfg.record_every == 0 {
@@ -391,6 +432,26 @@ fn chain_main_serial(
             }
         }
         it += 1;
+        if let Some(c) = controller.as_mut() {
+            if c.due(it) {
+                let action = c.review(it, sampler.as_mut(), &trajectory);
+                if action.save_checkpoint {
+                    if let Some(dir) = &cfg.checkpoint_dir {
+                        flush_checkpoint(
+                            dir,
+                            cfg,
+                            k,
+                            it,
+                            &state,
+                            &m,
+                            &rng,
+                            None,
+                            sampler.as_ref(),
+                        )?;
+                    }
+                }
+            }
+        }
         if it % cfg.publish_every == 0 {
             live.publish(k, &local, &local_energy, it, &state);
             local.reset();
@@ -430,7 +491,7 @@ fn chain_main_parallel(
     let (start_iter, _, saved_site_rngs, _) =
         maybe_resume(cfg, k, n, &mut state, probe.as_mut(), &m)?;
 
-    let engine = {
+    let mut engine = {
         let mut e = ChromaticSweepEngine::new(
             graph,
             cfg.sampler,
@@ -447,6 +508,22 @@ fn chain_main_parallel(
         }
         e
     };
+
+    // Sweep-barrier adaptation: workers copy hyperparameters at slice
+    // start, so a review can only take effect between engine slices.
+    // Slices are therefore capped at the next `adapt_every` boundary
+    // (rounded up to a whole sweep), which keys the review schedule to
+    // absolute iteration counts — invariant under worker count and
+    // publish cadence. Counter sums are deterministic at slice ends
+    // (workers join), so review inputs are worker-count invariant too.
+    let mut controller = Controller::new(&cfg.adapt, hub, &chain_label, m.clone(), graph.stats());
+    if let Some(c) = &controller {
+        c.publish(probe.as_ref());
+    }
+    let every = cfg.adapt.adapt_every().max(1);
+    let mut traj_est =
+        controller.as_ref().map(|_| MarginalEstimator::new(n, graph.domain_size() as usize));
+    let mut trajectory: Vec<(u64, f64)> = Vec::new();
 
     // Advance in whole sweeps so states materialize at the same
     // boundaries as the batch parallel path.
@@ -475,8 +552,19 @@ fn chain_main_parallel(
             std::thread::sleep(Duration::from_millis(1));
             continue;
         }
-        let end = pause_aligned.min(it.saturating_add(slice));
+        let mut end = pause_aligned.min(it.saturating_add(slice));
+        if controller.is_some() {
+            let next_review = ((it / every) + 1).saturating_mul(every);
+            let review_aligned = next_review.div_ceil(nn).saturating_mul(nn);
+            end = end.min(review_aligned);
+        }
         engine.run(&mut state, it, end, &mut |ctx| {
+            if let Some(est) = traj_est.as_mut() {
+                est.update(ctx.state);
+                if ctx.iter % cfg.record_every == 0 {
+                    trajectory.push((ctx.iter, est.l2_error_vs_uniform()));
+                }
+            }
             if ctx.iter > cfg.burn_in {
                 local.update(ctx.state);
                 if ctx.iter % cfg.record_every == 0 {
@@ -484,7 +572,30 @@ fn chain_main_parallel(
                 }
             }
         });
+        let prev = it;
         it = end;
+        if let Some(c) = controller.as_mut() {
+            if c.due_crossing(prev, it) {
+                let action = c.review(it, probe.as_mut(), &trajectory);
+                engine.set_hyperparams(probe.hyperparams());
+                if action.save_checkpoint {
+                    if let Some(dir) = &cfg.checkpoint_dir {
+                        let site_rngs = Some(engine.site_rng_parts());
+                        flush_checkpoint(
+                            dir,
+                            cfg,
+                            k,
+                            it,
+                            &state,
+                            &m,
+                            &rng,
+                            site_rngs,
+                            probe.as_ref(),
+                        )?;
+                    }
+                }
+            }
+        }
         live.publish(k, &local, &local_energy, it, &state);
         local.reset();
         local_energy.clear();
@@ -584,9 +695,57 @@ mod tests {
         cfg.sampler = SamplerSpec::MinGibbs { lambda: 10.0 };
         cfg.workers = 2;
         assert!(
-            ChainPool::start(g, cfg, hub).is_err(),
+            ChainPool::start(g.clone(), cfg.clone(), hub.clone()).is_err(),
             "MIN-Gibbs carries global state; parallel must be rejected"
         );
+        cfg.sampler = gibbs();
+        cfg.workers = 0;
+        cfg.adapt = ControlPolicy::target_acceptance(1.5);
+        assert!(
+            ChainPool::start(g, cfg, hub).is_err(),
+            "out-of-range adapt target must be rejected at start()"
+        );
+    }
+
+    /// An adaptive serial chain with a wildly oversized λ must steer it
+    /// down, and the shutdown checkpoint must carry the tuned value.
+    #[test]
+    fn adaptive_serial_chain_tunes_lambda_into_checkpoint() {
+        let g = Arc::new(models::tiny_random(4, 3, 0.8, 26));
+        let dir = std::env::temp_dir().join(format!("mbgibbs_pool_adapt_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let lambda0 = 400.0;
+        let mut cfg = PoolConfig::new(SamplerSpec::Mgpmh { lambda: lambda0 }, 1);
+        cfg.seed = 13;
+        cfg.publish_every = 256;
+        // Keep the trajectory short so the plateau detector never
+        // freezes the controller inside this window.
+        cfg.record_every = 1_000_000;
+        cfg.adapt = ControlPolicy::target_acceptance(0.7).with_adapt_every(500);
+        cfg.checkpoint_dir = Some(dir.clone());
+        cfg.checkpoint_on_shutdown = true;
+        cfg.pause_at = 2_000;
+        let hub = Arc::new(MetricsHub::new());
+        let pool = ChainPool::start(g, cfg, hub.clone()).unwrap();
+        pool.wait_until_paused();
+        pool.stop().unwrap();
+
+        let ckpt = Checkpoint::load(&dir.join("chain0.ckpt")).unwrap();
+        let tuned = ckpt
+            .hyperparams
+            .lambda
+            .expect("MGPMH checkpoint carries lambda");
+        assert!(
+            tuned < lambda0,
+            "target-accept should shrink an oversized λ, got {tuned}"
+        );
+        let snap = hub.snapshot();
+        assert_eq!(
+            snap.gauge("controller_lambda{chain=\"0\"}"),
+            Some(tuned),
+            "live gauge must track the tuned value"
+        );
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     /// Shutdown at a watermark, resume, run to 2N: the final checkpoint

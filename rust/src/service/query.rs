@@ -20,22 +20,45 @@
 //! distribution π(x_free | x_evidence) invariant for every sampler in
 //! the crate (Gibbs resamples exact conditionals; the minibatch MH
 //! kernels are π-reversible per site).
+//!
+//! Conditional work is batched two ways. Concurrent requests pinning
+//! the same `(evidence, burn_in, samples)` key are *coalesced*: the
+//! first to arrive runs the re-burn-in, the rest block on a keyed
+//! in-flight cell and share its result. Completed results then live in
+//! a TTL'd evidence-keyed cache so bursts spread over a few seconds hit
+//! memory, not the sampler. A run records full marginals over every
+//! variable, so any `var` with the same key is served by the same
+//! chain. The per-key RNG stream is derived from the key itself (not a
+//! request sequence number), which makes coalesced, cached, and
+//! uncached answers for one key bit-identical. `no_cache` (or a
+//! disabled cache) bypasses both layers.
+//!
+//! Request handling is panic-proof: `handle_line` catches panics from
+//! the handler, returns a structured `{"error": ...}` line, and bumps
+//! `service_request_panics_total` — one bad request can't take down a
+//! connection thread silently.
 
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
-use std::time::Instant;
+use std::collections::HashMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use crate::analysis::MarginalEstimator;
 use crate::bench::workload::SamplerSpec;
 use crate::config::json::JsonValue;
 use crate::graph::FactorGraph;
 use crate::metrics::expose::esc;
-use crate::metrics::{labeled, MetricsHub};
+use crate::metrics::{labeled, Counter, MetricsHub};
 use crate::rng::{Pcg64, Rng};
 use crate::samplers::{Sampler, StepStats};
 
 use super::estimator::LiveEstimator;
+
+/// Hard ceiling on `burn_in + samples` for one conditional request, so
+/// a single NDJSON line can't pin a connection thread for hours.
+pub const MAX_QUERY_STEPS: u64 = 50_000_000;
 
 /// A parsed request line.
 #[derive(Clone, Debug, PartialEq)]
@@ -55,6 +78,9 @@ pub enum Request {
         burn_in: Option<u64>,
         /// Recorded sample steps (default: the engine's configured value).
         samples: Option<u64>,
+        /// Bypass the result cache and in-flight coalescing: always run
+        /// a fresh conditional chain.
+        no_cache: bool,
     },
     /// Pool status: per-chain iterations, sample totals, R̂/ESS.
     Status,
@@ -120,11 +146,18 @@ pub fn parse_request(line: &str) -> Result<Request> {
             }
             // BTreeMap keys iterate in string order; re-sort numerically.
             evidence.sort_unstable();
+            let no_cache = match doc.get("no_cache") {
+                None => false,
+                Some(v) => v
+                    .as_bool()
+                    .context("no_cache must be a boolean")?,
+            };
             Ok(Request::Conditional {
                 var,
                 evidence,
                 burn_in: get_opt_u64("burn_in")?,
                 samples: get_opt_u64("samples")?,
+                no_cache,
             })
         }
         "status" => Ok(Request::Status),
@@ -178,6 +211,48 @@ impl Default for QueryDefaults {
     }
 }
 
+/// Conditional result cache + coalescing knobs (`[service.query_cache]`
+/// in config).
+#[derive(Clone, Copy, Debug)]
+pub struct QueryCacheConfig {
+    /// Master switch; off disables the TTL cache *and* in-flight
+    /// coalescing (every request runs its own chain).
+    pub enabled: bool,
+    /// How long a completed result stays servable.
+    pub ttl: Duration,
+    /// Max cached evidence keys; the oldest entry is evicted first.
+    pub capacity: usize,
+}
+
+impl Default for QueryCacheConfig {
+    fn default() -> Self {
+        Self {
+            enabled: true,
+            ttl: Duration::from_millis(2_000),
+            capacity: 64,
+        }
+    }
+}
+
+/// What one conditional chain run is keyed by: the sorted evidence pins
+/// plus the burn/sample budget. `var` is deliberately absent — a run
+/// records marginals for every variable, so one key serves them all.
+type CondKey = (Vec<(usize, u16)>, u64, u64);
+
+/// Full per-variable marginals from one conditional chain run.
+#[derive(Clone)]
+struct CondResult {
+    dists: Vec<Vec<f64>>,
+}
+
+/// Coalescing + cache state, all under one lock so a cache fill and the
+/// matching in-flight removal are atomic (stragglers either join the
+/// pending cell or hit the cache — never recompute).
+struct CondState {
+    inflight: HashMap<CondKey, Arc<OnceLock<CondResult>>>,
+    cache: HashMap<CondKey, (Instant, CondResult)>,
+}
+
 /// Answers queries against the live estimator and graph.
 pub struct QueryEngine {
     graph: Arc<FactorGraph>,
@@ -186,12 +261,38 @@ pub struct QueryEngine {
     sampler: SamplerSpec,
     seed: u64,
     defaults: QueryDefaults,
-    seq: AtomicU64,
+    cache_cfg: QueryCacheConfig,
+    cond: Mutex<CondState>,
+    coalesced_total: Arc<Counter>,
+    cache_hits: Arc<Counter>,
+    cache_misses: Arc<Counter>,
+    runs_total: Arc<Counter>,
+    panics_total: Arc<Counter>,
 }
 
 /// Render a one-line error response.
 pub fn error_response(msg: &str) -> String {
     format!("{{\"ok\":false,\"error\":\"{}\"}}", esc(msg))
+}
+
+/// FNV-1a over the conditional key: a stable 64-bit stream selector so
+/// a key's RNG stream is a pure function of (evidence, burn, samples).
+fn stream_key(key: &CondKey) -> u64 {
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    let mix = |h: &mut u64, x: u64| {
+        for b in x.to_le_bytes() {
+            *h ^= b as u64;
+            *h = h.wrapping_mul(PRIME);
+        }
+    };
+    for &(site, val) in &key.0 {
+        mix(&mut h, site as u64);
+        mix(&mut h, val as u64);
+    }
+    mix(&mut h, key.1);
+    mix(&mut h, key.2);
+    h
 }
 
 fn json_dist(dist: &[f64]) -> String {
@@ -225,7 +326,13 @@ impl QueryEngine {
         sampler: SamplerSpec,
         seed: u64,
         defaults: QueryDefaults,
+        cache_cfg: QueryCacheConfig,
     ) -> Self {
+        let coalesced_total = hub.counter("service_conditional_coalesced_total");
+        let cache_hits = hub.counter("service_conditional_cache_hits_total");
+        let cache_misses = hub.counter("service_conditional_cache_misses_total");
+        let runs_total = hub.counter("service_conditional_runs_total");
+        let panics_total = hub.counter("service_request_panics_total");
         Self {
             graph,
             live,
@@ -233,12 +340,30 @@ impl QueryEngine {
             sampler,
             seed,
             defaults,
-            seq: AtomicU64::new(0),
+            cache_cfg,
+            cond: Mutex::new(CondState {
+                inflight: HashMap::new(),
+                cache: HashMap::new(),
+            }),
+            coalesced_total,
+            cache_hits,
+            cache_misses,
+            runs_total,
+            panics_total,
         }
     }
 
+    /// Lock the coalescing state, recovering from poisoning: the maps
+    /// stay structurally valid across a panicking holder, and a caught
+    /// panic must not brick every later conditional.
+    fn lock_cond(&self) -> MutexGuard<'_, CondState> {
+        self.cond.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
     /// Handle one raw request line. Returns the one-line response and
-    /// whether the request asked for shutdown.
+    /// whether the request asked for shutdown. A panicking handler is
+    /// caught and surfaced as a structured error line — the connection
+    /// (and listener) keep serving.
     pub fn handle_line(&self, line: &str) -> (String, bool) {
         let t0 = Instant::now();
         let (resp, ty, shutdown) = match parse_request(line) {
@@ -252,9 +377,13 @@ impl QueryEngine {
                     Request::Shutdown => "shutdown",
                 };
                 let shutdown = req == Request::Shutdown;
-                let resp = match self.handle(&req) {
-                    Ok(r) => r,
-                    Err(e) => error_response(&format!("{e:#}")),
+                let resp = match catch_unwind(AssertUnwindSafe(|| self.handle(&req))) {
+                    Ok(Ok(r)) => r,
+                    Ok(Err(e)) => error_response(&format!("{e:#}")),
+                    Err(_) => {
+                        self.panics_total.add(1);
+                        error_response("internal error: request handler panicked")
+                    }
                 };
                 (resp, ty, shutdown)
             }
@@ -277,7 +406,8 @@ impl QueryEngine {
                 evidence,
                 burn_in,
                 samples,
-            } => self.conditional(*var, evidence, *burn_in, *samples),
+                no_cache,
+            } => self.conditional(*var, evidence, *burn_in, *samples, *no_cache),
             Request::Status => Ok(self.status()),
             Request::Metrics => Ok(self.metrics()),
             Request::Shutdown => Ok("{\"ok\":true,\"type\":\"shutdown\"}".to_string()),
@@ -301,6 +431,7 @@ impl QueryEngine {
         evidence: &[(usize, u16)],
         burn_in: Option<u64>,
         samples: Option<u64>,
+        no_cache: bool,
     ) -> Result<String> {
         let n = self.graph.n();
         let d = self.graph.domain_size() as usize;
@@ -320,10 +451,25 @@ impl QueryEngine {
             }
             pinned[site] = true;
         }
+        let burn = burn_in.unwrap_or(self.defaults.burn_in);
+        let keep = samples.unwrap_or(self.defaults.samples);
+        if keep == 0 {
+            bail!("samples must be >= 1 (a 0-sample conditional has no estimate)");
+        }
+        if burn.saturating_add(keep) > MAX_QUERY_STEPS {
+            bail!(
+                "burn_in + samples = {} exceeds the per-request cap of {MAX_QUERY_STEPS}",
+                burn.saturating_add(keep)
+            );
+        }
 
         // Pinning the query variable makes the answer a point mass.
         if pinned[var] {
-            let val = evidence.iter().find(|(s, _)| *s == var).unwrap().1;
+            let val = evidence
+                .iter()
+                .find(|(s, _)| *s == var)
+                .map(|&(_, v)| v)
+                .with_context(|| format!("evidence pins var {var} but carries no value for it"))?;
             let mut dist = vec![0.0; d];
             dist[val as usize] = 1.0;
             return Ok(format!(
@@ -331,6 +477,34 @@ impl QueryEngine {
                  \"samples\":0,\"burn_in\":0,\"pinned\":true}}",
                 json_dist(&dist)
             ));
+        }
+
+        let key: CondKey = (evidence.to_vec(), burn, keep);
+        let (result, source) = if no_cache || !self.cache_cfg.enabled {
+            (self.sample_conditional(&key), "sampled")
+        } else {
+            self.coalesced(&key)
+        };
+        let dist = &result.dists[var];
+        Ok(format!(
+            "{{\"ok\":true,\"type\":\"conditional\",\"var\":{var},\"dist\":{},\
+             \"samples\":{keep},\"burn_in\":{burn},\"source\":\"{source}\"}}",
+            json_dist(dist)
+        ))
+    }
+
+    /// Run one conditional chain for `key` and record marginals over
+    /// every variable (pinned sites come out as point masses for free).
+    /// The RNG stream is a pure function of the key and the pool seed,
+    /// so identical keys always replay the identical chain — coalesced,
+    /// cached, and uncached answers can't disagree.
+    fn sample_conditional(&self, key: &CondKey) -> CondResult {
+        let (evidence, burn, keep) = (&key.0, key.1, key.2);
+        let n = self.graph.n();
+        let d = self.graph.domain_size() as usize;
+        let mut pinned = vec![false; n];
+        for &(site, _) in evidence {
+            pinned[site] = true;
         }
         let free: Vec<usize> = (0..n).filter(|&i| !pinned[i]).collect();
 
@@ -344,12 +518,7 @@ impl QueryEngine {
             state[site] = val;
         }
 
-        let burn = burn_in.unwrap_or(self.defaults.burn_in);
-        let keep = samples.unwrap_or(self.defaults.samples).max(1);
-        // Deterministic per-process: each query gets its own stream off
-        // the pool seed.
-        let seq = self.seq.fetch_add(1, Ordering::Relaxed);
-        let mut rng = Pcg64::with_stream(self.seed, 0x5EED_C0DE ^ seq);
+        let mut rng = Pcg64::with_stream(self.seed, 0x5EED_C0DE ^ stream_key(key));
         let mut sampler = EvidenceSampler {
             inner: self.sampler.build(&self.graph),
             free,
@@ -358,17 +527,67 @@ impl QueryEngine {
         for _ in 0..burn {
             sampler.step(&mut state, &mut rng);
         }
-        let mut counts = vec![0u64; d];
+        let mut est = MarginalEstimator::new(n, d);
         for _ in 0..keep {
             sampler.step(&mut state, &mut rng);
-            counts[state[var] as usize] += 1;
+            est.update(&state);
         }
-        let dist: Vec<f64> = counts.iter().map(|&c| c as f64 / keep as f64).collect();
-        Ok(format!(
-            "{{\"ok\":true,\"type\":\"conditional\",\"var\":{var},\"dist\":{},\
-             \"samples\":{keep},\"burn_in\":{burn}}}",
-            json_dist(&dist)
-        ))
+        self.runs_total.add(1);
+        CondResult {
+            dists: (0..n).map(|i| est.marginal(i)).collect(),
+        }
+    }
+
+    /// Serve `key` through the cache and in-flight map: a fresh cached
+    /// result returns immediately; otherwise one caller (the leader)
+    /// runs the chain while everyone else blocks on the shared cell.
+    /// The leader fills the cache *before* removing the in-flight entry,
+    /// under one lock — so a straggler arriving at any interleaving
+    /// either joins the cell or hits the cache, never recomputes.
+    fn coalesced(&self, key: &CondKey) -> (CondResult, &'static str) {
+        let pending = {
+            let mut st = self.lock_cond();
+            if let Some((at, res)) = st.cache.get(key) {
+                if at.elapsed() <= self.cache_cfg.ttl {
+                    self.cache_hits.add(1);
+                    return (res.clone(), "cached");
+                }
+            }
+            st.inflight
+                .entry(key.clone())
+                .or_insert_with(|| Arc::new(OnceLock::new()))
+                .clone()
+        };
+        self.cache_misses.add(1);
+        let mut led = false;
+        let result = pending
+            .get_or_init(|| {
+                led = true;
+                self.sample_conditional(key)
+            })
+            .clone();
+        if led {
+            let mut st = self.lock_cond();
+            st.cache
+                .insert(key.clone(), (Instant::now(), result.clone()));
+            if st.cache.len() > self.cache_cfg.capacity {
+                let ttl = self.cache_cfg.ttl;
+                st.cache.retain(|_, v| v.0.elapsed() <= ttl);
+            }
+            while st.cache.len() > self.cache_cfg.capacity {
+                match st.cache.iter().min_by_key(|(_, v)| v.0).map(|(k, _)| k.clone()) {
+                    Some(oldest) => {
+                        st.cache.remove(&oldest);
+                    }
+                    None => break,
+                }
+            }
+            st.inflight.remove(key);
+            (result, "sampled")
+        } else {
+            self.coalesced_total.add(1);
+            (result, "coalesced")
+        }
     }
 
     fn status(&self) -> String {
@@ -411,17 +630,22 @@ mod tests {
     use crate::graph::models;
     use crate::samplers::EnergyPath;
 
-    fn engine_over(g: Arc<FactorGraph>, chains: usize) -> (QueryEngine, Arc<LiveEstimator>) {
+    fn engine_over(
+        g: Arc<FactorGraph>,
+        chains: usize,
+    ) -> (QueryEngine, Arc<LiveEstimator>, Arc<MetricsHub>) {
         let live = Arc::new(LiveEstimator::new(g.n(), g.domain_size() as usize, chains, 64));
+        let hub = Arc::new(MetricsHub::new());
         let engine = QueryEngine::new(
             g,
             live.clone(),
-            Arc::new(MetricsHub::new()),
+            hub.clone(),
             SamplerSpec::Gibbs(EnergyPath::Specialized),
             11,
             QueryDefaults::default(),
+            QueryCacheConfig::default(),
         );
-        (engine, live)
+        (engine, live, hub)
     }
 
     #[test]
@@ -439,7 +663,18 @@ mod tests {
                 evidence: vec![(0, 1), (2, 0)],
                 burn_in: None,
                 samples: None,
+                no_cache: false,
             }
+        );
+        let line = "{\"type\":\"conditional\",\"var\":1,\"evidence\":{},\"no_cache\":true}";
+        assert!(matches!(
+            parse_request(line).unwrap(),
+            Request::Conditional { no_cache: true, .. }
+        ));
+        assert!(
+            parse_request("{\"type\":\"conditional\",\"var\":1,\"evidence\":{},\"no_cache\":3}")
+                .is_err(),
+            "non-boolean no_cache must be rejected"
         );
         assert_eq!(parse_request("{\"type\":\"status\"}").unwrap(), Request::Status);
         assert_eq!(parse_request("{\"type\":\"shutdown\"}").unwrap(), Request::Shutdown);
@@ -453,7 +688,7 @@ mod tests {
     #[test]
     fn marginal_reads_live_counts() {
         let g = Arc::new(models::tiny_random(2, 2, 0.5, 31));
-        let (engine, live) = engine_over(g, 1);
+        let (engine, live, _) = engine_over(g, 1);
         let mut local = crate::analysis::MarginalEstimator::new(2, 2);
         local.update(&[0, 1]);
         local.update(&[1, 1]);
@@ -470,7 +705,7 @@ mod tests {
     #[test]
     fn conditional_matches_enumeration() {
         let g = Arc::new(models::tiny_random(4, 3, 0.9, 32));
-        let (engine, _) = engine_over(g.clone(), 1);
+        let (engine, _, _) = engine_over(g.clone(), 1);
         let evidence = vec![(0usize, 2u16), (3usize, 1u16)];
         let var = 1usize;
 
@@ -495,6 +730,7 @@ mod tests {
                 evidence,
                 burn_in: Some(2_000),
                 samples: Some(60_000),
+                no_cache: false,
             })
             .unwrap();
         // Pull the dist array back out of the response line.
@@ -517,13 +753,14 @@ mod tests {
     #[test]
     fn conditional_on_pinned_var_is_point_mass() {
         let g = Arc::new(models::tiny_random(3, 2, 0.5, 33));
-        let (engine, _) = engine_over(g, 1);
+        let (engine, _, _) = engine_over(g, 1);
         let resp = engine
             .handle(&Request::Conditional {
                 var: 0,
                 evidence: vec![(0, 1)],
                 burn_in: None,
                 samples: None,
+                no_cache: false,
             })
             .unwrap();
         assert!(resp.contains("\"dist\":[0,1]"), "{resp}");
@@ -533,12 +770,13 @@ mod tests {
     #[test]
     fn conditional_validates_evidence() {
         let g = Arc::new(models::tiny_random(3, 2, 0.5, 34));
-        let (engine, _) = engine_over(g, 1);
+        let (engine, _, _) = engine_over(g, 1);
         let bad_site = Request::Conditional {
             var: 0,
             evidence: vec![(9, 0)],
             burn_in: None,
             samples: None,
+            no_cache: false,
         };
         assert!(engine.handle(&bad_site).is_err());
         let bad_val = Request::Conditional {
@@ -546,6 +784,7 @@ mod tests {
             evidence: vec![(1, 7)],
             burn_in: None,
             samples: None,
+            no_cache: false,
         };
         assert!(engine.handle(&bad_val).is_err());
     }
@@ -553,7 +792,7 @@ mod tests {
     #[test]
     fn status_and_metrics_render_valid_json() {
         let g = Arc::new(models::tiny_random(3, 2, 0.5, 35));
-        let (engine, live) = engine_over(g, 2);
+        let (engine, live, _) = engine_over(g, 2);
         let empty = crate::analysis::MarginalEstimator::new(3, 2);
         live.publish(0, &empty, &[1.0, 2.0], 10, &[0, 0, 0]);
         let (resp, shutdown) = engine.handle_line("{\"type\":\"status\"}");
@@ -574,5 +813,121 @@ mod tests {
         let (resp, shutdown) = engine.handle_line("garbage");
         assert!(!shutdown);
         assert!(resp.contains("\"ok\":false"));
+    }
+
+    /// N identical concurrent conditionals: exactly one chain runs, the
+    /// other N−1 are served by the in-flight cell or the cache, and
+    /// every response is bit-identical.
+    #[test]
+    fn identical_conditionals_coalesce_to_one_run() {
+        let g = Arc::new(models::tiny_random(4, 3, 0.8, 36));
+        let (engine, _, hub) = engine_over(g, 1);
+        let engine = Arc::new(engine);
+        let req = Request::Conditional {
+            var: 1,
+            evidence: vec![(0, 2)],
+            burn_in: Some(300),
+            samples: Some(2_000),
+            no_cache: false,
+        };
+        let threads = 6;
+        let mut handles = Vec::new();
+        for _ in 0..threads {
+            let engine = engine.clone();
+            let req = req.clone();
+            handles.push(std::thread::spawn(move || engine.handle(&req).unwrap()));
+        }
+        let responses: Vec<String> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        let dist0 = {
+            let doc = JsonValue::parse(&responses[0]).unwrap();
+            doc.get("dist").unwrap().clone()
+        };
+        for resp in &responses {
+            let doc = JsonValue::parse(resp).unwrap();
+            assert_eq!(
+                doc.get("dist"),
+                Some(&dist0),
+                "coalesced/cached responses diverged: {resp}"
+            );
+        }
+        let snap = hub.snapshot();
+        assert_eq!(
+            snap.counter("service_conditional_runs_total"),
+            Some(1),
+            "identical concurrent keys must trigger exactly one re-burn-in"
+        );
+        let coalesced = snap.counter("service_conditional_coalesced_total").unwrap_or(0);
+        let hits = snap.counter("service_conditional_cache_hits_total").unwrap_or(0);
+        assert_eq!(
+            coalesced + hits,
+            (threads - 1) as u64,
+            "every non-leader must be coalesced or cache-served"
+        );
+    }
+
+    /// The cache serves repeats bit-exactly; `no_cache` bypasses it and
+    /// re-runs the chain — but the key-derived RNG stream still makes
+    /// the answer identical to the cached one.
+    #[test]
+    fn cache_and_no_cache_agree_bit_exactly() {
+        let g = Arc::new(models::tiny_random(4, 3, 0.8, 37));
+        let (engine, _, hub) = engine_over(g, 1);
+        let mk = |no_cache| Request::Conditional {
+            var: 2,
+            evidence: vec![(0, 1), (3, 2)],
+            burn_in: Some(200),
+            samples: Some(1_000),
+            no_cache,
+        };
+        let first = engine.handle(&mk(false)).unwrap();
+        assert!(first.contains("\"source\":\"sampled\""), "{first}");
+        let second = engine.handle(&mk(false)).unwrap();
+        assert!(second.contains("\"source\":\"cached\""), "{second}");
+        let bypass = engine.handle(&mk(true)).unwrap();
+        assert!(bypass.contains("\"source\":\"sampled\""), "{bypass}");
+
+        let dist = |resp: &str| JsonValue::parse(resp).unwrap().get("dist").unwrap().clone();
+        assert_eq!(dist(&first), dist(&second));
+        assert_eq!(dist(&first), dist(&bypass), "key-derived stream must match");
+        assert_eq!(
+            hub.snapshot().counter("service_conditional_runs_total"),
+            Some(2),
+            "cached repeat must not re-run; no_cache must"
+        );
+    }
+
+    /// `samples: 0` and over-cap budgets are validated errors, not
+    /// silent clamps or NaN distributions.
+    #[test]
+    fn degenerate_budgets_are_validated() {
+        let g = Arc::new(models::tiny_random(3, 2, 0.5, 38));
+        let (engine, _, _) = engine_over(g, 1);
+        let zero = Request::Conditional {
+            var: 0,
+            evidence: vec![(1, 0)],
+            burn_in: None,
+            samples: Some(0),
+            no_cache: false,
+        };
+        let err = engine.handle(&zero).unwrap_err();
+        assert!(format!("{err:#}").contains("samples"), "{err:#}");
+        let oversized = Request::Conditional {
+            var: 0,
+            evidence: vec![(1, 0)],
+            burn_in: Some(MAX_QUERY_STEPS),
+            samples: Some(1),
+            no_cache: false,
+        };
+        let err = engine.handle(&oversized).unwrap_err();
+        assert!(format!("{err:#}").contains("cap"), "{err:#}");
+        // burn_in of 0 stays valid: the warm start may already suffice.
+        let warm = Request::Conditional {
+            var: 0,
+            evidence: vec![(1, 0)],
+            burn_in: Some(0),
+            samples: Some(10),
+            no_cache: false,
+        };
+        assert!(engine.handle(&warm).is_ok());
     }
 }

@@ -12,7 +12,7 @@
 //! shutdown flag, one detached handler thread per connection with a
 //! read timeout so stale clients can't pin the process.
 
-use std::io::{BufRead, BufReader, BufWriter, ErrorKind, Write as IoWrite};
+use std::io::{BufRead, BufReader, BufWriter, ErrorKind, Read, Write as IoWrite};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
@@ -25,8 +25,14 @@ use crate::graph::FactorGraph;
 use crate::metrics::{expose, MetricsHub};
 
 use super::pool::{ChainPool, PoolConfig};
-use super::query::{error_response, QueryDefaults, QueryEngine};
+use super::query::{error_response, QueryCacheConfig, QueryDefaults, QueryEngine};
 use super::signal;
+
+/// Hard cap on one NDJSON request line (or HTTP header line). A line
+/// that exceeds it gets a structured error and the connection closes —
+/// an unbounded line would otherwise grow the read buffer without
+/// limit.
+pub const MAX_REQUEST_BYTES: usize = 1 << 20;
 
 /// Front-door options orthogonal to the pool.
 #[derive(Clone, Debug)]
@@ -40,6 +46,8 @@ pub struct ServiceOptions {
     pub read_timeout: Duration,
     /// Conditional-query defaults.
     pub query: QueryDefaults,
+    /// Conditional-result cache + coalescing knobs.
+    pub query_cache: QueryCacheConfig,
 }
 
 impl Default for ServiceOptions {
@@ -49,6 +57,7 @@ impl Default for ServiceOptions {
             port: 0,
             read_timeout: Duration::from_secs(30),
             query: QueryDefaults::default(),
+            query_cache: QueryCacheConfig::default(),
         }
     }
 }
@@ -80,6 +89,7 @@ impl Service {
             pool.config().sampler,
             pool.config().seed,
             opts.query,
+            opts.query_cache,
         ));
 
         let listener = TcpListener::bind((opts.host.as_str(), opts.port))
@@ -199,9 +209,14 @@ fn handle_connection(
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut writer = BufWriter::new(stream);
     let mut line = String::new();
+    // Every line read is capped at MAX_REQUEST_BYTES (+1 so the cap
+    // itself is representable); an oversized line gets a structured
+    // error and the connection closes, since the remainder of the line
+    // is still in flight and can't be resynchronized to.
+    let cap = MAX_REQUEST_BYTES as u64 + 1;
     loop {
         line.clear();
-        let nread = match reader.read_line(&mut line) {
+        let nread = match reader.by_ref().take(cap).read_line(&mut line) {
             Ok(n) => n,
             Err(e) if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut => {
                 let _ = writer.write_all(error_response("read timeout").as_bytes());
@@ -214,17 +229,26 @@ fn handle_connection(
         if nread == 0 {
             return Ok(()); // EOF: client closed.
         }
+        if nread > MAX_REQUEST_BYTES {
+            let _ = writer.write_all(
+                error_response(&format!("request line exceeds {MAX_REQUEST_BYTES} bytes"))
+                    .as_bytes(),
+            );
+            let _ = writer.write_all(b"\n");
+            let _ = writer.flush();
+            return Ok(());
+        }
         let trimmed = line.trim();
         if trimmed.is_empty() {
             continue;
         }
         if trimmed.starts_with("GET ") {
-            // Minimal HTTP: drain headers, answer with the Prometheus
-            // text rendering, close.
-            loop {
+            // Minimal HTTP: drain headers (bounded, same per-line cap),
+            // answer with the Prometheus text rendering, close.
+            for _ in 0..256 {
                 line.clear();
-                let n = reader.read_line(&mut line)?;
-                if n == 0 || line.trim().is_empty() {
+                let n = reader.by_ref().take(cap).read_line(&mut line)?;
+                if n == 0 || n > MAX_REQUEST_BYTES || line.trim().is_empty() {
                     break;
                 }
             }

@@ -12,11 +12,14 @@ use std::time::Duration;
 use mbgibbs::analysis::MarginalEstimator;
 use mbgibbs::bench::workload::SamplerSpec;
 use mbgibbs::config::JsonValue;
+use mbgibbs::control::ControlPolicy;
 use mbgibbs::coordinator::Checkpoint;
 use mbgibbs::graph::models;
 use mbgibbs::rng::Pcg64;
 use mbgibbs::samplers::EnergyPath;
-use mbgibbs::service::{PoolConfig, Service, ServiceOptions};
+use mbgibbs::service::{
+    PoolConfig, QueryCacheConfig, Service, ServiceOptions, MAX_REQUEST_BYTES,
+};
 
 fn gibbs() -> SamplerSpec {
     SamplerSpec::Gibbs(EnergyPath::Specialized)
@@ -67,6 +70,64 @@ fn dist_of(resp: &JsonValue) -> Vec<f64> {
         .iter()
         .map(|v| v.as_f64().unwrap())
         .collect()
+}
+
+/// A persistent NDJSON connection, for multi-request exchanges where the
+/// connection itself is under test.
+struct Conn {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Conn {
+    fn open(addr: SocketAddr) -> Conn {
+        let stream = TcpStream::connect(addr).unwrap();
+        stream.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+        Conn {
+            reader: BufReader::new(stream.try_clone().unwrap()),
+            writer: stream,
+        }
+    }
+
+    fn send(&mut self, line: &str) -> JsonValue {
+        self.writer.write_all(line.as_bytes()).unwrap();
+        self.writer.write_all(b"\n").unwrap();
+        self.writer.flush().unwrap();
+        let mut resp = String::new();
+        self.reader.read_line(&mut resp).unwrap();
+        JsonValue::parse(resp.trim()).unwrap()
+    }
+}
+
+/// Raw `GET /metrics` scrape over the NDJSON port; returns the full HTTP
+/// response (headers + Prometheus text body).
+fn scrape(addr: SocketAddr) -> String {
+    let stream = TcpStream::connect(addr).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut writer = stream;
+    writer
+        .write_all(b"GET /metrics HTTP/1.1\r\nHost: localhost\r\n\r\n")
+        .unwrap();
+    writer.flush().unwrap();
+    let mut response = String::new();
+    loop {
+        let mut l = String::new();
+        if reader.read_line(&mut l).unwrap() == 0 {
+            break;
+        }
+        response.push_str(&l);
+    }
+    response
+}
+
+/// Value of an (unlabeled) Prometheus counter in a scrape body.
+fn scraped_counter(body: &str, name: &str) -> Option<f64> {
+    body.lines()
+        .filter(|l| !l.starts_with('#'))
+        .find(|l| l.split_whitespace().next() == Some(name))
+        .and_then(|l| l.split_whitespace().nth(1))
+        .and_then(|v| v.parse().ok())
 }
 
 /// Concurrent clients hammer a paused service with marginal, conditional,
@@ -231,5 +292,318 @@ fn parallel_pool_serves_queries() {
         Some((n * 20) as f64),
         "parallel watermark should land exactly on the requested sweep boundary"
     );
+    svc.shutdown().unwrap();
+}
+
+/// Adaptive serving, serial path: the controller retunes λ online, the
+/// tuned value rides the shutdown checkpoint, and a restarted adaptive
+/// service is bit-identical to an uninterrupted adaptive run — state,
+/// RNG position, and hyperparameters. The pause watermarks are multiples
+/// of `adapt_every`, so checkpoints land exactly on review boundaries
+/// (the documented resume-exactness condition).
+#[test]
+fn adaptive_serial_resume_is_bit_exact() {
+    let g = models::tiny_random(4, 3, 0.8, 26);
+    let lambda0 = 400.0;
+    let mk = |dir: &PathBuf, resume: bool, pause: u64| {
+        let mut cfg = PoolConfig::new(SamplerSpec::Mgpmh { lambda: lambda0 }, 1);
+        cfg.seed = 13;
+        cfg.publish_every = 256;
+        // Trajectory stays empty in-window so the plateau detector
+        // never freezes the controller mid-test.
+        cfg.record_every = 1_000_000;
+        cfg.adapt = ControlPolicy::target_acceptance(0.7).with_adapt_every(500);
+        cfg.checkpoint_dir = Some(dir.clone());
+        cfg.checkpoint_on_shutdown = true;
+        cfg.resume = resume;
+        cfg.pause_at = pause;
+        cfg
+    };
+    let run = |dir: &PathBuf, resume: bool, pause: u64| {
+        let svc =
+            Service::start(Arc::new(g.clone()), mk(dir, resume, pause), &ServiceOptions::default())
+                .unwrap();
+        svc.pool().wait_until_paused();
+        svc.shutdown().unwrap();
+        Checkpoint::load(&dir.join("chain0.ckpt")).unwrap()
+    };
+
+    // Interrupted: 0 → 2000, restart, → 4000.
+    let dir = tmpdir("adapt_serial");
+    let mid = run(&dir, false, 2_000);
+    assert_eq!(mid.iter, 2_000);
+    let mid_lambda = mid.hyperparams.lambda.expect("MGPMH checkpoint carries lambda");
+    assert!(
+        mid_lambda < lambda0,
+        "controller should have shrunk the oversized λ by the first shutdown, got {mid_lambda}"
+    );
+    let resumed = run(&dir, true, 4_000);
+    assert_eq!(resumed.iter, 4_000);
+
+    // Uninterrupted replica in a fresh directory.
+    let dir2 = tmpdir("adapt_serial_ref");
+    let straight = run(&dir2, false, 4_000);
+
+    assert_eq!(resumed.state, straight.state, "adaptive restart diverged in state");
+    assert_eq!(resumed.rng, straight.rng, "adaptive restart diverged in RNG position");
+    assert_eq!(
+        resumed.hyperparams, straight.hyperparams,
+        "tuned hyperparameters diverged across the restart"
+    );
+    assert_eq!(resumed.factor_evals, straight.factor_evals);
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::remove_dir_all(&dir2).ok();
+}
+
+/// Adaptive serving, chromatic-parallel path: reviews fire at sweep
+/// barriers, so shutdown → restart stays bit-exact AND the tuned
+/// trajectory is invariant under the worker count. Watermarks are
+/// multiples of both the sweep length n and `adapt_every`.
+#[test]
+fn adaptive_parallel_resume_is_bit_exact_and_worker_invariant() {
+    let g = models::ising_multipartite(3, 6, 1.5);
+    let n = g.n() as u64;
+    let lambda0 = 400.0;
+    let mk = |dir: &PathBuf, workers: usize, resume: bool, pause: u64| {
+        let mut cfg = PoolConfig::new(SamplerSpec::Mgpmh { lambda: lambda0 }, 1);
+        cfg.seed = 29;
+        cfg.workers = workers;
+        cfg.publish_every = n * 10;
+        cfg.record_every = 1_000_000;
+        cfg.adapt = ControlPolicy::target_acceptance(0.7).with_adapt_every(n * 5);
+        cfg.checkpoint_dir = Some(dir.clone());
+        cfg.checkpoint_on_shutdown = true;
+        cfg.resume = resume;
+        cfg.pause_at = pause;
+        cfg
+    };
+    let run = |dir: &PathBuf, workers: usize, resume: bool, pause: u64| {
+        let svc = Service::start(
+            Arc::new(g.clone()),
+            mk(dir, workers, resume, pause),
+            &ServiceOptions::default(),
+        )
+        .unwrap();
+        svc.pool().wait_until_paused();
+        svc.shutdown().unwrap();
+        Checkpoint::load(&dir.join("chain0.ckpt")).unwrap()
+    };
+
+    // Interrupted at n*20 (whole sweeps, a review boundary), resumed to n*40.
+    let dir = tmpdir("adapt_par");
+    let mid = run(&dir, ci_workers(), false, n * 20);
+    assert_eq!(mid.iter, n * 20);
+    let mid_lambda = mid.hyperparams.lambda.expect("MGPMH checkpoint carries lambda");
+    assert!(
+        mid_lambda < lambda0,
+        "controller should have shrunk the oversized λ by the first shutdown, got {mid_lambda}"
+    );
+    let resumed = run(&dir, ci_workers(), true, n * 40);
+    assert_eq!(resumed.iter, n * 40);
+
+    // Uninterrupted replica, same worker count.
+    let dir2 = tmpdir("adapt_par_ref");
+    let straight = run(&dir2, ci_workers(), false, n * 40);
+    assert_eq!(resumed.state, straight.state, "parallel adaptive restart diverged in state");
+    assert_eq!(resumed.rng, straight.rng);
+    assert_eq!(
+        resumed.site_rngs, straight.site_rngs,
+        "per-site RNG positions diverged across the restart"
+    );
+    assert_eq!(
+        resumed.hyperparams, straight.hyperparams,
+        "tuned hyperparameters diverged across the restart"
+    );
+
+    // Worker-count invariance: one worker, uninterrupted, same answer.
+    let dir3 = tmpdir("adapt_par_w1");
+    let solo = run(&dir3, 1, false, n * 40);
+    assert_eq!(
+        solo.state, straight.state,
+        "adaptive trajectory must be invariant under the worker count"
+    );
+    assert_eq!(solo.site_rngs, straight.site_rngs);
+    assert_eq!(
+        solo.hyperparams, straight.hyperparams,
+        "tuned λ must not depend on the worker count"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::remove_dir_all(&dir2).ok();
+    std::fs::remove_dir_all(&dir3).ok();
+}
+
+/// N identical concurrent conditional queries trigger exactly one
+/// re-burn-in: every client gets the bit-identical marginal, the
+/// coalesce/cache counters account for all non-leaders, and the
+/// `no_cache` bypass replays the same chain (key-derived RNG) so the
+/// unbatched path agrees bit-exactly.
+#[test]
+fn identical_conditionals_coalesce_over_tcp() {
+    let g = models::tiny_random(4, 3, 0.8, 37);
+    let mut cfg = PoolConfig::new(gibbs(), 1);
+    cfg.seed = 21;
+    cfg.publish_every = 256;
+    cfg.pause_at = 1_024;
+    // A generous TTL keeps the run-count assertions timing-independent
+    // even on a heavily loaded test host.
+    let opts = ServiceOptions {
+        query_cache: QueryCacheConfig {
+            enabled: true,
+            ttl: Duration::from_secs(120),
+            capacity: 64,
+        },
+        ..ServiceOptions::default()
+    };
+    let svc = Service::start(Arc::new(g), cfg, &opts).unwrap();
+    svc.pool().wait_until_paused();
+    let addr = svc.local_addr();
+
+    let line = "{\"type\":\"conditional\",\"var\":1,\"evidence\":{\"0\":2},\
+                \"burn_in\":300,\"samples\":2000}";
+    let clients = 6usize;
+    let mut handles = Vec::new();
+    for _ in 0..clients {
+        handles.push(std::thread::spawn(move || {
+            let resp = query(addr, line);
+            assert_ok(&resp);
+            let source = resp
+                .get("source")
+                .and_then(|v| v.as_str())
+                .expect("conditional responses carry a source")
+                .to_string();
+            (dist_of(&resp), source)
+        }));
+    }
+    let results: Vec<(Vec<f64>, String)> =
+        handles.into_iter().map(|h| h.join().unwrap()).collect();
+    for (dist, source) in &results[1..] {
+        assert_eq!(
+            dist, &results[0].0,
+            "coalesced/cached answers must be bit-identical to the leader's"
+        );
+        assert!(
+            ["sampled", "coalesced", "cached"].contains(&source.as_str()),
+            "unexpected source {source:?}"
+        );
+    }
+
+    let body = scrape(addr);
+    assert_eq!(
+        scraped_counter(&body, "service_conditional_runs_total"),
+        Some(1.0),
+        "identical concurrent conditionals must trigger exactly one re-burn-in:\n{body}"
+    );
+    let coalesced = scraped_counter(&body, "service_conditional_coalesced_total").unwrap_or(0.0);
+    let hits = scraped_counter(&body, "service_conditional_cache_hits_total").unwrap_or(0.0);
+    assert_eq!(
+        coalesced + hits,
+        (clients - 1) as f64,
+        "every non-leader is either coalesced or cache-served (coalesced = {coalesced}, \
+         hits = {hits})"
+    );
+
+    // `no_cache` runs its own chain — but the key-derived RNG stream
+    // makes the answer bit-equal to the batched path.
+    let resp = query(
+        addr,
+        "{\"type\":\"conditional\",\"var\":1,\"evidence\":{\"0\":2},\
+         \"burn_in\":300,\"samples\":2000,\"no_cache\":true}",
+    );
+    assert_ok(&resp);
+    assert_eq!(resp.get("source").and_then(|v| v.as_str()), Some("sampled"));
+    assert_eq!(
+        dist_of(&resp),
+        results[0].0,
+        "the unbatched path must agree bit-exactly with the coalesced one"
+    );
+    let body = scrape(addr);
+    assert_eq!(
+        scraped_counter(&body, "service_conditional_runs_total"),
+        Some(2.0),
+        "no_cache must run its own chain"
+    );
+    svc.shutdown().unwrap();
+}
+
+/// Malformed input hardening: truncated JSON, unknown types, out-of-range
+/// variables and evidence, zero-sample and over-cap budgets, oversized
+/// request lines, and mid-request disconnects — every one must produce a
+/// structured error (or a clean close) and leave the listener serving
+/// subsequent requests.
+#[test]
+fn malformed_requests_leave_the_listener_serving() {
+    let g = models::tiny_random(4, 3, 0.8, 35);
+    let mut cfg = PoolConfig::new(gibbs(), 1);
+    cfg.seed = 5;
+    cfg.publish_every = 128;
+    cfg.pause_at = 512;
+    let svc = Service::start(Arc::new(g), cfg, &ServiceOptions::default()).unwrap();
+    svc.pool().wait_until_paused();
+    let addr = svc.local_addr();
+
+    let expect_err = |resp: &JsonValue| -> String {
+        assert_eq!(
+            resp.get("ok"),
+            Some(&JsonValue::Bool(false)),
+            "expected a structured error, got {resp:?}"
+        );
+        resp.get("error")
+            .and_then(|v| v.as_str())
+            .expect("errors carry an \"error\" string")
+            .to_string()
+    };
+
+    // One connection survives a parade of bad requests.
+    let mut conn = Conn::open(addr);
+    assert!(!expect_err(&conn.send("{\"type\":\"stat")).is_empty(), "truncated JSON line");
+    assert!(expect_err(&conn.send("{\"type\":\"frobnicate\"}")).contains("unknown request type"));
+    assert!(expect_err(&conn.send("{\"type\":\"marginal\",\"var\":99}")).contains("out of range"));
+    assert!(expect_err(
+        &conn.send("{\"type\":\"conditional\",\"var\":1,\"evidence\":{\"99\":0}}")
+    )
+    .contains("out of range"));
+    assert!(expect_err(
+        &conn.send("{\"type\":\"conditional\",\"var\":1,\"evidence\":{\"0\":1},\"samples\":0}")
+    )
+    .contains("samples"));
+    assert!(expect_err(&conn.send(
+        "{\"type\":\"conditional\",\"var\":1,\"evidence\":{\"0\":1},\
+         \"burn_in\":60000000,\"samples\":1}"
+    ))
+    .contains("cap"));
+    // The same connection still answers a good query.
+    assert_ok(&conn.send("{\"type\":\"status\"}"));
+    drop(conn);
+
+    // A client that disconnects mid-request doesn't take the listener out.
+    {
+        let stream = TcpStream::connect(addr).unwrap();
+        (&stream).write_all(b"{\"type\":\"margi").unwrap();
+        drop(stream);
+    }
+
+    // An oversized request line gets a structured error, then the server
+    // closes the connection (the line tail can't be resynchronized to).
+    // Send exactly cap = MAX_REQUEST_BYTES + 1 bytes with no newline so
+    // the server consumes everything we wrote before closing.
+    let mut big = Conn::open(addr);
+    let payload = vec![b'x'; MAX_REQUEST_BYTES + 1];
+    big.writer.write_all(&payload).unwrap();
+    big.writer.flush().unwrap();
+    let mut resp = String::new();
+    big.reader.read_line(&mut resp).unwrap();
+    let resp = JsonValue::parse(resp.trim()).unwrap();
+    assert!(expect_err(&resp).contains("exceeds"), "oversized line error");
+    let mut eof = String::new();
+    assert_eq!(
+        big.reader.read_line(&mut eof).unwrap(),
+        0,
+        "an oversized line must close the connection"
+    );
+    drop(big);
+
+    // Fresh connections keep working after all of the above.
+    let resp = query(addr, "{\"type\":\"marginal\",\"var\":0}");
+    assert_ok(&resp);
     svc.shutdown().unwrap();
 }
